@@ -1,0 +1,47 @@
+"""Bender et al.'s four chunkability properties (paper §2), quantified for
+SpGEMM on the bench problems:
+
+ (1) memory boundedness        — arithmetic intensity vs machine balance
+ (2) scratch-pad decomposable  — planner finds a partition where every chunk
+                                 fits an 1/8-size fast window
+ (3) cache chunking insufficient — L2-capacity miss fraction still high
+ (4) staged-data reuse         — mean uses of each staged B row
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, BENCH_SIZES
+from repro.core.kkmem import spgemm_symbolic_host
+from repro.core.locality import analyze
+from repro.core.memory_model import KNL
+from repro.core.planner import plan_knl, row_bytes_csr
+from repro.sparse import multigrid
+
+
+def run():
+    for prob, n in BENCH_SIZES.items():
+        A, R, P = multigrid.problem(prob, n)
+        for tag, (L, Rt) in {"AxP": (A, P), "RxA": (R, A)}.items():
+            ws = spgemm_symbolic_host(L, Rt)
+            st = analyze(L, Rt)
+            bytes_touched = L.nbytes() + Rt.nbytes() + ws.c_nnz * 12.0
+            intensity = ws.flops / bytes_touched
+            balance = KNL.flops_peak / KNL.slow.bandwidth_Bps
+            emit(f"chunkability/{prob}/{tag}/1_mem_bound", 0.0,
+                 f"AI={intensity:.2f}_vs_balance={balance:.1f}")
+            size_b = float(row_bytes_csr(Rt).sum())
+            plan = plan_knl(L, Rt, fast_limit_bytes=size_b / 8)
+            ok = all(
+                row_bytes_csr(Rt)[s:e].sum() <= size_b / 8 * 1.01 or e - s == 1
+                for s, e in zip(plan.p_b[:-1], plan.p_b[1:]))
+            emit(f"chunkability/{prob}/{tag}/2_decomposable", 0.0,
+                 f"{plan.n_b}chunks_fit={ok}")
+            l2_miss = st.miss_fraction_bytes(1 << 20)
+            emit(f"chunkability/{prob}/{tag}/3_cache_insufficient", 0.0,
+                 f"L2miss={l2_miss:.3f}")
+            nnz_a = float(np.asarray(L.indptr)[-1])
+            reuse = nnz_a / max(Rt.n_rows, 1)
+            emit(f"chunkability/{prob}/{tag}/4_reuse", 0.0,
+                 f"{reuse:.2f}_uses_per_staged_row")

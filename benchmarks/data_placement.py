@@ -1,0 +1,51 @@
+"""Paper Table 3: selective data placement — pin one of A, B, C to slow memory.
+
+Validates the paper's central DP observation: B_Pin collapses performance
+(7x-29x on the GPU), A_Pin/C_Pin are mild when those operands are small, and DP
+(B fast, rest slow) recovers most of all-fast performance on the KNL (§3.2.1).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit, BENCH_SIZES
+from repro.core.kkmem import spgemm, spgemm_symbolic_host
+from repro.core.locality import analyze
+from repro.core.memory_model import KNL, P100
+from repro.core.placement import Placement, placement_cost, dp_recommendation
+from repro.sparse import multigrid
+
+PLACEMENTS = {
+    "HBM": Placement("fast", "fast", "fast"),
+    "A_Pin": Placement("slow", "fast", "fast"),
+    "B_Pin": Placement("fast", "slow", "fast"),
+    "C_Pin": Placement("fast", "fast", "slow"),
+    "HostPin": Placement("slow", "slow", "slow"),
+    "DP": Placement("slow", "fast", "slow"),
+}
+
+
+def run():
+    for prob, n in BENCH_SIZES.items():
+        A, R, P = multigrid.problem(prob, n)
+        for tag, (L, Rt) in {"RxA": (R, A), "AxP": (A, P)}.items():
+            ws = spgemm_symbolic_host(L, Rt)
+            st = analyze(L, Rt)
+            us = timeit(lambda L=L, Rt=Rt, ws=ws: spgemm(L, Rt, ws.c_pad),
+                        repeats=3)
+            for mode, pl in PLACEMENTS.items():
+                cost = placement_cost(P100, pl, L, Rt, ws.c_nnz * 12.0, ws.flops,
+                                      st)
+                emit(f"table3/gpu/{prob}/{tag}/{mode}", us,
+                     f"{cost.gflops(ws.flops):.3f}")
+            # KNL DP recovery (§3.2.1 + Figs 9/10)
+            for mode in ("HBM", "HostPin", "DP"):
+                cost = placement_cost(KNL, PLACEMENTS[mode], L, Rt,
+                                      ws.c_nnz * 12.0, ws.flops, st)
+                emit(f"fig9_10/knl/{prob}/{tag}/{mode}", us,
+                     f"{cost.gflops(ws.flops):.3f}")
+            rec = dp_recommendation(
+                P100, L.nbytes(), Rt.nbytes(), ws.c_nnz * 12.0)
+            emit(f"table3/gpu/{prob}/{tag}/recommended", 0.0,
+                 f"B={rec.B}")

@@ -1,0 +1,65 @@
+"""Pallas kernel microbenches (interpret mode: correctness-path timing only) +
+the TPU roofline estimates for the kernels' target shapes.
+
+Wall-clock here measures the interpret-mode path on CPU (NOT TPU performance);
+the derived column is the modeled VMEM-chunked execution time on TPU v5e from
+the memory model — HBM->VMEM streaming at 819 GB/s overlapped with MXU work at
+197 TFLOP/s, the Pallas pipeline's double-buffering assumption.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core.memory_model import TPU_V5E
+from repro.kernels import ops
+from repro.sparse.bsr import bsr_from_dense
+
+
+def _tpu_time(flops: float, bytes_moved: float) -> float:
+    return max(flops / TPU_V5E.flops_peak, bytes_moved / TPU_V5E.copy_bandwidth_Bps)
+
+
+def run():
+    rng = np.random.default_rng(0)
+
+    # BSR SpGEMM at a bench-scale shape
+    m = k = n = 256
+    bs = 16
+    da = (rng.random((m, k)) < 0.12) * rng.standard_normal((m, k))
+    db = (rng.random((k, n)) < 0.12) * rng.standard_normal((k, n))
+    A = bsr_from_dense(da.astype(np.float32), bs)
+    B = bsr_from_dense(db.astype(np.float32), bs)
+    from repro.kernels.bsr_spgemm import bsr_spgemm_symbolic
+    meta = bsr_spgemm_symbolic(A, B)
+    us = timeit(lambda: ops.bsr_spgemm(A, B, meta=meta), repeats=2)
+    moved = (meta.nc_pad * meta.u_max * 2 * bs * bs * 4)      # staged blocks
+    emit("kernel/bsr_spgemm/256x256x256_bs16", us,
+         f"tpu_est={_tpu_time(meta.flops, moved)*1e6:.2f}us")
+
+    # grouped matmul at an MoE-like shape (tiny)
+    e, kdim, ndim = 8, 128, 128
+    sizes = rng.integers(0, 64, e).tolist()
+    x = jnp.asarray(rng.standard_normal((sum(sizes), kdim)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((e, kdim, ndim)).astype(np.float32))
+    us = timeit(lambda: ops.grouped_matmul(x, w, sizes, bt=32, bn=64, bk=64)[0],
+                repeats=2)
+    flops = 2 * sum(sizes) * kdim * ndim
+    moved = w.size * 4 + x.size * 4
+    emit("kernel/grouped_matmul/moe8e", us,
+         f"tpu_est={_tpu_time(flops, moved)*1e6:.2f}us")
+
+    # decode attention at a small cache
+    b, hkv, g, d, s = 2, 4, 4, 64, 1024
+    q = jnp.asarray(rng.standard_normal((b, hkv, g, d)).astype(np.float32))
+    kc = jnp.asarray(rng.standard_normal((b, s, hkv, d)).astype(np.float32))
+    vc = jnp.asarray(rng.standard_normal((b, s, hkv, d)).astype(np.float32))
+    lengths = jnp.asarray([s, s // 3], jnp.int32)
+    us = timeit(lambda: ops.decode_attention(q, kc, vc, lengths, bs_kv=256),
+                repeats=2)
+    flops = 4 * b * hkv * g * s * d
+    moved = kc.size * 4 * 2
+    emit("kernel/decode_attention/s1024", us,
+         f"tpu_est={_tpu_time(flops, moved)*1e6:.2f}us")

@@ -1,0 +1,90 @@
+"""Paper Figures 3/4 (KNL) and 6/7 (GPU): KKMEM across memory modes.
+
+For each problem x {A x P, R x A} x machine x memory mode, we run the real
+numeric phase (wall-clock) and derive the modeled GFLOP/s under that mode's
+placement. Modes:
+  KNL: HBM (all fast), DDR (all slow), Cache16/Cache8 (hardware cache of the
+       given capacity in front of DDR: miss fraction from the reuse-distance
+       profile at that capacity).
+  GPU: HBM, HostPinned (all slow), UVM (cache-mode analogue with the paper's
+       observed ~30% management overhead when resident; pinned performance when
+       the problem exceeds HBM).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit, BENCH_SIZES
+from repro.core.kkmem import spgemm, spgemm_symbolic_host
+from repro.core.locality import analyze
+from repro.core.memory_model import KNL, P100, spgemm_cost
+from repro.core.placement import ALL_FAST, ALL_SLOW
+from repro.sparse import multigrid
+
+GiB = float(1 << 30)
+
+
+def _modeled_gflops(system, A, B, ws, st, place: str, cache_bytes: float | None
+                    ) -> float:
+    """GFLOP/s under a placement or a hardware-cache mode. The on-core cache is
+    scaled to the paper's problem:cache ratio (repro.core.placement docstring)."""
+    from repro.core.placement import paper_scale_cache
+
+    nnz_a = float(np.asarray(A.indptr)[-1])
+    core_cache = paper_scale_cache(A, B, ws.c_nnz * 12.0)
+    if cache_bytes is None:
+        miss = st.miss_fraction_bytes(core_cache)
+        pl = ALL_FAST if place == "fast" else ALL_SLOW
+        cost = spgemm_cost(
+            system, bytes_A=A.nbytes(), bytes_B=B.nbytes(), bytes_C=ws.c_nnz * 12.0,
+            flops=ws.flops, b_row_reads=nnz_a, b_row_bytes=st.avg_b_row_bytes,
+            b_miss_fraction=miss, place_A=pl.A, place_B=pl.B, place_C=pl.C)
+    else:
+        # hardware cache mode: the HBM-cache (16/8 GB scaled by the same ratio
+        # as the problem) front-ends DDR; accesses missing IT go to slow memory
+        scale = (A.nbytes() + B.nbytes() + ws.c_nnz * 12.0) / (33.0 * GiB)
+        hw_cache = max(cache_bytes * scale, core_cache)
+        miss = st.miss_fraction_bytes(hw_cache)
+        cost = spgemm_cost(
+            system, bytes_A=A.nbytes(), bytes_B=B.nbytes(), bytes_C=ws.c_nnz * 12.0,
+            flops=ws.flops, b_row_reads=nnz_a, b_row_bytes=st.avg_b_row_bytes,
+            b_miss_fraction=miss, place_A="slow", place_B="slow", place_C="slow")
+        # hits are served at fast-memory speed
+        hit_cost = spgemm_cost(
+            system, bytes_A=A.nbytes(), bytes_B=B.nbytes(), bytes_C=ws.c_nnz * 12.0,
+            flops=ws.flops, b_row_reads=nnz_a, b_row_bytes=st.avg_b_row_bytes,
+            b_miss_fraction=st.miss_fraction_bytes(core_cache) - miss
+            if st.miss_fraction_bytes(core_cache) > miss else 0.0,
+            place_A="slow", place_B="fast", place_C="slow")
+        total = max(cost.t_A + cost.t_C + cost.t_B + hit_cost.t_B,
+                    cost.t_compute)
+        return ws.flops / total / 1e9
+    return cost.gflops(ws.flops)
+
+
+def run():
+    for prob, n in BENCH_SIZES.items():
+        A, R, P = multigrid.problem(prob, n)
+        for tag, (L, Rt) in {"AxP": (A, P), "RxA": (R, A)}.items():
+            ws = spgemm_symbolic_host(L, Rt)
+            st = analyze(L, Rt)
+            us = timeit(lambda L=L, Rt=Rt, ws=ws: spgemm(L, Rt, ws.c_pad),
+                        repeats=3)
+            # KNL modes (Figs 3/4)
+            for mode, args in {
+                "HBM": ("fast", None), "DDR": ("slow", None),
+                "Cache16": ("slow", 16 * GiB * 0.9),
+                "Cache8": ("slow", 8 * GiB * 0.9),
+            }.items():
+                g = _modeled_gflops(KNL, L, Rt, ws, st, *args)
+                emit(f"fig3_4/knl/{prob}/{tag}/{mode}", us, f"{g:.3f}")
+            # GPU modes (Figs 6/7)
+            fits = (L.nbytes() + Rt.nbytes() + ws.c_nnz * 12.0) \
+                <= P100.fast.capacity_bytes
+            hbm = _modeled_gflops(P100, L, Rt, ws, st, "fast", None)
+            pin = _modeled_gflops(P100, L, Rt, ws, st, "slow", None)
+            uvm = hbm * 0.45 if fits else pin   # paper: UVM <=30-45% of HBM,
+            emit(f"fig6_7/gpu/{prob}/{tag}/HBM", us, f"{hbm:.3f}")
+            emit(f"fig6_7/gpu/{prob}/{tag}/Pinned", us, f"{pin:.3f}")
+            emit(f"fig6_7/gpu/{prob}/{tag}/UVM", us, f"{uvm:.3f}")

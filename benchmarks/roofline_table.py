@@ -1,0 +1,35 @@
+"""§Roofline table: aggregate the dry-run artifacts into the per-(arch x shape)
+roofline report (reads reports/dryrun/*/*.json written by launch/dryrun.py)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def run(report_dir: str = "reports/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(report_dir, "*", "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        mesh = os.path.basename(os.path.dirname(path))
+        if r.get("status") == "skip":
+            emit(f"roofline/{mesh}/{r['arch']}/{r['shape']}", 0.0, "SKIP")
+            continue
+        if r.get("status") != "ok":
+            emit(f"roofline/{mesh}/{r['arch']}/{r['shape']}", 0.0, "FAIL")
+            continue
+        frac = r.get("roofline_fraction", 0.0)
+        emit(
+            f"roofline/{mesh}/{r['arch']}/{r['shape']}",
+            max(r.get("t_compute", 0), r.get("t_memory", 0),
+                r.get("t_collective", 0)) * 1e6,
+            f"bottleneck={r['bottleneck']};frac={frac:.3f};"
+            f"rho={r.get('rho', 1):.1f};temp_GiB={r.get('temp_bytes', 0)/2**30:.1f}",
+        )
+        rows.append(r)
+    if not rows:
+        emit("roofline/NO_REPORTS_FOUND_run_dryrun_first", 0.0, "n/a")

@@ -1,0 +1,42 @@
+"""Benchmark driver: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run table2 fig11   # a subset
+
+Prints ``name,us_per_call,derived`` CSV (see benchmarks/common.py for the
+semantics of each column)."""
+
+from __future__ import annotations
+
+import sys
+import time
+
+SUITES = {
+    "fig3_4_6_7": "benchmarks.memory_modes",      # KNL + GPU memory modes
+    "table2": "benchmarks.delta_sweep",           # delta sweep
+    "table3": "benchmarks.data_placement",        # selective placement (+Figs 9/10)
+    "fig12_13": "benchmarks.chunking_bench",      # chunked algorithms (+Alg 1)
+    "fig11": "benchmarks.triangle_counting",      # triangle counting (+Table 4)
+    "chunkability": "benchmarks.chunkability",    # Bender properties
+    "kernels": "benchmarks.kernels_bench",        # Pallas kernel microbenches
+    "roofline": "benchmarks.roofline_table",      # §Roofline aggregation
+}
+
+
+def main() -> None:
+    args = sys.argv[1:]
+    picks = args if args else list(SUITES)
+    print("name,us_per_call,derived")
+    for name in picks:
+        if name not in SUITES:
+            print(f"# unknown suite {name!r}; have {list(SUITES)}", file=sys.stderr)
+            continue
+        mod = __import__(SUITES[name], fromlist=["run"])
+        t0 = time.time()
+        print(f"# --- {name} ({SUITES[name]}) ---")
+        mod.run()
+        print(f"# {name} done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Paper Fig 11 + Table 4: triangle counting on three graph classes.
+
+Real wall-clock of the masked L x L SpGEMM on synthetic graphs mirroring the
+paper's classes (graph500-RMAT / social-powerlaw / web-crawl-ish banded), plus
+the L1/L2 locality proxies of Table 4 and the paper's claim that memory modes
+barely matter for this kernel (derived gap HBM vs DDR)."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, timeit
+from repro.core.kkmem import spgemm_symbolic_host
+from repro.core.locality import analyze
+from repro.core.memory_model import KNL
+from repro.core.placement import ALL_FAST, ALL_SLOW, placement_cost
+from repro.core.triangle import count_triangles
+from repro.sparse import graphs
+
+GRAPHS = {
+    "g500_s10": lambda: graphs.rmat(10, 8, seed=1),
+    "social_powerlaw": lambda: graphs.powerlaw(2048, 8, seed=2),
+    "web_like": lambda: graphs.rmat(10, 4, a=0.45, b=0.25, c=0.15, seed=3),
+}
+
+
+def run():
+    for name, make in GRAPHS.items():
+        G = make()
+        L = graphs.lower_triangular_degree_sorted(G)
+        tri = float(count_triangles(L))
+        us = timeit(lambda L=L: count_triangles(L), repeats=2)
+        emit(f"fig11/{name}/count", us, f"{tri:.0f}")
+        ws = spgemm_symbolic_host(L, L)
+        st = analyze(L, L)
+        l1 = st.miss_fraction_bytes(32 << 10)
+        l2 = st.miss_fraction_bytes(1 << 20)
+        emit(f"table4/{name}/L1miss", 0.0, f"{l1:.4f}")
+        emit(f"table4/{name}/L2miss", 0.0, f"{l2:.4f}")
+        fast = placement_cost(KNL, ALL_FAST, L, L, ws.c_nnz * 12.0, ws.flops, st)
+        slow = placement_cost(KNL, ALL_SLOW, L, L, ws.c_nnz * 12.0, ws.flops, st)
+        emit(f"fig11/{name}/hbm_ddr_gap", 0.0,
+             f"{slow.total / fast.total:.3f}")

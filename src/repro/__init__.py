@@ -1,0 +1,14 @@
+"""repro: multilevel-memory SpGEMM (Deveci et al. 2018) as a production JAX framework.
+
+Layers:
+  repro.sparse   -- CSR/BSR containers + problem generators (multigrid, random, graphs)
+  repro.core     -- the paper's contribution: KKMEM SpGEMM, data placement, chunking, planner
+  repro.kernels  -- Pallas TPU kernels (BSR SpGEMM, grouped matmul, chunked attention, SpMM)
+  repro.models   -- LM architectures (dense/GQA, MoE, RWKV6, Mamba2 hybrid)
+  repro.parallel -- mesh + sharding rules (FSDP/TP/EP/SP over (pod, data, model))
+  repro.train    -- optimizer, train_step, grad compression, microbatching
+  repro.ckpt     -- sharded checkpoint/restore with elastic resharding
+  repro.launch   -- mesh/dryrun/train/serve entry points
+"""
+
+__version__ = "1.0.0"

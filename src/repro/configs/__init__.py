@@ -1,0 +1,53 @@
+"""Architecture config registry: ``--arch <id>`` resolution.
+
+Each module defines CONFIG (the exact published configuration) and SMOKE (a reduced
+same-family configuration for CPU tests). ``get_config(name, smoke=...)`` resolves
+either. Input shapes live in repro.configs.shapes.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = (
+    "olmoe_1b_7b",
+    "mixtral_8x22b",
+    "deepseek_67b",
+    "llama3_2_1b",
+    "minitron_4b",
+    "starcoder2_7b",
+    "llava_next_mistral_7b",
+    "musicgen_medium",
+    "rwkv6_3b",
+    "zamba2_1p2b",
+)
+
+# accept dashed spellings from the assignment table
+ALIASES = {
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "deepseek-67b": "deepseek_67b",
+    "llama3.2-1b": "llama3_2_1b",
+    "minitron-4b": "minitron_4b",
+    "starcoder2-7b": "starcoder2_7b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "musicgen-medium": "musicgen_medium",
+    "rwkv6-3b": "rwkv6_3b",
+    "zamba2-1.2b": "zamba2_1p2b",
+}
+
+
+def canonical(name: str) -> str:
+    name = ALIASES.get(name, name)
+    if name not in ARCH_IDS:
+        raise ValueError(f"unknown arch {name!r}; known: {ARCH_IDS}")
+    return name
+
+
+def get_config(name: str, smoke: bool = False):
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def all_configs(smoke: bool = False):
+    return {a: get_config(a, smoke) for a in ARCH_IDS}

@@ -1,0 +1,21 @@
+"""LLaVA-NeXT (Mistral-7B backbone) [vlm] — 32L d_model=4096 32H (GQA kv=8)
+d_ff=14336 vocab=32000, anyres tiling.
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]
+
+Backbone only per the assignment; the vision tower is a STUB — input_specs()
+provides precomputed CLIP-large patch embeddings (dim 1024) which a single linear
+projector maps into d_model."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, d_ff=14336,
+    vocab_size=32000, rope_theta=1000000.0, frontend="vision_stub",
+)
+
+SMOKE = ModelConfig(
+    name="llava-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=8, n_kv_heads=2, d_ff=128,
+    vocab_size=256, frontend="vision_stub",
+    q_chunk=16, attn_chunk=16, compute_dtype="float32",
+)

@@ -1,0 +1,21 @@
+"""Mixtral-8x22B [moe] — 56L d_model=6144 48H (GQA kv=8) d_ff=16384
+vocab=32768, 8 experts top-2, sliding-window attention. [arXiv:2401.04088; hf]
+
+SWA window: 4096 (Mixtral lineage). The sliding window makes prefill O(S*W) and
+bounds the decode KV cache by W — this is why the long_500k cell RUNS for this
+arch (sub-quadratic) while pure full-attention archs skip it."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b", family="moe",
+    n_layers=56, d_model=6144, n_heads=48, n_kv_heads=8, d_ff=16384,
+    vocab_size=32768, n_experts=8, top_k=2, sliding_window=4096,
+    rope_theta=1000000.0,
+)
+
+SMOKE = ModelConfig(
+    name="mixtral-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=8, n_kv_heads=2, d_ff=96,
+    vocab_size=256, n_experts=4, top_k=2, capacity_factor=4.0,
+    sliding_window=24, q_chunk=16, attn_chunk=16, compute_dtype="float32",
+)

@@ -1,0 +1,20 @@
+"""MusicGen-medium [audio] — 48L d_model=1536 24H (kv=24 -> MHA) d_ff=6144
+vocab=2048, decoder-only over EnCodec tokens. [arXiv:2306.05284; hf]
+
+Backbone only; the EnCodec frontend is a STUB — input_specs() provides
+precomputed frame embeddings (dim 128) for training, and decode operates over the
+2048-entry codebook vocabulary."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium", family="dense",
+    n_layers=48, d_model=1536, n_heads=24, n_kv_heads=24, d_ff=6144,
+    vocab_size=2048, rope_theta=10000.0, frontend="audio_stub",
+)
+
+SMOKE = ModelConfig(
+    name="musicgen-smoke", family="dense",
+    n_layers=2, d_model=48, n_heads=6, n_kv_heads=6, d_ff=96,
+    vocab_size=128, frontend="audio_stub",
+    q_chunk=16, attn_chunk=16, compute_dtype="float32",
+)

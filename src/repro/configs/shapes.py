@@ -1,0 +1,100 @@
+"""The four assigned input shapes and per-(arch x shape) input specs.
+
+Shapes (per the assignment):
+  train_4k     seq 4,096   global_batch 256   -> lowers train_step
+  prefill_32k  seq 32,768  global_batch 32    -> lowers prefill
+  decode_32k   seq 32,768  global_batch 128   -> lowers serve_step (1 new token,
+                                                 KV cache of seq_len)
+  long_500k    seq 524,288 global_batch 1     -> serve_step; REQUIRES sub-quadratic
+                                                 attention. Runs for SSM / hybrid /
+                                                 sliding-window archs; full-attention
+                                                 archs SKIP (recorded per cell).
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs only — no allocation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import transformer as tf
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+SHAPE_IDS = tuple(SHAPES)
+
+
+def is_subquadratic(cfg: ModelConfig) -> bool:
+    return cfg.family in ("ssm", "hybrid") or cfg.sliding_window > 0
+
+
+def skip_reason(cfg: ModelConfig, shape_name: str) -> str | None:
+    """None if the (arch, shape) cell runs; otherwise why it is skipped."""
+    spec = SHAPES[shape_name]
+    if spec.name == "long_500k" and not is_subquadratic(cfg):
+        return (f"{cfg.name} is pure full-attention; long_500k requires "
+                "sub-quadratic attention (see DESIGN.md §5)")
+    return None
+
+
+def scale_shape(spec: ShapeSpec, seq_len=None, global_batch=None) -> ShapeSpec:
+    """Reduced variants for smoke tests."""
+    return ShapeSpec(spec.name, spec.kind, seq_len or spec.seq_len,
+                     global_batch or spec.global_batch)
+
+
+def batch_specs(cfg: ModelConfig, spec: ShapeSpec):
+    """ShapeDtypeStructs of the data batch for a train/prefill shape."""
+    b, s = spec.global_batch, spec.seq_len
+    if cfg.frontend != "none":
+        out = {
+            "embeds": jax.ShapeDtypeStruct(
+                (b, s, tf.frontend_dim(cfg)), jnp.dtype(cfg.compute_dtype)),
+        }
+    else:
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if spec.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """Everything a lowering needs for this cell, as abstract values.
+
+    train:   {"batch": {...}}
+    prefill: {"batch": {...}, "cache_len": int}
+    decode:  {"cache": <abstract cache pytree>, "tokens": [B, 1] int32}
+    """
+    spec = SHAPES[shape_name] if isinstance(shape_name, str) else shape_name
+    reason = skip_reason(cfg, spec.name)
+    if reason:
+        raise ValueError(f"cell skipped: {reason}")
+    if spec.kind == "train":
+        return {"batch": batch_specs(cfg, spec)}
+    if spec.kind == "prefill":
+        return {"batch": batch_specs(cfg, spec), "cache_len": spec.seq_len}
+    if spec.kind == "decode":
+        cache = tf.init_cache(cfg, spec.global_batch, spec.seq_len, abstract=True)
+        return {
+            "cache": cache,
+            "tokens": jax.ShapeDtypeStruct((spec.global_batch, 1), jnp.int32),
+        }
+    raise ValueError(spec.kind)

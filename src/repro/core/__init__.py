@@ -1,0 +1,39 @@
+"""repro.core — the paper's primary contribution.
+
+KKMEM two-phase SpGEMM + selective data placement (DP) + chunked multilevel-memory
+algorithms (Algs 1-4) + locality/reuse analysis + the two-level memory cost model.
+"""
+from repro.core.memory_model import (
+    MemoryLevel, MemorySystem, KNL, P100, TPU_V5E, TPU_V5E_HOST, SpGEMMCost,
+    spgemm_cost, MACHINES,
+)
+from repro.core.kkmem import (
+    SpGEMMWorkspace, spgemm, spgemm_ranged, spgemm_full, spgemm_symbolic_host,
+    spgemm_dense_oracle,
+)
+from repro.core.locality import LocalityStats, analyze, miss_table, stack_distances
+from repro.core.placement import (
+    Placement, ALL_FAST, ALL_SLOW, DP, dp_recommendation, placement_cost, place,
+)
+from repro.core.planner import (
+    ChunkPlan, plan_chunks, plan_knl, binary_search_partition, partition_cost,
+    row_bytes_csr,
+)
+from repro.core.chunking import (
+    ChunkStats, chunk_knl, chunk_gpu1, chunk_gpu2, chunked_spgemm,
+)
+from repro.core.triangle import count_triangles, count_triangles_dense
+
+__all__ = [
+    "MemoryLevel", "MemorySystem", "KNL", "P100", "TPU_V5E", "TPU_V5E_HOST",
+    "SpGEMMCost", "spgemm_cost", "MACHINES",
+    "SpGEMMWorkspace", "spgemm", "spgemm_ranged", "spgemm_full",
+    "spgemm_symbolic_host", "spgemm_dense_oracle",
+    "LocalityStats", "analyze", "miss_table", "stack_distances",
+    "Placement", "ALL_FAST", "ALL_SLOW", "DP", "dp_recommendation",
+    "placement_cost", "place",
+    "ChunkPlan", "plan_chunks", "plan_knl", "binary_search_partition",
+    "partition_cost", "row_bytes_csr",
+    "ChunkStats", "chunk_knl", "chunk_gpu1", "chunk_gpu2", "chunked_spgemm",
+    "count_triangles", "count_triangles_dense",
+]

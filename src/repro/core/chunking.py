@@ -1,0 +1,209 @@
+"""Chunked SpGEMM executors: the paper's Algorithms 1 (KNL), 2 (Chunk1), 3 (Chunk2).
+
+All three share the ranged fused-multiply-add kernel (repro.core.kkmem.spgemm_ranged):
+a row-partition of B induces a column-partition of A that is realized by *skipping*
+(masking) out-of-range A columns, never by physically repartitioning A.
+
+Static-shape discipline: every B chunk is padded to the largest chunk's nnz and every
+A/C row-strip to the largest strip, so each algorithm traces the jitted kernel exactly
+once regardless of the partition count.
+
+Executors return (C, ChunkStats); ChunkStats carries the *actual* fast<->slow traffic
+(what `copy2Fast`/`copy2Slow` would have moved), which tests compare against the
+planner's modeled copy cost, and which the benchmarks feed into the memory cost model
+to reproduce the paper's figures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.kkmem import spgemm, spgemm_ranged, spgemm_symbolic_host
+from repro.core.planner import ChunkPlan
+from repro.sparse.csr import CSR, csr_select_rows_host
+
+
+@dataclasses.dataclass
+class ChunkStats:
+    algorithm: str
+    n_ac: int
+    n_b: int
+    copy_in_bytes: float = 0.0   # slow -> fast
+    copy_out_bytes: float = 0.0  # fast -> slow
+    kernel_calls: int = 0
+
+    @property
+    def copy_bytes(self) -> float:
+        return self.copy_in_bytes + self.copy_out_bytes
+
+
+def _with_uniform_meta(m: CSR, max_row_nnz: int) -> CSR:
+    """Force identical static metadata across chunks so jit traces once."""
+    return CSR(m.indptr, m.indices, m.data, m.shape, max_row_nnz)
+
+
+def _b_chunks(B: CSR, p_b: tuple):
+    """Row chunks of B, all padded to the largest chunk's nnz."""
+    ptr = np.asarray(B.indptr)
+    cap = max(int(ptr[e] - ptr[s]) for s, e in zip(p_b[:-1], p_b[1:]))
+    cap = max(cap, 1)
+    rows = max(e - s for s, e in zip(p_b[:-1], p_b[1:]))
+    out = []
+    for s, e in zip(p_b[:-1], p_b[1:]):
+        c = csr_select_rows_host(B, s, e, pad_to=cap)
+        # pad the row count too (extra empty rows) for a single trace
+        if c.n_rows < rows:
+            pad_ptr = jnp.concatenate(
+                [c.indptr, jnp.full(rows - c.n_rows, c.indptr[-1], jnp.int32)]
+            )
+            c = CSR(pad_ptr, c.indices, c.data, (rows, c.shape[1]), c.max_row_nnz)
+        out.append(_with_uniform_meta(c, B.max_row_nnz))
+    return out
+
+
+def _a_strips(A: CSR, p_ac: tuple):
+    """Row strips of A, padded to the largest strip (rows and nnz)."""
+    ptr = np.asarray(A.indptr)
+    cap = max(int(ptr[e] - ptr[s]) for s, e in zip(p_ac[:-1], p_ac[1:]))
+    cap = max(cap, 1)
+    rows = max(e - s for s, e in zip(p_ac[:-1], p_ac[1:]))
+    out = []
+    for s, e in zip(p_ac[:-1], p_ac[1:]):
+        c = csr_select_rows_host(A, s, e, pad_to=cap)
+        if c.n_rows < rows:
+            pad_ptr = jnp.concatenate(
+                [c.indptr, jnp.full(rows - c.n_rows, c.indptr[-1], jnp.int32)]
+            )
+            c = CSR(pad_ptr, c.indices, c.data, (rows, c.shape[1]), c.max_row_nnz)
+        out.append(_with_uniform_meta(c, A.max_row_nnz))
+    return out
+
+
+def _empty_like_c(n_rows: int, n_cols: int, c_pad: int, dtype) -> CSR:
+    return CSR(
+        indptr=jnp.zeros(n_rows + 1, jnp.int32),
+        indices=jnp.zeros(c_pad, jnp.int32),
+        data=jnp.zeros(c_pad, dtype),
+        shape=(n_rows, n_cols),
+        max_row_nnz=0,
+    )
+
+
+def _assemble(strips, p_ac: tuple, n_cols: int) -> CSR:
+    """Concatenate per-strip C results (host) into one CSR over all rows."""
+    ptrs, idxs, vals = [], [], []
+    base = 0
+    for (s, e), c in zip(zip(p_ac[:-1], p_ac[1:]), strips):
+        ptr = np.asarray(c.indptr)[: e - s + 1]
+        nnz = int(ptr[-1])
+        ptrs.append(ptr[:-1] + base if s > p_ac[0] or base else ptr[:-1] + base)
+        idxs.append(np.asarray(c.indices)[:nnz])
+        vals.append(np.asarray(c.data)[:nnz])
+        base += nnz
+    indptr = np.concatenate(ptrs + [[base]])
+    from repro.sparse.csr import csr_from_scipy_like
+
+    return csr_from_scipy_like(indptr, np.concatenate(idxs), np.concatenate(vals),
+                               (p_ac[-1] - p_ac[0], n_cols))
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: KNL chunking — A, C in slow memory; stream B chunks through fast
+# ---------------------------------------------------------------------------
+
+
+def chunk_knl(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int):
+    stats = ChunkStats("knl", 1, plan.n_b)
+    chunks = _b_chunks(B, plan.p_b)
+    C = _empty_like_c(A.n_rows, B.n_cols, c_pad, A.dtype)
+    for (r0, r1), Bc in zip(zip(plan.p_b[:-1], plan.p_b[1:]), chunks):
+        stats.copy_in_bytes += Bc.nbytes()              # copy2Fast(B, B_rp)
+        C = spgemm_ranged(A, Bc, r0, r1, C, c_pad)      # kkmem(A, FastB, C, B_rp)
+        stats.kernel_calls += 1
+    return C, stats
+
+
+# ---------------------------------------------------------------------------
+# Algorithms 2 & 3: GPU chunking — 2-D partitions, two streaming orders
+# ---------------------------------------------------------------------------
+
+
+def chunk_gpu1(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int):
+    """Alg. 2 — A,C strips stationary in fast memory; B chunks streamed (inner)."""
+    stats = ChunkStats("chunk1", plan.n_ac, plan.n_b)
+    strips = _a_strips(A, plan.p_ac)
+    b_chunks = _b_chunks(B, plan.p_b)
+    out = []
+    for (a0, a1), Ai in zip(zip(plan.p_ac[:-1], plan.p_ac[1:]), strips):
+        stats.copy_in_bytes += Ai.nbytes()               # FA = copy2Fast(A)
+        stats.copy_in_bytes += (a1 - a0 + 1) * 4         # FC row pointers only
+        Ci = _empty_like_c(Ai.n_rows, B.n_cols, c_pad, A.dtype)
+        for (r0, r1), Bc in zip(zip(plan.p_b[:-1], plan.p_b[1:]), b_chunks):
+            stats.copy_in_bytes += Bc.nbytes()           # FB = copy2Fast(B)
+            Ci = spgemm_ranged(Ai, Bc, r0, r1, Ci, c_pad)
+            stats.kernel_calls += 1
+        stats.copy_out_bytes += Ci.nbytes()              # copy2Slow(FC)
+        out.append(Ci)
+    return _assemble(out, plan.p_ac, B.n_cols), stats
+
+
+def chunk_gpu2(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int):
+    """Alg. 3 — B chunk stationary in fast memory; A,C strips streamed (inner)."""
+    stats = ChunkStats("chunk2", plan.n_ac, plan.n_b)
+    strips = _a_strips(A, plan.p_ac)
+    b_chunks = _b_chunks(B, plan.p_b)
+    partials = [
+        _empty_like_c(s.n_rows, B.n_cols, c_pad, A.dtype) for s in strips
+    ]
+    n_b = plan.n_b
+    for jb, ((r0, r1), Bc) in enumerate(zip(zip(plan.p_b[:-1], plan.p_b[1:]), b_chunks)):
+        stats.copy_in_bytes += Bc.nbytes()               # FB = copy2Fast(B)
+        for ia, Ai in enumerate(strips):
+            stats.copy_in_bytes += Ai.nbytes()           # FA = copy2Fast(A)
+            if jb > 0:
+                stats.copy_in_bytes += partials[ia].nbytes()   # FC partial back in
+            partials[ia] = spgemm_ranged(Ai, Bc, r0, r1, partials[ia], c_pad)
+            stats.kernel_calls += 1
+            if jb < n_b - 1:
+                stats.copy_out_bytes += partials[ia].nbytes()  # partial out
+        if jb == n_b - 1:
+            for ia in range(len(strips)):
+                stats.copy_out_bytes += partials[ia].nbytes()  # final copy2Slow
+    return _assemble(partials, plan.p_ac, B.n_cols), stats
+
+
+# ---------------------------------------------------------------------------
+# dispatcher
+# ---------------------------------------------------------------------------
+
+
+def chunked_spgemm(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int | None = None):
+    """Execute a ChunkPlan. ``c_pad`` defaults to the exact symbolic capacity of the
+    largest row strip (whole C for 1-strip plans)."""
+    if c_pad is None:
+        if plan.n_ac == 1:
+            c_pad = spgemm_symbolic_host(A, B).c_pad
+        else:
+            c_pad = max(
+                spgemm_symbolic_host(
+                    csr_select_rows_host(A, s, e, pad_to=A.nnz_pad), B
+                ).c_pad
+                for s, e in zip(plan.p_ac[:-1], plan.p_ac[1:])
+            )
+    if plan.algorithm == "whole_fast":
+        stats = ChunkStats("whole_fast", 1, 1)
+        stats.copy_in_bytes = A.nbytes() + B.nbytes()
+        C = spgemm(A, B, c_pad)
+        stats.copy_out_bytes = C.nbytes()
+        stats.kernel_calls = 1
+        return C, stats
+    if plan.algorithm == "knl":
+        return chunk_knl(A, B, plan, c_pad)
+    if plan.algorithm == "chunk1":
+        return chunk_gpu1(A, B, plan, c_pad)
+    if plan.algorithm == "chunk2":
+        return chunk_gpu2(A, B, plan, c_pad)
+    raise ValueError(f"unknown algorithm {plan.algorithm!r}")

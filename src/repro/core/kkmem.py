@@ -1,0 +1,198 @@
+"""KKMEM-style two-phase SpGEMM in pure JAX (the paper's baseline, §2.1).
+
+KKMEM assigns rows of A to threads and multiplications within a row to vector lanes,
+accumulating into sparse hashmap accumulators. A scalar hashmap has no efficient
+SIMD/XLA analogue, so the TPU/JAX-idiomatic equivalent keeps the *two-phase*
+row-wise structure but realizes the accumulator as **sort + segment-reduce** over the
+expanded product stream — the same multiset-union semantics, fully vectorized:
+
+  expand:     every nonzero a_ik fans out into products with B's row k
+              (the access pattern of Fig. 1 — A streamed, B gathered)
+  accumulate: stable two-key sort brings duplicate (row, col) products together;
+              a boundary scan + scatter-add coalesces them (== hashmap insert)
+
+Shapes are static: the product buffer has capacity nnzA_pad x B.max_row_nnz, the
+output CSR has a caller-provided capacity from the symbolic phase. Everything here
+jits and vmaps cleanly.
+
+``spgemm_ranged`` is the paper's *modified KKMEM sub-procedure* used by the chunked
+algorithms: it multiplies only the columns of A inside a B-row-range [r0, r1)
+("skip any columns of A outside of this range" — §3.2.2) and *fuses the previous
+partial C into the accumulation* ("inserts the existing values of C^1 into its
+hashmap accumulators"), i.e. C^t = A_t x B_t + C^{t-1}.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.csr import CSR, csr_row_of_entry
+
+
+@dataclasses.dataclass(frozen=True)
+class SpGEMMWorkspace:
+    """Output of the symbolic phase: static capacities for the numeric phase."""
+
+    c_nnz: int          # exact nnz of C
+    c_pad: int          # padded capacity (>= c_nnz)
+    c_max_row_nnz: int  # densest row of C
+    flops: int          # 2 * (number of scalar products)
+
+
+# ---------------------------------------------------------------------------
+# symbolic phase (host, NumPy — the paper computes structure ahead of numerics)
+# ---------------------------------------------------------------------------
+
+
+def spgemm_symbolic_host(A: CSR, B: CSR, pad_multiple: int = 64) -> SpGEMMWorkspace:
+    """Exact structure of C = A x B on host: nnz, densest row, flops."""
+    a_ptr = np.asarray(A.indptr).astype(np.int64)
+    a_idx = np.asarray(A.indices).astype(np.int64)
+    b_ptr = np.asarray(B.indptr).astype(np.int64)
+    b_idx = np.asarray(B.indices).astype(np.int64)
+    nnz_a = int(a_ptr[-1])
+    a_rows = np.repeat(np.arange(A.n_rows, dtype=np.int64), a_ptr[1:] - a_ptr[:-1])
+    a_cols = a_idx[:nnz_a]
+    lens = b_ptr[a_cols + 1] - b_ptr[a_cols]
+    total = int(lens.sum())
+    # expand: product p belongs to A-entry t = searchsorted(cum_lens, p, 'right')
+    cum = np.concatenate([[0], np.cumsum(lens)])
+    p = np.arange(total, dtype=np.int64)
+    t = np.searchsorted(cum, p, side="right") - 1
+    prod_rows = a_rows[t]
+    prod_cols = b_idx[b_ptr[a_cols[t]] + (p - cum[t])]
+    keys = prod_rows * np.int64(B.n_cols) + prod_cols
+    uniq = np.unique(keys)
+    c_nnz = int(uniq.size)
+    urows = uniq // B.n_cols
+    per_row = np.bincount(urows, minlength=A.n_rows)
+    pad = -(-max(c_nnz, 1) // pad_multiple) * pad_multiple
+    return SpGEMMWorkspace(
+        c_nnz=c_nnz,
+        c_pad=pad,
+        c_max_row_nnz=int(per_row.max()) if per_row.size else 0,
+        flops=2 * total,
+    )
+
+
+# ---------------------------------------------------------------------------
+# numeric phase (pure JAX, jit-able)
+# ---------------------------------------------------------------------------
+
+
+def _expand_products(A: CSR, B: CSR, r0, r1):
+    """Fan every (valid, in-range) A entry out into its products with B's rows.
+
+    Returns (rows, cols, vals) of static length nnzA_pad * B.max_row_nnz; invalid
+    slots get row = A.n_rows (sorts to the tail) and val = 0.
+
+    ``r0, r1`` bound the *global* column range of A handled by this call; B is the
+    CSR of exactly that row range (local row r_global - r0). For the unchunked case
+    pass r0=0, r1=A.n_cols with B the full matrix.
+    """
+    bmax = max(B.max_row_nnz, 1)
+    n_ent = A.nnz_pad
+    t = jnp.arange(n_ent, dtype=jnp.int32)
+    row_a = csr_row_of_entry(A)                      # [n_ent]
+    col_a = A.indices                                # [n_ent]
+    valid_t = t < A.indptr[-1]
+    in_range = (col_a >= r0) & (col_a < r1) & valid_t
+    b_row = jnp.clip(col_a - r0, 0, B.n_rows - 1)
+    b_start = B.indptr[b_row]                        # [n_ent]
+    b_len = B.indptr[b_row + 1] - b_start
+    j = jnp.arange(bmax, dtype=jnp.int32)            # [bmax]
+    valid = in_range[:, None] & (j[None, :] < b_len[:, None])   # [n_ent, bmax]
+    src = jnp.clip(b_start[:, None] + j[None, :], 0, B.nnz_pad - 1)
+    cols = jnp.where(valid, B.indices[src], 0)
+    vals = jnp.where(valid, A.data[:, None] * B.data[src], 0.0)
+    rows = jnp.where(valid, row_a[:, None], A.n_rows)
+    return rows.reshape(-1), cols.reshape(-1), vals.reshape(-1)
+
+
+def _accumulate(rows, cols, vals, m: int, n: int, c_pad: int):
+    """Sort-based accumulator: coalesce duplicate (row, col) into CSR arrays.
+
+    Two stable sorts == lexsort by (row, col) without 64-bit keys. Boundary scan
+    assigns each distinct key a dense output slot; scatter-add realizes the
+    "hashmap" accumulation. Returns (indptr[m+1], indices[c_pad], data[c_pad]).
+    """
+    order_c = jnp.argsort(cols, stable=True)
+    rows_c, cols_c, vals_c = rows[order_c], cols[order_c], vals[order_c]
+    order_r = jnp.argsort(rows_c, stable=True)
+    rows_s, cols_s, vals_s = rows_c[order_r], cols_c[order_r], vals_c[order_r]
+    valid = rows_s < m
+    new_key = jnp.concatenate(
+        [
+            jnp.array([True]),
+            (rows_s[1:] != rows_s[:-1]) | (cols_s[1:] != cols_s[:-1]),
+        ]
+    ) & valid
+    slot = jnp.cumsum(new_key) - 1                       # dense slot per product
+    slot = jnp.where(valid, slot, c_pad)                 # invalid -> dropped bucket
+    data = jnp.zeros(c_pad + 1, vals.dtype).at[slot].add(vals_s)[:c_pad]
+    indices = jnp.zeros(c_pad + 1, jnp.int32).at[slot].max(
+        jnp.where(valid, cols_s, 0).astype(jnp.int32)
+    )[:c_pad]
+    out_rows = jnp.full(c_pad + 1, m, jnp.int32).at[slot].min(
+        jnp.where(valid, rows_s, m).astype(jnp.int32)
+    )[:c_pad]
+    # rows are sorted ascending over slots -> indptr by binary search
+    indptr = jnp.searchsorted(out_rows, jnp.arange(m + 1, dtype=jnp.int32)).astype(
+        jnp.int32
+    )
+    return indptr, indices, data
+
+
+@partial(jax.jit, static_argnames=("c_pad", "c_max_row_nnz"))
+def spgemm(A: CSR, B: CSR, c_pad: int, c_max_row_nnz: int = 0) -> CSR:
+    """Numeric phase of C = A x B. ``c_pad`` comes from ``spgemm_symbolic_host``."""
+    rows, cols, vals = _expand_products(A, B, 0, A.n_cols)
+    indptr, indices, data = _accumulate(rows, cols, vals, A.n_rows, B.n_cols, c_pad)
+    return CSR(indptr, indices, data, (A.n_rows, B.n_cols),
+               c_max_row_nnz or c_pad)
+
+
+@partial(jax.jit, static_argnames=("c_pad", "c_max_row_nnz"))
+def spgemm_ranged(A: CSR, B_chunk: CSR, r0, r1, C_prev: CSR, c_pad: int,
+                  c_max_row_nnz: int = 0) -> CSR:
+    """Fused multiply-add over a B row-range: C = A[:, r0:r1] x B_chunk + C_prev.
+
+    The previous partial result's entries join the product stream before
+    accumulation — the paper's fused-add into the hashmap accumulators. A is NOT
+    physically column-partitioned; out-of-range entries are masked ("skipped").
+    """
+    rows, cols, vals = _expand_products(A, B_chunk, r0, r1)
+    prev_entry = jnp.arange(C_prev.nnz_pad, dtype=jnp.int32)
+    prev_valid = prev_entry < C_prev.indptr[-1]
+    prev_rows = jnp.where(prev_valid, csr_row_of_entry(C_prev), A.n_rows)
+    prev_cols = jnp.where(prev_valid, C_prev.indices, 0)
+    prev_vals = jnp.where(prev_valid, C_prev.data, 0.0)
+    rows = jnp.concatenate([rows, prev_rows])
+    cols = jnp.concatenate([cols, prev_cols])
+    vals = jnp.concatenate([vals, prev_vals])
+    indptr, indices, data = _accumulate(rows, cols, vals, A.n_rows, B_chunk.n_cols, c_pad)
+    return CSR(indptr, indices, data, (A.n_rows, B_chunk.n_cols),
+               c_max_row_nnz or c_pad)
+
+
+def spgemm_full(A: CSR, B: CSR) -> CSR:
+    """Convenience: symbolic + numeric in one call (host symbolic, jitted numeric)."""
+    ws = spgemm_symbolic_host(A, B)
+    return spgemm(A, B, ws.c_pad, ws.c_max_row_nnz)
+
+
+# ---------------------------------------------------------------------------
+# reference oracle
+# ---------------------------------------------------------------------------
+
+
+def spgemm_dense_oracle(A: CSR, B: CSR) -> jax.Array:
+    """Trustworthy dense reference: densify and matmul."""
+    from repro.sparse.csr import csr_to_dense
+
+    return csr_to_dense(A) @ csr_to_dense(B)

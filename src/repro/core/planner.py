@@ -1,0 +1,144 @@
+"""Chunk planning: the paper's Algorithm 4 decision heuristic + binary-search
+row partitioner.
+
+Copy-cost model (paper §3.3.1):
+  Chunk1 (A,C stationary, stream B):  cost1 = |A| + |C| + |B| * ||P_AC||
+  Chunk2 (B stationary, stream A,C):  cost2 = |B| + |A| * ||P_B|| + |C| * (||P_B|| - 1)
+
+Heuristic (Alg. 4): give 75% of fast memory to the operand streamed in the OUTER
+loop (stationary), >=25% to the inner streamed operand so compute stays utilized;
+prefer whole-residency when an operand set fits; otherwise minimize modeled copy
+cost over both loop orders.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.memory_model import MemorySystem
+from repro.sparse.csr import CSR
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkPlan:
+    """Everything the chunk executors need, all host-static."""
+
+    algorithm: str            # "whole_fast" | "dp" | "chunk1" | "chunk2" | "knl"
+    p_ac: tuple               # row boundaries of the A/C partition, len = n_ac + 1
+    p_b: tuple                # row boundaries of the B partition,   len = n_b + 1
+    copy_bytes: float         # modeled total fast<->slow traffic
+    fast_bytes_needed: float  # peak fast-memory footprint
+
+    @property
+    def n_ac(self) -> int:
+        return len(self.p_ac) - 1
+
+    @property
+    def n_b(self) -> int:
+        return len(self.p_b) - 1
+
+
+def row_bytes_csr(m: CSR, value_bytes: int = 8, index_bytes: int = 4) -> np.ndarray:
+    """Per-row byte footprint (values + column indices; indptr amortized)."""
+    lens = np.asarray(m.indptr[1:]) - np.asarray(m.indptr[:-1])
+    return lens * (value_bytes + index_bytes)
+
+
+def binary_search_partition(row_bytes: np.ndarray, target_bytes: float) -> tuple:
+    """Paper's BinarySearch: split rows into contiguous chunks each <= target bytes.
+
+    Uses searchsorted over the prefix-sum (true binary search, O(p log n)). A single
+    row larger than the target gets its own chunk (cannot split a row).
+    """
+    n = int(row_bytes.size)
+    if n == 0:
+        return (0,)
+    prefix = np.concatenate([[0.0], np.cumsum(row_bytes, dtype=np.float64)])
+    bounds = [0]
+    while bounds[-1] < n:
+        lo = bounds[-1]
+        # furthest row end with cumulative bytes <= prefix[lo] + target
+        hi = int(np.searchsorted(prefix, prefix[lo] + target_bytes, side="right") - 1)
+        hi = max(hi, lo + 1)  # always make progress (oversized single row)
+        bounds.append(min(hi, n))
+    return tuple(bounds)
+
+
+def partition_cost(bytes_a: float, bytes_b: float, bytes_c: float,
+                   n_ac: int, n_b: int, algorithm: str) -> float:
+    """The paper's copy-cost formulas."""
+    if algorithm == "chunk1":
+        return bytes_a + bytes_c + bytes_b * n_ac
+    if algorithm == "chunk2":
+        return bytes_b + bytes_a * n_b + bytes_c * max(n_b - 1, 0)
+    raise ValueError(algorithm)
+
+
+def plan_chunks(A: CSR, B: CSR, c_row_bytes: np.ndarray, system: MemorySystem,
+                fast_limit_bytes: float | None = None,
+                big_portion: float = 0.75) -> ChunkPlan:
+    """Algorithm 4. ``c_row_bytes`` is the symbolic-phase estimate of C's per-row
+    footprint (A and C are always co-partitioned: same row boundaries)."""
+    fast = float(fast_limit_bytes or system.fast.capacity_bytes)
+    small_portion = 1.0 - big_portion
+    a_rows = row_bytes_csr(A)
+    b_rows = row_bytes_csr(B)
+    ac_rows = a_rows + np.asarray(c_row_bytes, np.float64)
+    size_a, size_b, size_c = float(a_rows.sum()), float(b_rows.sum()), float(np.sum(c_row_bytes))
+
+    whole = size_a + size_b + size_c
+    if whole <= fast:
+        return ChunkPlan("whole_fast", (0, A.n_rows), (0, B.n_rows),
+                         copy_bytes=whole, fast_bytes_needed=whole)
+
+    if size_b <= big_portion * fast:
+        # B resident; stream A, C through the leftover (paper: "Add left over from
+        # big to small portion").
+        leftover = fast - size_b
+        p_ac = binary_search_partition(ac_rows, leftover)
+        plan = ChunkPlan("chunk2", p_ac, (0, B.n_rows),
+                         copy_bytes=partition_cost(size_a, size_b, size_c,
+                                                   len(p_ac) - 1, 1, "chunk2"),
+                         fast_bytes_needed=size_b + float(ac_rows.max(initial=0.0)))
+        return plan
+
+    if size_a + size_c <= big_portion * fast:
+        leftover = fast - (size_a + size_c)
+        p_b = binary_search_partition(b_rows, leftover)
+        return ChunkPlan("chunk1", (0, A.n_rows), p_b,
+                         copy_bytes=partition_cost(size_a, size_b, size_c,
+                                                   1, len(p_b) - 1, "chunk1"),
+                         fast_bytes_needed=size_a + size_c + float(b_rows.max(initial=0.0)))
+
+    # Neither fits: 2-D chunking. Give the big portion to the costlier operand set
+    # (paper: "if size(A) + 2*size(C) > size(B)" -> A,C get the big portion).
+    if size_a + 2.0 * size_c > size_b:
+        p_ac = binary_search_partition(ac_rows, big_portion * fast)
+        p_b = binary_search_partition(b_rows, small_portion * fast)
+    else:
+        p_b = binary_search_partition(b_rows, big_portion * fast)
+        p_ac = binary_search_partition(ac_rows, small_portion * fast)
+    n_ac, n_b = len(p_ac) - 1, len(p_b) - 1
+    cost1 = partition_cost(size_a, size_b, size_c, n_ac, n_b, "chunk1")
+    cost2 = partition_cost(size_a, size_b, size_c, n_ac, n_b, "chunk2")
+    algorithm = "chunk1" if cost1 <= cost2 else "chunk2"
+    return ChunkPlan(algorithm, p_ac, p_b,
+                     copy_bytes=min(cost1, cost2),
+                     fast_bytes_needed=fast)
+
+
+def plan_knl(A: CSR, B: CSR, fast_limit_bytes: float,
+             system: MemorySystem | None = None) -> ChunkPlan:
+    """Algorithm 1 planning: np = ceil(size(B)/FastSize), equal-byte row partition of
+    B via binary search. A and C stay in slow memory (never copied)."""
+    b_rows = row_bytes_csr(B)
+    size_b = float(b_rows.sum())
+    n_p = max(1, int(np.ceil(size_b / fast_limit_bytes)))
+    p_size = size_b / n_p
+    p_b = binary_search_partition(b_rows, p_size)
+    return ChunkPlan("knl", (0, A.n_rows), p_b, copy_bytes=size_b,
+                     fast_bytes_needed=float(max(
+                         b_rows[s:e].sum() for s, e in zip(p_b[:-1], p_b[1:])
+                     )) if len(p_b) > 1 else size_b)

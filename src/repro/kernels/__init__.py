@@ -1,0 +1,17 @@
+"""repro.kernels — Pallas TPU kernels for the compute hot-spots.
+
+Each kernel module contains the `pl.pallas_call` + explicit BlockSpec VMEM tiling;
+`ops.py` carries the jit'd public wrappers (symbolic planning + padding + dispatch)
+and `ref.py` the pure-jnp oracles every kernel is validated against (interpret=True
+on CPU; compiled on real TPUs).
+
+Kernels:
+  bsr_spgemm        block-sparse x block-sparse  (the paper's chunked numeric phase)
+  bsr_spmm          block-sparse x dense         (SpMM; Zheng et al. comparison)
+  grouped_matmul    ragged grouped GEMM          (MoE expert compute == chunked SpGEMM
+                                                  at block granularity)
+  chunked_attention flash-decoding with KV chunks streamed HBM->VMEM (Chunk1 order:
+                    Q/O stationary, KV streamed)
+  flash_prefill     causal flash attention for training/prefill with whole-block
+                    causal/window skipping (pl.when) and GQA head folding
+"""

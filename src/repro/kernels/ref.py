@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth for all kernel tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparse.bsr import BSR, bsr_to_dense
+
+
+def bsr_spgemm_ref(A: BSR, B: BSR) -> jax.Array:
+    """Dense C = A @ B (fp32 accumulation)."""
+    return jnp.dot(
+        bsr_to_dense(A).astype(jnp.float32),
+        bsr_to_dense(B).astype(jnp.float32),
+    )
+
+
+def bsr_spmm_ref(A: BSR, x: jax.Array) -> jax.Array:
+    return jnp.dot(bsr_to_dense(A).astype(jnp.float32), x.astype(jnp.float32))
+
+
+def grouped_matmul_ref(x: jax.Array, w: jax.Array, token_group: jax.Array) -> jax.Array:
+    """y[t] = x[t] @ w[token_group[t]] — per-token gather of the expert weight."""
+    wt = w[token_group]  # [T, K, N]
+    return jnp.einsum(
+        "tk,tkn->tn", x.astype(jnp.float32), wt.astype(jnp.float32)
+    )
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         lengths: jax.Array) -> jax.Array:
+    """Naive masked softmax attention. q: [B,Hkv,G,D]; k,v: [B,S,Hkv,D]."""
+    bsz, hkv, g, d = q.shape
+    s_len = k.shape[1]
+    scale = 1.0 / (d ** 0.5)
+    # [B, Hkv, G, S]
+    scores = jnp.einsum(
+        "bhgd,bshd->bhgs", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    pos = jnp.arange(s_len)[None, None, None, :]
+    mask = pos < lengths[:, None, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,210 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on the
+production meshes, record memory/cost/collective artifacts for §Roofline.
+
+THE TWO LINES ABOVE MUST STAY FIRST — jax locks the device count on first init,
+and only the dry-run wants 512 placeholder devices (tests/benches see 1).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3_2_1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # every cell
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+
+Each cell writes reports/dryrun/<mesh>/<arch>__<shape>.json; failures are bugs.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES, input_specs, skip_reason
+from repro.launch.mesh import make_production_mesh
+from repro.launch import roofline as rf
+from repro.models import transformer as tf
+from repro.parallel.sharding import (
+    param_shardings, batch_shardings, cache_shardings, replicated,
+)
+from repro.train.optim import TrainConfig
+from repro.train.step import make_train_step, make_prefill, make_serve_step, \
+    abstract_opt_state
+
+DEFAULT_MICROBATCHES = {"train_4k": 8}
+
+
+def opt_shardings(cfg, mesh, abstract_opt, psh):
+    """Optimizer state shardings: mu/nu mirror params; scalars replicated."""
+    out = {"mu": psh, "nu": psh,
+           "step": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())}
+    if "ef" in abstract_opt:
+        out["ef"] = psh
+    return out
+
+
+def lower_cell(arch: str, shape: str, mesh, mesh_name: str,
+               microbatches: int | None = None, perf_variant: str = "baseline"):
+    """Lower + compile one cell; returns (compiled, RooflineReport).
+
+    perf_variant="opt" switches on the §Perf levers (activation sharding
+    constraints, bf16 pre-cast before the layer scan, cast-free attention);
+    "baseline" is the paper-faithful configuration."""
+    import dataclasses
+
+    cfg = get_config(arch)
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if perf_variant == "opt":
+        cfg = dataclasses.replace(
+            cfg, shard_activations=True, dp_axes=dp, tp_axis="model",
+            precast_params=True, cast_free_attention=True)
+    elif perf_variant == "opt-noact":   # bisect: levers minus act constraints
+        cfg = dataclasses.replace(
+            cfg, precast_params=True, cast_free_attention=True)
+    elif perf_variant == "opt-actonly":  # bisect: act constraints only
+        cfg = dataclasses.replace(
+            cfg, shard_activations=True, dp_axes=dp, tp_axis="model")
+    elif perf_variant == "opt-dp":       # pure DP: "model" joins the batch axes
+        cfg = dataclasses.replace(
+            cfg, shard_activations=True, dp_axes=dp + ("model",), tp_axis="",
+            precast_params=True, cast_free_attention=True)
+    elif perf_variant == "opt-dots":     # opt + save-matmuls remat policy
+        cfg = dataclasses.replace(
+            cfg, shard_activations=True, dp_axes=dp, tp_axis="model",
+            precast_params=True, cast_free_attention=True,
+            remat_policy="dots")
+    spec = SHAPES[shape]
+    tp_enabled = perf_variant != "opt-dp"  # opt-dots keeps TP
+    batch_extra = ("model",) if perf_variant == "opt-dp" else ()
+    reason = skip_reason(cfg, shape)
+    if reason:
+        raise ValueError(f"SKIP {arch} x {shape}: {reason}")
+    specs = input_specs(cfg, shape)
+    ap = tf.abstract_params(cfg)
+    psh = param_shardings(cfg, mesh, ap, tp_enabled=tp_enabled)
+    n_dev = mesh.devices.size
+    t0 = time.time()
+
+    if spec.kind == "train":
+        tcfg = TrainConfig(
+            microbatches=microbatches or DEFAULT_MICROBATCHES.get(shape, 1))
+        aos = abstract_opt_state(cfg, tcfg, ap)
+        osh = opt_shardings(cfg, mesh, aos, psh)
+        bsh = batch_shardings(mesh, specs["batch"], extra_axes=batch_extra)
+        fn = make_train_step(cfg, tcfg)
+        with mesh:
+            lowered = jax.jit(
+                fn, in_shardings=(psh, osh, bsh), donate_argnums=(0, 1)
+            ).lower(ap, aos, specs["batch"])
+            compiled = lowered.compile()
+    elif spec.kind == "prefill":
+        bsh = batch_shardings(mesh, specs["batch"], extra_axes=batch_extra)
+        fn = make_prefill(cfg, specs["cache_len"])
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=(psh, bsh)).lower(ap, specs["batch"])
+            compiled = lowered.compile()
+    else:  # decode
+        csh = cache_shardings(cfg, mesh, specs["cache"])
+        tsh = batch_shardings(mesh, {"t": specs["tokens"]},
+                              extra_axes=batch_extra)["t"]
+        fn = make_serve_step(cfg)
+        with mesh:
+            lowered = jax.jit(
+                fn, in_shardings=(psh, csh, tsh), donate_argnums=(1,)
+            ).lower(ap, specs["cache"], specs["tokens"])
+            compiled = lowered.compile()
+
+    dt = time.time() - t0
+    rep = rf.report_from_artifacts(
+        arch, shape, mesh_name, n_dev, compiled, cfg, spec,
+        notes=f"compile={dt:.1f}s variant={perf_variant}")
+    return compiled, rep
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
+             microbatches: int | None = None,
+             perf_variant: str = "baseline") -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = "" if perf_variant == "baseline" else f"__{perf_variant}"
+    path = os.path.join(out_dir, f"{arch}__{shape}{suffix}.json")
+    cfg = get_config(arch)
+    reason = skip_reason(cfg, shape)
+    if reason:
+        result = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                  "status": "skip", "reason": reason}
+        with open(path, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"SKIP  {arch:24s} {shape:12s} {reason}")
+        return result
+    try:
+        compiled, rep = lower_cell(arch, shape, mesh, mesh_name, microbatches,
+                                   perf_variant)
+        result = {"status": "ok", **rep.to_json()}
+        ma = compiled.memory_analysis()
+        result["memory_analysis"] = {
+            "argument_size_in_bytes": int(ma.argument_size_in_bytes),
+            "output_size_in_bytes": int(ma.output_size_in_bytes),
+            "temp_size_in_bytes": int(ma.temp_size_in_bytes),
+            "alias_size_in_bytes": int(ma.alias_size_in_bytes),
+        }
+        print(f"OK    {arch:24s} {shape:12s} mesh={mesh_name} "
+              f"flops={rep.hlo_flops:.3g} bytes={rep.hlo_bytes:.3g} "
+              f"coll={rep.coll_bytes_raw:.3g} rho={rep.rho:.1f} "
+              f"temp={rep.temp_bytes/2**30:.2f}GiB "
+              f"bottleneck={rep.bottleneck} "
+              f"roofline={rep.roofline_fraction():.3f} [{rep.notes}]")
+    except Exception as e:
+        result = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                  "status": "fail", "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-4000:]}
+        print(f"FAIL  {arch:24s} {shape:12s} {type(e).__name__}: {e}")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="2x16x16 = 512 chips (default: one 16x16 pod)")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--perf", action="store_true",
+                    help="enable the §Perf optimization levers (variant 'opt')")
+    ap.add_argument("--variant", default=None,
+                    choices=("baseline", "opt", "opt-noact", "opt-actonly", "opt-dp",
+                             "opt-dots"),
+                    help="explicit perf variant (overrides --perf)")
+    ap.add_argument("--out", default="reports/dryrun")
+    args = ap.parse_args()
+
+    mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
+    out_dir = os.path.join(args.out, mesh_name)
+    variant = args.variant or ("opt" if args.perf else "baseline")
+    results = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                results.append(run_cell(arch, shape, args.multi_pod, out_dir,
+                                        args.microbatches, variant))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required (or --all)")
+        results.append(run_cell(args.arch, args.shape, args.multi_pod, out_dir,
+                                args.microbatches, variant))
+    n_ok = sum(r.get("status") == "ok" for r in results)
+    n_skip = sum(r.get("status") == "skip" for r in results)
+    n_fail = sum(r.get("status") == "fail" for r in results)
+    print(f"\ndryrun[{mesh_name}]: {n_ok} ok, {n_skip} skip, {n_fail} fail")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

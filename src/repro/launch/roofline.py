@@ -1,0 +1,208 @@
+"""Roofline extraction from compiled dry-run artifacts (§Roofline).
+
+Three terms per (arch x shape x mesh), all in seconds PER DEVICE (XLA reports the
+partitioned per-device module):
+
+  compute    = MODEL_FLOPS/device / peak            (197 TFLOP/s bf16, TPU v5e)
+  memory     = HLO_bytes_accessed * rho / HBM_bw    (819 GB/s)
+  collective = collective_bytes * rho / link_bw     (~50 GB/s/link ICI)
+
+MEASURED CAVEAT (validated in tests/test_roofline.py): XLA's HloCostAnalysis
+counts while-loop bodies ONCE, so scanned structures (layer scan, microbatch
+scan, KV-chunk scan) are undercounted by their trip counts. Correction: the
+analytic model FLOPs are exact and the scanned bodies are homogeneous, so
+
+  rho = max(1, MODEL_FLOPS/device / HLO_flops)
+
+rescales bytes and collective traffic by the same trip-count factor that the
+flops were undercounted by. For unrolled programs rho ~= 1 and the raw HLO
+numbers stand (the tests assert this on an unrolled config).
+
+MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (inference) plus the explicit
+attention term (2·B·S²·H·hd per layer forward, window-bounded for SWA, zero for
+attention-free) — 6ND alone misses attention entirely, which matters at 32k+.
+
+collective_bytes is NOT in cost_analysis: we parse the optimized HLO text and
+sum RESULT-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute (operand types are not inlined in optimized HLO
+text), with ring-algorithm multipliers: all-reduce moves ~2x its payload per
+device, the others ~1x.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+TPU_PEAK_FLOPS = 197e12
+TPU_HBM_BPS = 819e9
+ICI_LINK_BPS = 50e9
+HBM_BYTES = 16 * (1 << 30)
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ring-algorithm traffic per device, as a multiple of the result payload
+_KIND_MULT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+              "all-to-all": 1.0, "collective-permute": 1.0}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(all-reduce-start|all-reduce|all-gather-start|all-gather|reduce-scatter|"
+    r"all-to-all|collective-permute-start|collective-permute)\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-kind result-shape bytes (with ring multipliers) from optimized HLO."""
+    raw = {k: 0.0 for k in COLLECTIVES}
+    counts = {k: 0 for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        result_shape, kind = m.group(1), m.group(2).replace("-start", "")
+        total = sum(_shape_bytes(t, d) for t, d in _SHAPE_RE.findall(result_shape))
+        raw[kind] += total * _KIND_MULT[kind]
+        counts[kind] += 1
+    return {"bytes": raw, "counts": counts, "total_bytes": sum(raw.values())}
+
+
+def analytic_model_flops(cfg, shape_spec) -> float:
+    """MODEL_FLOPS (global, all devices): 6ND/2ND + explicit attention term."""
+    n = cfg.active_param_count()
+    b, s = shape_spec.global_batch, shape_spec.seq_len
+    if shape_spec.kind == "train":
+        base = 6.0 * n * b * s
+        attn = 3.0 * _attn_fwd_flops(cfg, b, s)      # fwd + ~2x bwd
+    elif shape_spec.kind == "prefill":
+        base = 2.0 * n * b * s
+        attn = _attn_fwd_flops(cfg, b, s)
+    else:  # decode: one token per sequence against an s-token cache
+        base = 2.0 * n * b
+        attn = _attn_decode_flops(cfg, b, s)
+    return base + attn
+
+
+def _attn_fwd_flops(cfg, b: int, s: int) -> float:
+    if not getattr(cfg, "has_attention", False):
+        return 0.0
+    h, hd, L = cfg.n_heads, cfg.head_dim, cfg.n_layers
+    if cfg.family == "hybrid":
+        L = len(range(cfg.attn_every - 1, cfg.n_layers, cfg.attn_every)) \
+            if cfg.attn_every else 0
+    span = min(s, cfg.sliding_window) if cfg.sliding_window else s
+    # QK^T + AV, causal-halved: 2 * (2 * b * s * span/2 * h * hd)
+    return 2.0 * b * s * span * h * hd * L
+
+
+def _attn_decode_flops(cfg, b: int, s: int) -> float:
+    if not getattr(cfg, "has_attention", False):
+        return 0.0
+    h, hd, L = cfg.n_heads, cfg.head_dim, cfg.n_layers
+    if cfg.family == "hybrid":
+        L = len(range(cfg.attn_every - 1, cfg.n_layers, cfg.attn_every)) \
+            if cfg.attn_every else 0
+    span = min(s, cfg.sliding_window) if cfg.sliding_window else s
+    return 4.0 * b * span * h * hd * L
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    # raw artifacts (per device, loop bodies counted once)
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes_raw: float
+    coll_detail: dict
+    # analytic + correction
+    analytic_flops_global: float
+    rho: float = 1.0
+    # terms (seconds, per device)
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    bottleneck: str = ""
+    useful_ratio: float = 0.0
+    # memory analysis (per device)
+    temp_bytes: float = 0.0
+    arg_bytes: float = 0.0
+    fits_hbm: bool = False
+    notes: str = ""
+
+    def finalize(self):
+        per_dev = self.analytic_flops_global / self.n_devices
+        self.rho = max(1.0, per_dev / self.hlo_flops) if self.hlo_flops else 1.0
+        self.t_compute = per_dev / TPU_PEAK_FLOPS
+        self.t_memory = self.hlo_bytes * self.rho / TPU_HBM_BPS
+        self.t_collective = self.coll_bytes_raw * self.rho / ICI_LINK_BPS
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        self.bottleneck = max(terms, key=terms.get)
+        self.useful_ratio = (per_dev / (self.hlo_flops * self.rho)
+                             if self.hlo_flops else 0.0)
+        self.fits_hbm = (self.temp_bytes + self.arg_bytes) <= HBM_BYTES
+        return self
+
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of the step under perfect overlap:
+        compute_term / max(all terms). 1.0 = at the roofline."""
+        m = max(self.t_compute, self.t_memory, self.t_collective)
+        return self.t_compute / m if m else 0.0
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["roofline_fraction"] = self.roofline_fraction()
+        return d
+
+
+def report_from_artifacts(arch: str, shape: str, mesh_name: str, n_devices: int,
+                          compiled, cfg, shape_spec,
+                          notes: str = "") -> RooflineReport:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    try:
+        ma = compiled.memory_analysis()
+        temp = float(getattr(ma, "temp_size_in_bytes", 0))
+        args = float(getattr(ma, "argument_size_in_bytes", 0))
+    except Exception:   # pragma: no cover
+        temp, args = 0.0, 0.0
+    rep = RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, n_devices=n_devices,
+        hlo_flops=flops, hlo_bytes=byts,
+        coll_bytes_raw=float(coll["total_bytes"]), coll_detail=coll,
+        analytic_flops_global=analytic_model_flops(cfg, shape_spec),
+        temp_bytes=temp, arg_bytes=args, notes=notes,
+    )
+    return rep.finalize()
+
+
+def save_report(report: RooflineReport, path: str):
+    with open(path, "w") as f:
+        json.dump(report.to_json(), f, indent=2)

@@ -1,0 +1,112 @@
+"""Serving launcher: batched prefill + decode with continuous batching-lite.
+
+Requests are prompts of uneven length; the scheduler right-pads them into the
+static prefill shape (a production system would bucket), runs one jitted prefill,
+then decodes greedily with the jitted serve_step until every sequence emits EOS
+or hits max_new_tokens. Finished sequences keep decoding dead tokens until the
+batch drains (static shapes), which is exactly what continuous batching replaces
+— the scheduler refills finished slots from the queue between decode bursts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as tf
+from repro.parallel.sharding import param_shardings
+from repro.train.step import make_prefill, make_serve_step
+
+
+@dataclasses.dataclass
+class ServeStats:
+    prompts: int = 0
+    generated_tokens: int = 0
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.generated_tokens / self.decode_s if self.decode_s else 0.0
+
+
+def serve_batch(cfg, prompts: list, *, max_new_tokens: int = 16,
+                cache_len: int = 256, eos_id: int = 0, mesh=None,
+                params=None, seed: int = 0) -> tuple:
+    """Generate greedily for a batch of token-id prompts. Returns
+    (list of generated id lists, ServeStats)."""
+    mesh = mesh or make_host_mesh()
+    b = len(prompts)
+    max_len = max(len(p) for p in prompts)
+    toks = np.zeros((b, max_len), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, : len(p)] = p          # right-pad (static prefill shape)
+
+    if params is None:
+        key = jax.random.PRNGKey(seed)
+        ap = tf.abstract_params(cfg)
+        psh = param_shardings(cfg, mesh, ap)
+        with mesh:
+            params = jax.jit(lambda k: tf.init_params(k, cfg),
+                             out_shardings=psh)(key)
+
+    prefill_fn = jax.jit(make_prefill(cfg, cache_len))
+    step_fn = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+    stats = ServeStats(prompts=b)
+
+    with mesh:
+        t0 = time.time()
+        logits, cache = prefill_fn(params, {"tokens": jnp.asarray(toks)})
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        stats.prefill_s = time.time() - t0
+
+        outs = [[int(nxt[i, 0])] for i in range(b)]
+        done = np.array([outs[i][-1] == eos_id for i in range(b)])
+        t0 = time.time()
+        for _ in range(max_new_tokens - 1):
+            nxt, cache = step_fn(params, cache, nxt)
+            arr = np.asarray(nxt)
+            for i in range(b):
+                if not done[i]:
+                    outs[i].append(int(arr[i, 0]))
+                    done[i] = arr[i, 0] == eos_id
+            stats.generated_tokens += int((~done).sum()) + int(done.sum() == 0)
+            if done.all():
+                break
+        stats.decode_s = time.time() - t0
+    stats.generated_tokens = sum(len(o) for o in outs)
+    return outs, stats
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--cache-len", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size,
+                            rng.integers(4, args.prompt_len)).tolist()
+               for _ in range(args.batch)]
+    outs, stats = serve_batch(cfg, prompts, max_new_tokens=args.max_new_tokens,
+                              cache_len=args.cache_len)
+    for i, o in enumerate(outs):
+        print(f"[serve] seq {i}: {len(o)} tokens -> {o[:12]}...")
+    print(f"[serve] prefill {stats.prefill_s*1e3:.0f}ms, "
+          f"{stats.tokens_per_s:.1f} tok/s decode")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""repro.models — LM substrate for the 10 assigned architectures.
+
+Pure-functional JAX models (param pytrees of plain dicts), with three entry points
+per architecture: ``forward`` (training), ``prefill`` (build KV cache / state), and
+``decode_step`` (one token with cache/state). Layer stacks are scanned + remat'd so
+the 95-layer configs lower to compact HLO.
+"""
+
+from repro.models.config import ModelConfig
+
+__all__ = ["ModelConfig"]

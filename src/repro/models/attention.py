@@ -1,0 +1,270 @@
+"""GQA attention: RoPE, causal masking, sliding windows, KV caches.
+
+Two implementations of the same math:
+  * ``flash_attention`` — pure-JAX doubly-chunked online-softmax (lax.scan over KV
+    chunks inside a sequential map over Q chunks). This is the paper's Chunk1
+    streaming order at the XLA level: Q/accumulator stationary, KV streamed. It is
+    the path the dry-run lowers (CPU backend can't compile Mosaic kernels), and its
+    HLO cost_analysis is what §Roofline reads.
+  * ``repro.kernels.chunked_attention`` — the Pallas twin for real TPUs, validated
+    against the same oracle in tests.
+
+Causal work-skipping: the KV loop runs only up to the last chunk a Q block can see
+(dynamic ``fori_loop`` bound), so prefill does ~S^2/2 work, not S^2 — and a sliding
+window also *starts* the loop at the first visible chunk, making SWA prefill
+O(S * W) (this is what makes mixtral's long_500k cell sub-quadratic).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, cdtype, pdtype
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg: ModelConfig):
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    so = (h * hd) ** -0.5
+    return {
+        "wq": jax.random.normal(k1, (d, h, hd), pdtype(cfg)) * s,
+        "wk": jax.random.normal(k2, (d, hkv, hd), pdtype(cfg)) * s,
+        "wv": jax.random.normal(k3, (d, hkv, hd), pdtype(cfg)) * s,
+        "wo": jax.random.normal(k4, (h, hd, d), pdtype(cfg)) * so,
+    }
+
+
+def qkv(params, x, cfg: ModelConfig, positions):
+    dt = cdtype(cfg)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def out_proj(params, o, cfg: ModelConfig):
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(cdtype(cfg)))
+
+
+# ---------------------------------------------------------------------------
+# flash attention (pure JAX, chunk-streamed)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_chunk: int = 1024, kv_chunk: int = 1024,
+                    q_offset: int = 0, cast_free: bool = False) -> jax.Array:
+    """q: [B, Sq, H, D]; k, v: [B, Sk, Hkv, D]. Returns [B, Sq, H, D].
+
+    ``q_offset``: global position of q[0] relative to k[0] (prefill: 0)."""
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    g = h // hkv
+    scale = 1.0 / (d ** 0.5)
+    q_chunk = min(q_chunk, sq) or sq
+    kv_chunk = min(kv_chunk, sk) or sk
+    # pad ragged tails to chunk multiples; padded K positions are masked below,
+    # padded Q rows are sliced off the output
+    sq_orig = sq
+    sq_pad = -(-sq // q_chunk) * q_chunk
+    sk_pad = -(-sk // kv_chunk) * kv_chunk
+    if sq_pad != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_pad - sq), (0, 0), (0, 0)))
+    if sk_pad != sk:
+        k = jnp.pad(k, ((0, 0), (0, sk_pad - sk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk_pad - sk), (0, 0), (0, 0)))
+    sk_valid = sk
+    sq, sk = sq_pad, sk_pad
+    nq = sq // q_chunk
+    nk = sk // kv_chunk
+    qg = q.reshape(b, sq, hkv, g, d)
+
+    def q_block(qi: int):
+        """One Q chunk. ``qi`` is a static Python int, so the visible-KV bounds
+        are static -> reverse-mode differentiable AND causal/window work-skipping
+        is preserved (the KV scan only covers visible chunks)."""
+        q_blk = qg[:, qi * q_chunk : (qi + 1) * q_chunk]
+        if not cast_free:
+            q_blk = q_blk.astype(jnp.float32)
+        q0 = q_offset + qi * q_chunk
+        qpos = q0 + jnp.arange(q_chunk)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, ki * kv_chunk, kv_chunk, 1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, ki * kv_chunk, kv_chunk, 1)
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            # [b, hkv, g, qc, kc] — cast_free keeps operands in their storage
+            # dtype and asks the MXU for fp32 accumulation instead of
+            # materializing fp32 copies of the KV stream (§Perf lever)
+            if cast_free:
+                s = jnp.einsum(
+                    "bqhgd,bkhd->bhgqk", q_blk, k_blk,
+                    preferred_element_type=jnp.float32,
+                ) * scale
+            else:
+                s = jnp.einsum(
+                    "bqhgd,bkhd->bhgqk", q_blk, k_blk.astype(jnp.float32)
+                ) * scale
+            mask = kpos[None, :] < sk_valid
+            if causal:
+                mask = mask & (qpos[:, None] >= kpos[None, :])
+            if window:
+                mask = mask & (qpos[:, None] - kpos[None, :] < window)
+            mask = jnp.broadcast_to(mask, (q_chunk, kv_chunk))
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            if cast_free:
+                acc_new = acc * alpha[..., None] + jnp.einsum(
+                    "bhgqk,bkhd->bhgqd", p.astype(v_blk.dtype), v_blk,
+                    preferred_element_type=jnp.float32,
+                )
+            else:
+                acc_new = acc * alpha[..., None] + jnp.einsum(
+                    "bhgqk,bkhd->bhgqd", p, v_blk.astype(jnp.float32)
+                )
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((b, hkv, g, q_chunk), NEG_INF, jnp.float32),
+            jnp.zeros((b, hkv, g, q_chunk), jnp.float32),
+            jnp.zeros((b, hkv, g, q_chunk, d), jnp.float32),
+        )
+        # causal: no KV chunk beyond this Q block's last row is visible
+        hi = min((q0 + q_chunk + kv_chunk - 1) // kv_chunk, nk) if causal else nk
+        # sliding window: no KV chunk entirely before (first q row - window)
+        lo = max((q0 - window + 1) // kv_chunk, 0) if window else 0
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init, jnp.arange(lo, max(hi, lo + 1), dtype=jnp.int32))
+        o = acc / jnp.maximum(l[..., None], 1e-30)
+        # [b, hkv, g, qc, d] -> [b, qc, h, d]
+        return o.transpose(0, 3, 1, 2, 4).reshape(b, q_chunk, h, d)
+
+    out = jnp.concatenate([q_block(qi) for qi in range(nq)], axis=1) if nq > 1 \
+        else q_block(0)
+    return out[:, :sq_orig].astype(q.dtype)
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, q_offset=0):
+    """Naive oracle for flash_attention (tests only)."""
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, d).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32)) / (d ** 0.5)
+    qpos = q_offset + jnp.arange(sq)
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# block-level entry points
+# ---------------------------------------------------------------------------
+
+
+def attn_forward(params, x, cfg: ModelConfig, positions):
+    """Training / prefill self-attention over the full sequence."""
+    q, k, v = qkv(params, x, cfg, positions)
+    o = flash_attention(
+        q, k, v, causal=True, window=cfg.sliding_window,
+        q_chunk=cfg.q_chunk or q.shape[1], kv_chunk=cfg.attn_chunk or k.shape[1],
+        cast_free=cfg.cast_free_attention,
+    )
+    return out_proj(params, o, cfg)
+
+
+def attn_prefill(params, x, cfg: ModelConfig, positions, cache_len: int):
+    """Prefill: returns (y, (k_cache, v_cache)) with caches padded to cache_len.
+
+    For sliding-window attention the cache is a ring buffer of size
+    min(cache_len, window) (the capacity feature: the KV working set is bounded)."""
+    q, k, v = qkv(params, x, cfg, positions)
+    o = flash_attention(
+        q, k, v, causal=True, window=cfg.sliding_window,
+        q_chunk=cfg.q_chunk or q.shape[1], kv_chunk=cfg.attn_chunk or k.shape[1],
+        cast_free=cfg.cast_free_attention,
+    )
+    y = out_proj(params, o, cfg)
+    b, s, hkv, hd = k.shape
+    eff = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+    kc = jnp.zeros((b, eff, hkv, hd), k.dtype)
+    vc = jnp.zeros((b, eff, hkv, hd), v.dtype)
+    if cfg.sliding_window and s > eff:
+        # keep the last `eff` tokens, ring-aligned so slot = pos % eff
+        tail_k, tail_v = k[:, -eff:], v[:, -eff:]
+        pos_tail = positions[:, -eff:] if positions.ndim == 2 else \
+            jnp.broadcast_to(positions[-eff:], (b, eff))
+        slots = (pos_tail % eff).astype(jnp.int32)
+        kc = kc.at[jnp.arange(b)[:, None], slots].set(tail_k)
+        vc = vc.at[jnp.arange(b)[:, None], slots].set(tail_v)
+    else:
+        n = min(s, eff)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k[:, :n], 0, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v[:, :n], 0, 1)
+    return y, (kc, vc)
+
+
+def attn_decode(params, x, cfg: ModelConfig, cache_k, cache_v, pos):
+    """One-token decode. x: [B, 1, d]; pos: int32[B] current position (0-based).
+    Returns (y [B, 1, d], (cache_k, cache_v) updated)."""
+    b = x.shape[0]
+    dt = cdtype(cfg)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    s_cache = cache_k.shape[1]
+    slot = (pos % s_cache).astype(jnp.int32) if cfg.sliding_window else pos
+    cache_k = cache_k.at[jnp.arange(b), slot].set(k[:, 0])
+    cache_v = cache_v.at[jnp.arange(b), slot].set(v[:, 0])
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // hkv
+    if cfg.cast_free_attention:
+        # storage-dtype operands + fp32 MXU accumulation: no fp32 copy of the
+        # KV cache is ever materialized in HBM (§Perf lever)
+        qg = q.reshape(b, hkv, g, hd)
+        scores = jnp.einsum(
+            "bhgd,bshd->bhgs", qg, cache_k,
+            preferred_element_type=jnp.float32,
+        ) / (hd ** 0.5)
+    else:
+        qg = q.reshape(b, hkv, g, hd).astype(jnp.float32)
+        scores = jnp.einsum(
+            "bhgd,bshd->bhgs", qg, cache_k.astype(jnp.float32)
+        ) / (hd ** 0.5)
+    # valid cache slots: <= pos, and within the window for SWA
+    if cfg.sliding_window:
+        # slot i holds position p iff p % s_cache == i and p <= pos, p > pos - window
+        slot_ids = jnp.arange(s_cache)[None, :]
+        newest = pos[:, None] - ((pos[:, None] - slot_ids) % s_cache)
+        valid = (newest >= 0) & (newest > pos[:, None] - cfg.sliding_window)
+    else:
+        valid = jnp.arange(s_cache)[None, :] <= pos[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    if cfg.cast_free_attention:
+        o = jnp.einsum("bhgs,bshd->bhgd", p.astype(cache_v.dtype), cache_v,
+                       preferred_element_type=jnp.float32)
+    else:
+        o = jnp.einsum("bhgs,bshd->bhgd", p, cache_v.astype(jnp.float32))
+    o = o.reshape(b, 1, h, hd).astype(x.dtype)
+    return out_proj(params, o, cfg), (cache_k, cache_v)

@@ -1,0 +1,128 @@
+"""Shared layer primitives: RMSNorm, RoPE, SwiGLU MLP, embeddings.
+
+All modules are (init_fn, apply_fn) pairs over plain-dict param pytrees. Compute
+runs in ``cfg.compute_dtype`` (bf16 by default) with fp32 master params and fp32
+normalization statistics.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(cfg: ModelConfig, d: int | None = None):
+    return {"scale": jnp.ones(d or cfg.d_model, pdtype(cfg))}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, D]; positions: [..., S] (broadcastable int32)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(angles)[..., None, :]                # [..., S, 1, D/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d ** -0.5
+    s_out = ff ** -0.5
+    return {
+        "w1": jax.random.normal(k1, (d, ff), pdtype(cfg)) * s_in,   # gate
+        "w3": jax.random.normal(k2, (d, ff), pdtype(cfg)) * s_in,   # up
+        "w2": jax.random.normal(k3, (ff, d), pdtype(cfg)) * s_out,  # down
+    }
+
+
+def mlp(params, x, cfg: ModelConfig):
+    dt = cdtype(cfg)
+    h = jax.nn.silu(x @ params["w1"].astype(dt)) * (x @ params["w3"].astype(dt))
+    return h @ params["w2"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "embedding": jax.random.normal(
+            k1, (cfg.vocab_size, cfg.d_model), pdtype(cfg)
+        ) * (cfg.d_model ** -0.5),
+        "head": jax.random.normal(
+            k2, (cfg.d_model, cfg.vocab_size), pdtype(cfg)
+        ) * (cfg.d_model ** -0.5),
+    }
+
+
+def embed(params, tokens, cfg: ModelConfig):
+    return params["embedding"].astype(cdtype(cfg))[tokens]
+
+
+def unembed(params, x, cfg: ModelConfig):
+    logits = (x @ params["head"].astype(cdtype(cfg))).astype(jnp.float32)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# modality frontend stubs ([vlm]/[audio]: precomputed patch/frame embeddings)
+# ---------------------------------------------------------------------------
+
+
+def frontend_project_init(key, cfg: ModelConfig, frontend_dim: int):
+    """Stub frontend: a single linear projection from precomputed embeddings
+    (vision patches / audio frames) into d_model. The actual encoder is out of
+    scope per the assignment ("the modality frontend is a STUB")."""
+    return {
+        "proj": jax.random.normal(key, (frontend_dim, cfg.d_model), pdtype(cfg))
+        * (frontend_dim ** -0.5)
+    }
+
+
+def frontend_project(params, embeds, cfg: ModelConfig):
+    return (embeds.astype(cdtype(cfg)) @ params["proj"].astype(cdtype(cfg)))

@@ -1,0 +1,195 @@
+"""Mamba-2 (SSD) block for the Zamba2 hybrid (arXiv:2411.15242 / 2405.21060).
+
+Per head h (P = head dim, N = state dim):
+    h_t = exp(A * dt_t) h_{t-1} + dt_t * x_t  B_t^T        (state: P x N)
+    y_t = h_t C_t + D * x_t
+with scalar A < 0 per head, dt_t = softplus(dt_proj(u_t) + dt_bias), and B_t, C_t
+shared across heads (n_groups = 1). A causal depthwise conv (width 4) precedes the
+SSM on (x, B, C), and a SiLU gate z wraps the output — the Mamba-2 layout.
+
+Two forms, tested equal:
+  * ``ssd_scan``    — sequential scan (decode / oracle)
+  * ``ssd_chunked`` — the SSD chunked-parallel form: intra-chunk masked matmuls +
+    inter-chunk state recurrence. This IS the paper's chunking idea on the time
+    axis (DESIGN.md §5) and the training path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import cdtype, pdtype
+
+CONV_W = 4
+EXPAND = 2
+
+
+def mamba_dims(cfg: ModelConfig):
+    d_inner = EXPAND * cfg.d_model
+    p = cfg.ssm_head_dim
+    nh = d_inner // p
+    n = cfg.ssm_state
+    return d_inner, p, nh, n
+
+
+def mamba_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner, p, nh, n = mamba_dims(cfg)
+    keys = jax.random.split(key, 8)
+    s = d ** -0.5
+    pd = pdtype(cfg)
+    conv_ch = d_inner + 2 * n   # conv over (x, B, C)
+    return {
+        "in_proj": jax.random.normal(
+            keys[0], (d, 2 * d_inner + 2 * n + nh), pd) * s,
+        "conv_w": jax.random.normal(keys[1], (CONV_W, conv_ch), pd) * 0.5,
+        "conv_b": jnp.zeros((conv_ch,), pd),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(pd),   # A = -exp(A_log)
+        "dt_bias": jnp.full((nh,), -2.0, pd),
+        "D": jnp.ones((nh,), pd),
+        "norm_scale": jnp.ones((d_inner,), pd),   # gated RMSNorm before out proj
+        "out_proj": jax.random.normal(keys[2], (d_inner, d), pd) * (d_inner ** -0.5),
+    }
+
+
+def _split_proj(params, u, cfg: ModelConfig, dt):
+    d_inner, p, nh, n = mamba_dims(cfg)
+    zxbcdt = u @ params["in_proj"].astype(dt)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner : 2 * d_inner + 2 * n]
+    dt_raw = zxbcdt[..., 2 * d_inner + 2 * n :]
+    return z, xbc, dt_raw
+
+
+def _causal_conv(params, xbc, dt, conv_state=None, valid_len=None):
+    """Depthwise causal conv width CONV_W. xbc: [B, S, C]. conv_state: [B, W-1, C].
+    Returns (y, new_conv_state). ``valid_len`` marks the last real (unpadded)
+    position so the carried conv state never contains padding."""
+    b, s, c = xbc.shape
+    w = params["conv_w"].astype(dt)   # [W, C]
+    if conv_state is None:
+        conv_state = jnp.zeros((b, CONV_W - 1, c), xbc.dtype)
+    ext = jnp.concatenate([conv_state, xbc], axis=1)   # [B, W-1+S, C]
+    out = sum(
+        ext[:, i : i + s, :] * w[i] for i in range(CONV_W)
+    ) + params["conv_b"].astype(dt)
+    end = (valid_len if valid_len is not None else s) + (CONV_W - 1)
+    return jax.nn.silu(out), ext[:, end - (CONV_W - 1) : end, :]
+
+
+def _gated_norm(params, y, z, eps=1e-5):
+    y32 = y.astype(jnp.float32)
+    var = jnp.mean(y32 * y32, axis=-1, keepdims=True)
+    y32 = y32 * jax.lax.rsqrt(var + eps) * params["norm_scale"].astype(jnp.float32)
+    return (y32 * jax.nn.silu(z.astype(jnp.float32))).astype(y.dtype)
+
+
+def _prep(params, u, cfg: ModelConfig, conv_state=None, valid_len=None):
+    d_inner, p, nh, n = mamba_dims(cfg)
+    dt = cdtype(cfg)
+    b, s, _ = u.shape
+    z, xbc, dt_raw = _split_proj(params, u, cfg, dt)
+    xbc, conv_state = _causal_conv(params, xbc, dt, conv_state, valid_len=valid_len)
+    x = xbc[..., :d_inner].reshape(b, s, nh, p)
+    bmat = xbc[..., d_inner : d_inner + n]             # [B, S, N]
+    cmat = xbc[..., d_inner + n :]                     # [B, S, N]
+    delta = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )                                                   # [B, S, nh]
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))   # [nh]
+    decay = jnp.exp(delta * a[None, None, :])           # [B, S, nh]
+    return z, x, bmat, cmat, delta, decay, conv_state
+
+
+def ssd_scan(params, u, cfg: ModelConfig, state=None, conv_state=None):
+    """Sequential form. u: [B, S, d]. state: [B, nh, P, N].
+    Returns (y [B, S, d], state, conv_state)."""
+    d_inner, p, nh, n = mamba_dims(cfg)
+    dt = cdtype(cfg)
+    b, s, _ = u.shape
+    z, x, bmat, cmat, delta, decay, conv_state = _prep(params, u, cfg, conv_state)
+    dfac = params["D"].astype(jnp.float32)
+
+    def step(h, inputs):
+        xt, bt, ct, dlt, dct = inputs    # [b,nh,p], [b,n], [b,n], [b,nh], [b,nh]
+        dx = (dlt[..., None] * xt.astype(jnp.float32))       # [b, nh, p]
+        h_new = dct[..., None, None] * h + dx[..., :, None] * bt[:, None, None, :]
+        yt = jnp.einsum("bhpn,bn->bhp", h_new, ct.astype(jnp.float32))
+        yt = yt + dfac[None, :, None] * xt.astype(jnp.float32)
+        return h_new, yt
+
+    h0 = jnp.zeros((b, nh, p, n), jnp.float32) if state is None else state
+    xs = (
+        x.transpose(1, 0, 2, 3),
+        bmat.transpose(1, 0, 2),
+        cmat.transpose(1, 0, 2),
+        delta.transpose(1, 0, 2),
+        decay.transpose(1, 0, 2),
+    )
+    h_out, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, d_inner)
+    y = _gated_norm(params, y, z)
+    return y @ params["out_proj"].astype(dt), h_out, conv_state
+
+
+def ssd_chunked(params, u, cfg: ModelConfig, chunk: int = 64, state=None,
+                conv_state=None):
+    """SSD chunked-parallel form: identical math, chunked over time."""
+    d_inner, p, nh, n = mamba_dims(cfg)
+    dt = cdtype(cfg)
+    b, s, _ = u.shape
+    pad = (-s) % chunk
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    z, x, bmat, cmat, delta, decay, conv_state = _prep(params, u, cfg, conv_state,
+                                                       valid_len=s)
+    dfac = params["D"].astype(jnp.float32)
+    if pad:
+        # padded steps must not touch the carried state: decay 1, contribution 0
+        valid = (jnp.arange(sp) < s)[None, :, None]
+        decay = jnp.where(valid, decay, 1.0)
+        delta = jnp.where(valid, delta, 0.0)
+    nc = sp // chunk
+
+    xc = x.reshape(b, nc, chunk, nh, p).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    bc = bmat.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3).astype(jnp.float32)
+    dl = delta.reshape(b, nc, chunk, nh).transpose(1, 0, 3, 2)   # [nc,b,nh,c]
+    la = jnp.log(jnp.maximum(decay, 1e-37)).reshape(b, nc, chunk, nh) \
+        .transpose(1, 0, 3, 2)                                   # [nc,b,nh,c]
+    ci = jnp.cumsum(la, axis=-1)        # inclusive cumlog within chunk
+    tot = ci[..., -1:]
+
+    def chunk_step(h, inputs):
+        xt, bt, ct, dlt, ci_t, tot_t = inputs
+        # intra-chunk: y_t += sum_{j<=t} (prod_{j<i<=t} a_i) dl_j x_j B_j^T C_t
+        # pairwise decay L[t, j] = exp(ci_t - ci_j) for j <= t.
+        # Mask in LOG space before exp: upper-triangle differences are positive and
+        # can overflow; exp(inf) * 0 would poison reverse-mode cotangents.
+        diff = ci_t[..., :, None] - ci_t[..., None, :]           # [b,nh,c,c]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        L = jnp.exp(jnp.where(tri[None, None], diff, -1e30))
+        gram = jnp.einsum("btn,bjn->btj", ct, bt)                # [b,c,c]
+        att = L * gram[:, None]                                  # [b,nh,c,c]
+        dx = dlt[..., :, None] * xt                              # [b,nh,c,p]
+        y_intra = jnp.einsum("bhtj,bhjp->bhtp", att, dx)
+        # inter-chunk: y_t += C_t . (prod_{i<=t} a_i) h_in
+        y_inter = jnp.einsum(
+            "bhpn,btn,bht->bhtp", h, ct, jnp.exp(ci_t)
+        )
+        # state update: h' = exp(tot) h + sum_j (prod_{j<i<=C} a_i) dl_j x_j B_j^T
+        k_tail = jnp.exp(tot_t - ci_t)[..., None] * dx           # [b,nh,c,p]
+        h_new = jnp.exp(tot_t)[..., None] * h + jnp.einsum(
+            "bhjp,bjn->bhpn", k_tail, bt)
+        y = y_intra + y_inter + dfac[None, :, None, None] * xt
+        return h_new, y
+
+    h0 = jnp.zeros((b, nh, p, n), jnp.float32) if state is None else state
+    h_out, ys = jax.lax.scan(chunk_step, h0, (xc, bc, cc, dl, ci, tot))
+    # ys: [nc, b, nh, chunk, p] -> [b, s, d_inner]
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, sp, d_inner)[:, :s]
+    y = _gated_norm(params, y, z[:, :s] if pad else z)
+    return y @ params["out_proj"].astype(dt), h_out, conv_state

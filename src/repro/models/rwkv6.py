@@ -1,0 +1,227 @@
+"""RWKV-6 "Finch": linear attention with data-dependent decay (arXiv:2404.05892).
+
+Time mixing (per head, head size P = cfg.ssm_head_dim):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (matrix state, P x P per head)
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)      (bonus u for the current token)
+with w_t = exp(-exp(w0 + lora_w(x'_t))) — the data-dependent decay that
+distinguishes Finch from RWKV-5 — and data-dependent token-shift interpolation
+(ddlerp) feeding every projection.
+
+Channel mixing is the RWKV squared-ReLU FFN over token-shifted inputs.
+
+The sequential form below scans over time (O(1) decode state: exactly why this
+arch RUNS the long_500k cell). ``time_mix_chunked`` is the chunked parallel form
+(the paper's chunking idea applied to the time axis) used for training speed;
+both are tested equal.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import cdtype, pdtype
+
+LORA_R = 32
+MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def rwkv_init(key, cfg: ModelConfig):
+    d, ff = cfg.d_model, cfg.d_ff
+    p = cfg.ssm_head_dim
+    nh = d // p
+    keys = jax.random.split(key, 16)
+    s = d ** -0.5
+    pd = pdtype(cfg)
+    params = {
+        # ddlerp token-shift: base mus + low-rank data-dependent adjustments
+        "mix_mu": jnp.full((len(MIX_NAMES), d), 0.5, pd),
+        "mix_A": jax.random.normal(keys[0], (len(MIX_NAMES), d, LORA_R), pd) * s,
+        "mix_B": jax.random.normal(keys[1], (len(MIX_NAMES), LORA_R, d), pd)
+        * (LORA_R ** -0.5),
+        # projections
+        "wr": jax.random.normal(keys[2], (d, d), pd) * s,
+        "wk": jax.random.normal(keys[3], (d, d), pd) * s,
+        "wv": jax.random.normal(keys[4], (d, d), pd) * s,
+        "wg": jax.random.normal(keys[5], (d, d), pd) * s,
+        "wo": jax.random.normal(keys[6], (d, d), pd) * s,
+        # decay: w0 + lora
+        "w0": jnp.full((d,), -0.6, pd),   # exp(-exp(-0.6)) ~ 0.58 baseline decay
+        "w_A": jax.random.normal(keys[7], (d, LORA_R), pd) * s,
+        "w_B": jax.random.normal(keys[8], (LORA_R, d), pd) * (LORA_R ** -0.5),
+        "u": jax.random.normal(keys[9], (nh, p), pd) * 0.1,  # per-head bonus
+        "ln_x": jnp.ones((d,), pd),       # per-head group norm scale
+        # channel mix
+        "cm_mu_k": jnp.full((d,), 0.5, pd),
+        "cm_mu_r": jnp.full((d,), 0.5, pd),
+        "cm_k": jax.random.normal(keys[10], (d, ff), pd) * s,
+        "cm_v": jax.random.normal(keys[11], (ff, d), pd) * (ff ** -0.5),
+        "cm_r": jax.random.normal(keys[12], (d, d), pd) * s,
+    }
+    return params
+
+
+def _mix_inputs(params, x, x_prev, dt):
+    """Returns dict name -> mixed input [B, S, d] (RWKV-6 ddlerp)."""
+    # first-stage lerp shared across targets
+    mu = params["mix_mu"].astype(dt)          # [5, d]
+    A = params["mix_A"].astype(dt)            # [5, d, r]
+    B = params["mix_B"].astype(dt)            # [5, r, d]
+    delta = x_prev - x                        # [B, S, d]
+    out = {}
+    for i, name in enumerate(MIX_NAMES):
+        xx = x + delta * mu[i]
+        adj = jnp.tanh(xx @ A[i]) @ B[i]      # low-rank data-dependent term
+        out[name] = x + delta * (mu[i] + adj)
+    return out
+
+
+def _decay(params, xw, dt):
+    """w_t in (0, 1): exp(-exp(w0 + lora(x))) per channel."""
+    lora = jnp.tanh(xw @ params["w_A"].astype(dt)) @ params["w_B"].astype(dt)
+    return jnp.exp(-jnp.exp(params["w0"].astype(jnp.float32)
+                            + lora.astype(jnp.float32)))
+
+
+def _group_norm(x, scale, nh, p, eps=1e-5):
+    """Per-head layer norm over the head dim (RWKV ln_x)."""
+    shape = x.shape
+    xh = x.reshape(*shape[:-1], nh, p).astype(jnp.float32)
+    mean = xh.mean(axis=-1, keepdims=True)
+    var = xh.var(axis=-1, keepdims=True)
+    xh = (xh - mean) * jax.lax.rsqrt(var + eps)
+    xh = xh.reshape(shape)
+    return xh * scale.astype(jnp.float32)
+
+
+def time_mix(params, x, cfg: ModelConfig, state=None, x_prev_in=None):
+    """Sequential form. x: [B, S, d]. state: [B, nh, P, P] (or None -> zeros).
+    Returns (y [B, S, d], state_out, x_last [B, d])."""
+    b, s, d = x.shape
+    p = cfg.ssm_head_dim
+    nh = d // p
+    dt = cdtype(cfg)
+    x_prev = jnp.concatenate(
+        [jnp.zeros((b, 1, d), x.dtype) if x_prev_in is None
+         else x_prev_in[:, None, :], x[:, :-1]], axis=1)
+    mixed = _mix_inputs(params, x, x_prev, dt)
+    r = (mixed["r"] @ params["wr"].astype(dt)).reshape(b, s, nh, p)
+    k = (mixed["k"] @ params["wk"].astype(dt)).reshape(b, s, nh, p)
+    v = (mixed["v"] @ params["wv"].astype(dt)).reshape(b, s, nh, p)
+    g = jax.nn.silu(mixed["g"] @ params["wg"].astype(dt))
+    w = _decay(params, mixed["w"], dt).reshape(b, s, nh, p)    # fp32
+    u = params["u"].astype(jnp.float32)                        # [nh, p]
+
+    def step(S, inputs):
+        rt, kt, vt, wt = inputs          # [b, nh, p] each; wt fp32
+        kv = kt[..., :, None].astype(jnp.float32) * vt[..., None, :].astype(jnp.float32)
+        # y = r . (S + diag(u) k^T v)
+        St = S + u[None, :, :, None] * kv
+        yt = jnp.einsum("bhp,bhpq->bhq", rt.astype(jnp.float32), St)
+        S_new = wt[..., :, None] * S + kv
+        return S_new, yt
+
+    S0 = jnp.zeros((b, nh, p, p), jnp.float32) if state is None else state
+    xs = (
+        r.transpose(1, 0, 2, 3),
+        k.transpose(1, 0, 2, 3),
+        v.transpose(1, 0, 2, 3),
+        w.transpose(1, 0, 2, 3),
+    )
+    S_out, ys = jax.lax.scan(step, S0, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, d)              # fp32
+    y = _group_norm(y, params["ln_x"], nh, p)
+    y = (y * g.astype(jnp.float32)).astype(dt)
+    return y @ params["wo"].astype(dt), S_out, x[:, -1, :]
+
+
+def time_mix_chunked(params, x, cfg: ModelConfig, chunk: int = 64, state=None,
+                     x_prev_in=None):
+    """Chunked parallel form (paper-technique tie-in: chunk the time axis).
+
+    Within a chunk the contribution of in-chunk tokens is computed with masked
+    matmuls (MXU-shaped); across chunks the state S is carried recurrently. For
+    decay w_t the in-chunk cumulative products D realize diag(w) products.
+    Mathematically identical to ``time_mix`` (tested)."""
+    b, s, d = x.shape
+    p = cfg.ssm_head_dim
+    nh = d // p
+    dt = cdtype(cfg)
+    if s % chunk:
+        pad = chunk - s % chunk
+        x_padded = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    else:
+        pad = 0
+        x_padded = x
+    sp = x_padded.shape[1]
+    x_prev = jnp.concatenate(
+        [jnp.zeros((b, 1, d), x.dtype) if x_prev_in is None
+         else x_prev_in[:, None, :], x_padded[:, :-1]], axis=1)
+    mixed = _mix_inputs(params, x_padded, x_prev, dt)
+    r = (mixed["r"] @ params["wr"].astype(dt)).reshape(b, sp, nh, p)
+    k = (mixed["k"] @ params["wk"].astype(dt)).reshape(b, sp, nh, p)
+    v = (mixed["v"] @ params["wv"].astype(dt)).reshape(b, sp, nh, p)
+    g = jax.nn.silu(mixed["g"] @ params["wg"].astype(dt))
+    w = _decay(params, mixed["w"], dt).reshape(b, sp, nh, p)
+    u = params["u"].astype(jnp.float32)
+    if pad:
+        # padded steps must not touch the carried state: decay 1, contribution 0
+        valid = (jnp.arange(sp) < s)[None, :, None, None]
+        w = jnp.where(valid, w, 1.0)
+        k = jnp.where(valid, k, 0.0)
+
+    nc = sp // chunk
+    rc = r.reshape(b, nc, chunk, nh, p).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    kc = k.reshape(b, nc, chunk, nh, p).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    vc = v.reshape(b, nc, chunk, nh, p).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    wc = w.reshape(b, nc, chunk, nh, p).transpose(1, 0, 3, 2, 4)  # [nc,b,nh,c,p]
+
+    logw = jnp.log(jnp.maximum(wc, 1e-30))
+    cum_incl = jnp.cumsum(logw, axis=3)              # prod w_1..w_t (inclusive)
+    cum_excl = cum_incl - logw                       # prod w_1..w_{t-1} (exclusive)
+    total = cum_incl[:, :, :, -1:, :]                # prod over whole chunk
+
+    def chunk_step(S, inputs):
+        rt, kt, vt, ce, ci, tot = inputs
+        # decay-adjusted keys/queries for cross-token terms:
+        #   y_t += r_t [ sum_{j<t} (prod_{j<i<=t-1} w_i) k_j^T v_j ] + u-bonus term
+        r_dec = rt * jnp.exp(ce)                     # r_t * prod_{i<t} w_i
+        k_dec = kt * jnp.exp(-ci)                    # k_j / prod_{i<=j} w_i
+        # in-chunk pairwise (strictly lower triangular: j < t)
+        att = jnp.einsum("bhtp,bhjp->bhtj", r_dec, k_dec)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        att = jnp.where(tri[None, None], att, 0.0)
+        y_intra = jnp.einsum("bhtj,bhjq->bhtq", att, vt)
+        # u-bonus diagonal term: r_t . (u k_t) v_t
+        diag = jnp.einsum("bhtp,bhtp->bht", rt, u[None, :, None, :] * kt)
+        y_intra += diag[..., None] * vt
+        # inter-chunk: state contribution
+        y_inter = jnp.einsum("bhtp,bhpq->bhtq", r_dec, S)
+        # state update: S' = diag(prod w) S + sum_j (prod_{j<i} w_i ... ) k_j^T v_j
+        k_tail = kt * jnp.exp(tot - ci)              # prod_{j<i<=C} w_i
+        S_new = jnp.exp(tot).squeeze(2)[..., :, None] * S + jnp.einsum(
+            "bhjp,bhjq->bhpq", k_tail, vt)
+        return S_new, y_intra + y_inter
+
+    S0 = jnp.zeros((b, nh, p, p), jnp.float32) if state is None else state
+    S_out, ys = jax.lax.scan(chunk_step, S0, (rc, kc, vc, cum_excl, cum_incl, total))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, sp, d)
+    y = _group_norm(y, params["ln_x"], nh, p)
+    y = (y * g.astype(jnp.float32)).astype(dt)
+    y = (y @ params["wo"].astype(dt))[:, :s]
+    return y, S_out, x_padded[:, s - 1, :]
+
+
+def channel_mix(params, x, cfg: ModelConfig, x_prev_in=None):
+    """RWKV squared-ReLU FFN with token shift. Returns (y, x_last)."""
+    b, s, d = x.shape
+    dt = cdtype(cfg)
+    x_prev = jnp.concatenate(
+        [jnp.zeros((b, 1, d), x.dtype) if x_prev_in is None
+         else x_prev_in[:, None, :], x[:, :-1]], axis=1)
+    xk = x + (x_prev - x) * params["cm_mu_k"].astype(dt)
+    xr = x + (x_prev - x) * params["cm_mu_r"].astype(dt)
+    h = jnp.square(jax.nn.relu(xk @ params["cm_k"].astype(dt)))
+    y = jax.nn.sigmoid(xr @ params["cm_r"].astype(dt)) * (h @ params["cm_v"].astype(dt))
+    return y, x[:, -1, :]

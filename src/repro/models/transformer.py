@@ -1,0 +1,402 @@
+"""Decoder assembly for all four families (dense / moe / ssm / hybrid).
+
+Entry points (pure functions over param pytrees):
+  init_params(key, cfg)                  -> params (use jax.eval_shape for abstract)
+  forward(params, batch, cfg)            -> (logits, aux)     [training path]
+  loss_fn(params, batch, cfg)            -> (loss, metrics)
+  prefill(params, batch, cfg, cache_len) -> (last_logits, cache)
+  decode_step(params, cache, tokens, cfg)-> (logits, cache)   [serve_step body]
+
+Homogeneous stacks (dense/moe/ssm) are scanned over stacked layer params with
+rematerialization, so a 95-layer model lowers to one compact scanned HLO body.
+The zamba2 hybrid uses a Python-level loop (38 layers) because its shared
+attention block breaks homogeneity (one weight set reused at every site).
+
+Modality stubs: configs with ``frontend != "none"`` accept ``batch["embeds"]``
+(precomputed patch/frame embeddings) instead of token ids, projected by the stub
+frontend (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import attention as att
+from repro.models import layers as ly
+from repro.models import mamba2, moe, rwkv6
+
+RWKV_CHUNK = 32   # fp32-safe chunk for the rwkv6 chunked-parallel form
+SSD_CHUNK = 64
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, cfg: ModelConfig):
+    if cfg.family in ("dense", "moe"):
+        k1, k2 = jax.random.split(key)
+        p = {
+            "norm1": ly.rmsnorm_init(cfg),
+            "attn": att.attn_init(k1, cfg),
+            "norm2": ly.rmsnorm_init(cfg),
+        }
+        if cfg.family == "moe":
+            p["moe"] = moe.moe_init(k2, cfg)
+        else:
+            p["mlp"] = ly.mlp_init(k2, cfg)
+        return p
+    if cfg.family == "ssm":       # rwkv6
+        k1, _ = jax.random.split(key)
+        return {
+            "norm1": ly.rmsnorm_init(cfg),
+            "rwkv": rwkv6.rwkv_init(k1, cfg),
+            "norm2": ly.rmsnorm_init(cfg),
+        }
+    if cfg.family == "hybrid":    # mamba2 blocks (+ shared attn at top level)
+        k1, _ = jax.random.split(key)
+        return {
+            "norm1": ly.rmsnorm_init(cfg),
+            "mamba": mamba2.mamba_init(k1, cfg),
+        }
+    raise ValueError(cfg.family)
+
+
+def init_params(key, cfg: ModelConfig):
+    keys = jax.random.split(key, 4)
+    layer_keys = jax.random.split(keys[0], cfg.n_layers)
+    params = {
+        "embed": ly.embed_init(keys[1], cfg),
+        "layers": jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys),
+        "final_norm": ly.rmsnorm_init(cfg),
+    }
+    if cfg.family == "hybrid" and cfg.attn_every:
+        k1, k2 = jax.random.split(keys[2])
+        params["shared_attn"] = {
+            "norm1": ly.rmsnorm_init(cfg),
+            "attn": att.attn_init(k1, cfg),
+            "norm2": ly.rmsnorm_init(cfg),
+            "mlp": ly.mlp_init(k2, cfg),
+        }
+    if cfg.frontend != "none":
+        params["frontend"] = ly.frontend_project_init(
+            keys[3], cfg, frontend_dim=frontend_dim(cfg)
+        )
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree — no allocation (dry-run path)."""
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def frontend_dim(cfg: ModelConfig) -> int:
+    return {"vision_stub": 1024, "audio_stub": 128}.get(cfg.frontend, 0)
+
+
+# ---------------------------------------------------------------------------
+# input embedding
+# ---------------------------------------------------------------------------
+
+
+def _embed_input(params, batch, cfg: ModelConfig):
+    if cfg.frontend != "none" and "embeds" in batch:
+        return ly.frontend_project(params["frontend"], batch["embeds"], cfg)
+    return ly.embed(params["embed"], batch["tokens"], cfg)
+
+
+def _hybrid_sites(cfg: ModelConfig):
+    """Layer indices after which the shared attention block runs."""
+    if not cfg.attn_every:
+        return ()
+    return tuple(range(cfg.attn_every - 1, cfg.n_layers, cfg.attn_every))
+
+
+# ---------------------------------------------------------------------------
+# forward (training)
+# ---------------------------------------------------------------------------
+
+
+def _remat(fn, cfg: ModelConfig):
+    """Apply the configured rematerialization policy to a layer body."""
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn, prevent_cse=False)
+
+
+def _maybe_precast(tree, cfg: ModelConfig):
+    """§Perf lever: cast fp32 master params to the compute dtype ONCE, outside
+    the layer scan, so FSDP weight all-gathers inside the scan move bf16 (half
+    the collective bytes). Baseline (off) gathers fp32 then casts per layer."""
+    if not cfg.precast_params:
+        return tree
+    dt = jnp.dtype(cfg.compute_dtype)
+    return jax.tree.map(
+        lambda a: a.astype(dt) if a.dtype == jnp.float32 else a, tree)
+
+
+def forward(params, batch, cfg: ModelConfig):
+    """Returns (logits [B, S, vocab] fp32, aux dict)."""
+    from repro.parallel import constraints as con
+
+    h = _embed_input(params, batch, cfg)
+    h = con.hidden(h, cfg)
+    b, s, _ = h.shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    params = dict(params, layers=_maybe_precast(params["layers"], cfg))
+    if "shared_attn" in params:
+        params = dict(params,
+                      shared_attn=_maybe_precast(params["shared_attn"], cfg))
+
+    if cfg.family in ("dense", "moe"):
+        def body(carry, lp):
+            x, aux = carry
+            y = att.attn_forward(lp["attn"], ly.rmsnorm(lp["norm1"], x), cfg, pos)
+            x = con.hidden(x + y, cfg)
+            if cfg.family == "moe":
+                y2, a = moe.moe_apply(lp["moe"], ly.rmsnorm(lp["norm2"], x), cfg)
+                aux = aux + a
+            else:
+                y2 = ly.mlp(lp["mlp"], ly.rmsnorm(lp["norm2"], x), cfg)
+            return (con.hidden(x + y2, cfg), aux), None
+
+        body = _remat(body, cfg)
+        (h, aux_loss), _ = jax.lax.scan(body, (h, jnp.float32(0.0)),
+                                        params["layers"])
+        aux = {"moe_aux": aux_loss / max(cfg.n_layers, 1)}
+
+    elif cfg.family == "ssm":
+        def body(carry, lp):
+            x, aux = carry
+            y, _, _ = rwkv6.time_mix_chunked(
+                lp["rwkv"], ly.rmsnorm(lp["norm1"], x), cfg, chunk=RWKV_CHUNK)
+            x = x + y
+            y2, _ = rwkv6.channel_mix(lp["rwkv"], ly.rmsnorm(lp["norm2"], x), cfg)
+            return (x + y2, aux), None
+
+        body = _remat(body, cfg)
+        (h, _), _ = jax.lax.scan(body, (h, jnp.float32(0.0)), params["layers"])
+        aux = {}
+
+    elif cfg.family == "hybrid":
+        sites = set(_hybrid_sites(cfg))
+
+        def mamba_layer(x, lp):
+            y, _, _ = mamba2.ssd_chunked(
+                lp["mamba"], ly.rmsnorm(lp["norm1"], x), cfg, chunk=SSD_CHUNK)
+            return x + y
+
+        def shared_block(x):
+            sp = params["shared_attn"]
+            x = x + att.attn_forward(sp["attn"], ly.rmsnorm(sp["norm1"], x), cfg, pos)
+            return x + ly.mlp(sp["mlp"], ly.rmsnorm(sp["norm2"], x), cfg)
+
+        mamba_layer = _remat(mamba_layer, cfg)
+        shared_block = _remat(shared_block, cfg)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a, i=i: a[i], params["layers"])
+            h = mamba_layer(h, lp)
+            if i in sites:
+                h = shared_block(h)
+        aux = {}
+    else:
+        raise ValueError(cfg.family)
+
+    h = ly.rmsnorm(params["final_norm"], h)
+    return con.logits(ly.unembed(params["embed"], h, cfg), cfg), aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig, aux_weight: float = 0.01):
+    logits, aux = forward(params, batch, cfg)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1.0)
+    total = loss + aux_weight * aux.get("moe_aux", 0.0)
+    return total, {"loss": loss, **aux}
+
+
+# ---------------------------------------------------------------------------
+# serve: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, cache_len: int, abstract=False):
+    """Empty decode cache pytree for this family."""
+    mk = (lambda shape, dtype: jax.ShapeDtypeStruct(shape, dtype)) if abstract \
+        else (lambda shape, dtype: jnp.zeros(shape, dtype))
+    cdt = jnp.dtype(cfg.compute_dtype)
+    L, b = cfg.n_layers, batch_size
+    cache = {"pos": mk((b,), jnp.int32)}
+    if cfg.family in ("dense", "moe"):
+        eff = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+        cache["k"] = mk((L, b, eff, cfg.n_kv_heads, cfg.head_dim), cdt)
+        cache["v"] = mk((L, b, eff, cfg.n_kv_heads, cfg.head_dim), cdt)
+    elif cfg.family == "ssm":
+        p = cfg.ssm_head_dim
+        nh = cfg.d_model // p
+        cache["S"] = mk((L, b, nh, p, p), jnp.float32)
+        cache["x_att"] = mk((L, b, cfg.d_model), cdt)
+        cache["x_cm"] = mk((L, b, cfg.d_model), cdt)
+    elif cfg.family == "hybrid":
+        d_inner, p, nh, n = mamba2.mamba_dims(cfg)
+        conv_ch = d_inner + 2 * n
+        cache["h"] = mk((L, b, nh, p, n), jnp.float32)
+        cache["conv"] = mk((L, b, mamba2.CONV_W - 1, conv_ch), cdt)
+        n_sites = len(_hybrid_sites(cfg))
+        eff = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+        cache["k"] = mk((max(n_sites, 1), b, eff, cfg.n_kv_heads, cfg.head_dim), cdt)
+        cache["v"] = mk((max(n_sites, 1), b, eff, cfg.n_kv_heads, cfg.head_dim), cdt)
+    return cache
+
+
+def prefill(params, batch, cfg: ModelConfig, cache_len: int):
+    """Run the prompt, return (last-token logits [B, vocab], cache)."""
+    from repro.parallel import constraints as con
+
+    h = _embed_input(params, batch, cfg)
+    h = con.hidden(h, cfg)
+    b, s, _ = h.shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    cache = init_cache(cfg, b, cache_len)
+    cache["pos"] = jnp.full((b,), s, jnp.int32)
+    params = dict(params, layers=_maybe_precast(params["layers"], cfg))
+    if "shared_attn" in params:
+        params = dict(params,
+                      shared_attn=_maybe_precast(params["shared_attn"], cfg))
+
+    if cfg.family in ("dense", "moe"):
+        def body(x, lp):
+            y, (ck, cv) = att.attn_prefill(
+                lp["attn"], ly.rmsnorm(lp["norm1"], x), cfg, pos, cache_len)
+            x = con.hidden(x + y, cfg)
+            if cfg.family == "moe":
+                y2, _ = moe.moe_apply(lp["moe"], ly.rmsnorm(lp["norm2"], x), cfg)
+            else:
+                y2 = ly.mlp(lp["mlp"], ly.rmsnorm(lp["norm2"], x), cfg)
+            return con.hidden(x + y2, cfg), (ck, cv)
+
+        h, (ks, vs) = jax.lax.scan(body, h, params["layers"])
+        cache["k"], cache["v"] = ks, vs
+
+    elif cfg.family == "ssm":
+        def body(x, lp):
+            y, S, xa = rwkv6.time_mix_chunked(
+                lp["rwkv"], ly.rmsnorm(lp["norm1"], x), cfg, chunk=RWKV_CHUNK)
+            x = x + y
+            xn = ly.rmsnorm(lp["norm2"], x)
+            y2, xc = rwkv6.channel_mix(lp["rwkv"], xn, cfg)
+            return x + y2, (S, xa, xc)
+
+        h, (S, xa, xc) = jax.lax.scan(body, h, params["layers"])
+        cache["S"], cache["x_att"], cache["x_cm"] = S, xa, xc
+
+    elif cfg.family == "hybrid":
+        sites = _hybrid_sites(cfg)
+        hs, convs, ks, vs = [], [], [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a, i=i: a[i], params["layers"])
+            y, hstate, cstate = mamba2.ssd_chunked(
+                lp["mamba"], ly.rmsnorm(lp["norm1"], h), cfg, chunk=SSD_CHUNK)
+            h = h + y
+            hs.append(hstate)
+            convs.append(cstate)
+            if i in sites:
+                sp = params["shared_attn"]
+                y, (ck, cv) = att.attn_prefill(
+                    sp["attn"], ly.rmsnorm(sp["norm1"], h), cfg, pos, cache_len)
+                h = h + y
+                h = h + ly.mlp(sp["mlp"], ly.rmsnorm(sp["norm2"], h), cfg)
+                ks.append(ck)
+                vs.append(cv)
+        cache["h"] = jnp.stack(hs)
+        cache["conv"] = jnp.stack(convs)
+        if ks:
+            cache["k"], cache["v"] = jnp.stack(ks), jnp.stack(vs)
+
+    h = ly.rmsnorm(params["final_norm"], h)
+    logits = ly.unembed(params["embed"], h[:, -1:], cfg)
+    return logits[:, 0], cache
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    """One token for every sequence. tokens: int32[B, 1].
+    Returns (logits [B, vocab] fp32, updated cache)."""
+    h = ly.embed(params["embed"], tokens, cfg)
+    b = tokens.shape[0]
+    pos = cache["pos"]
+    params = dict(params, layers=_maybe_precast(params["layers"], cfg))
+    if "shared_attn" in params:
+        params = dict(params,
+                      shared_attn=_maybe_precast(params["shared_attn"], cfg))
+
+    if cfg.family in ("dense", "moe"):
+        def body(x, inputs):
+            lp, ck, cv = inputs
+            y, (ck, cv) = att.attn_decode(
+                lp["attn"], ly.rmsnorm(lp["norm1"], x), cfg, ck, cv, pos)
+            x = x + y
+            if cfg.family == "moe":
+                y2, _ = moe.moe_apply(lp["moe"], ly.rmsnorm(lp["norm2"], x), cfg)
+            else:
+                y2 = ly.mlp(lp["mlp"], ly.rmsnorm(lp["norm2"], x), cfg)
+            return x + y2, (ck, cv)
+
+        h, (ks, vs) = jax.lax.scan(body, h, (params["layers"], cache["k"],
+                                             cache["v"]))
+        cache = dict(cache, k=ks, v=vs)
+
+    elif cfg.family == "ssm":
+        def body(x, inputs):
+            lp, S, xa, xc = inputs
+            y, S2, xa2 = rwkv6.time_mix(
+                lp["rwkv"], ly.rmsnorm(lp["norm1"], x), cfg, state=S, x_prev_in=xa)
+            x = x + y
+            xn = ly.rmsnorm(lp["norm2"], x)
+            y2, xc2 = rwkv6.channel_mix(lp["rwkv"], xn, cfg, x_prev_in=xc)
+            return x + y2, (S2, xa2, xc2)
+
+        h, (S, xa, xc) = jax.lax.scan(
+            body, h, (params["layers"], cache["S"], cache["x_att"], cache["x_cm"]))
+        cache = dict(cache, S=S, x_att=xa, x_cm=xc)
+
+    elif cfg.family == "hybrid":
+        sites = _hybrid_sites(cfg)
+        hs, convs, ks, vs = [], [], [], []
+        si = 0
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a, i=i: a[i], params["layers"])
+            y, hstate, cstate = mamba2.ssd_scan(
+                lp["mamba"], ly.rmsnorm(lp["norm1"], h), cfg,
+                state=cache["h"][i], conv_state=cache["conv"][i])
+            h = h + y
+            hs.append(hstate)
+            convs.append(cstate)
+            if i in sites:
+                sp = params["shared_attn"]
+                y, (ck, cv) = att.attn_decode(
+                    sp["attn"], ly.rmsnorm(sp["norm1"], h), cfg,
+                    cache["k"][si], cache["v"][si], pos)
+                h = h + y
+                h = h + ly.mlp(sp["mlp"], ly.rmsnorm(sp["norm2"], h), cfg)
+                ks.append(ck)
+                vs.append(cv)
+                si += 1
+        cache = dict(cache, h=jnp.stack(hs), conv=jnp.stack(convs))
+        if ks:
+            cache = dict(cache, k=jnp.stack(ks), v=jnp.stack(vs))
+
+    h = ly.rmsnorm(params["final_norm"], h)
+    logits = ly.unembed(params["embed"], h, cfg)
+    cache = dict(cache, pos=pos + 1)
+    return logits[:, 0], cache

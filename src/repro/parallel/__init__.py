@@ -1,0 +1,14 @@
+from repro.parallel.sharding import (
+    DATA_AXES, MODEL_AXIS, param_shardings, batch_shardings, cache_shardings,
+    divisible, best_effort_spec,
+)
+from repro.parallel.pipeline import (
+    pipeline_forward, sequential_reference, split_stages, pad_layers_identity,
+)
+
+__all__ = [
+    "DATA_AXES", "MODEL_AXIS", "param_shardings", "batch_shardings",
+    "cache_shardings", "divisible", "best_effort_spec",
+    "pipeline_forward", "sequential_reference", "split_stages",
+    "pad_layers_identity",
+]

@@ -1,0 +1,60 @@
+"""Activation sharding constraints (§Perf lever: shard_activations).
+
+GSPMD propagates parameter shardings outward, but leaves several big
+intermediates replicated when propagation is ambiguous (measured in the baseline
+dry-run: the embedding gather triggers "involuntary full rematerialization" and
+the residual stream replicates at layer boundaries — mixtral prefill peaked at
+643 GiB/device). Pinning the residual stream and the MoE expert buffer with
+explicit constraints resolves the ambiguity.
+
+The helpers no-op when the config carries no mesh axes (CPU tests, smoke runs),
+so models stay mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def _wsc(x, spec: P):
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):   # no ambient mesh (plain CPU execution)
+        return x
+
+
+def hidden(x, cfg: ModelConfig):
+    """Residual stream [B, S, d]: batch over the data axes, d replicated
+    (megatron-style: TP lives inside attn/mlp bodies, not on the stream)."""
+    if not cfg.shard_activations or not cfg.dp_axes:
+        return x
+    dp = tuple(cfg.dp_axes)
+    return _wsc(x, P(dp if len(dp) > 1 else dp[0], None, None))
+
+
+def expert_buffer(he, cfg: ModelConfig):
+    """MoE gathered buffer [B, E, cap, d]: batch over data axes ONLY.
+
+    Measured (§Perf, olmoe iterations 2-3): sharding E here forces the token
+    scatter that BUILDS the buffer to cross the model axis — GSPMD emits an
+    order of magnitude more collective traffic than it saves. Keeping the
+    buffer batch-sharded and letting the expert einsums contract against
+    model-sharded expert weights (EP lives on the weights) is strictly
+    better."""
+    if not cfg.shard_activations or not cfg.dp_axes:
+        return he
+    dp = tuple(cfg.dp_axes)
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    return _wsc(he, P(dp_spec, None, None, None))
+
+
+def logits(x, cfg: ModelConfig):
+    """LM head output [B, S, V]: batch over data, vocab over TP."""
+    if not cfg.shard_activations or not cfg.dp_axes:
+        return x
+    dp = tuple(cfg.dp_axes)
+    tp = cfg.tp_axis or None
+    return _wsc(x, P(dp if len(dp) > 1 else dp[0], None, tp))

@@ -1,0 +1,220 @@
+"""Sharding rules: FSDP + TP + EP + SP over the (pod, data, model) mesh.
+
+Strategy (DESIGN.md §6):
+  * params: tensor-parallel on the "model" axis (attention heads / d_ff / experts)
+    AND fully-sharded (ZeRO-3 / FSDP) on the ("pod", "data") axes — the per-layer
+    all-gather of FSDP weights inside the scanned layer body is the paper's Chunk2
+    streaming order (weights streamed through fast memory, activations stationary).
+  * batch: data-parallel over ("pod", "data").
+  * KV caches: batch on data axes, KV heads on "model" when they divide, else the
+    sequence axis on "model" (SP — used by long_500k where batch=1).
+  * every rule is divisibility-checked: an axis that does not divide its dimension
+    is dropped (e.g. starcoder2's kv=4 heads on a 16-way model axis -> replicated,
+    the GSPMD-standard fallback for narrow KV).
+
+All functions work on abstract (ShapeDtypeStruct) pytrees — nothing allocates.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+DATA_AXES = ("pod", "data")   # flattened into FSDP/DP when "pod" exists
+MODEL_AXIS = "model"
+
+
+def _mesh_axes(mesh: Mesh):
+    names = mesh.axis_names
+    data = tuple(a for a in DATA_AXES if a in names)
+    model = MODEL_AXIS if MODEL_AXIS in names else None
+    return data, model
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def divisible(dim: int, mesh: Mesh, axes) -> bool:
+    return dim % max(_axis_size(mesh, axes), 1) == 0
+
+
+def best_effort_spec(shape, mesh: Mesh, wanted) -> P:
+    """Build a PartitionSpec, dropping axis assignments that don't divide."""
+    out = []
+    for dim, axes in zip(shape, wanted):
+        if axes is not None and divisible(dim, mesh, axes):
+            out.append(axes)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+
+def _param_rule(path: tuple, leaf, cfg: ModelConfig, mesh: Mesh,
+                fsdp, model) -> P:
+    """Map one parameter (by its pytree path) to a PartitionSpec.
+
+    Layer-stacked leaves carry a leading L dim (never sharded). ``fsdp`` is the
+    combined data axes tuple; ``model`` the TP axis name (or None).
+    """
+    names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+    key = names[-1]
+    stacked = "layers" in names
+    shape = leaf.shape
+    body = shape[1:] if stacked else shape
+
+    def spec(*wanted):
+        s = best_effort_spec(body, mesh, wanted)
+        return P(*((None,) + tuple(s))) if stacked else s
+
+    # --- embeddings ---------------------------------------------------------
+    if key == "embedding":
+        return spec(model, fsdp)
+    if key == "head":
+        return spec(fsdp, model)
+    if key == "proj":          # frontend stub projector
+        return spec(fsdp, model)
+
+    # --- attention ----------------------------------------------------------
+    if key == "wq":
+        return spec(fsdp, model, None)
+    if key in ("wk", "wv") and "attn" in names:
+        return spec(fsdp, model, None)     # kv heads sharded only if divisible
+    if key == "wo" and "attn" in names:
+        return spec(model, None, fsdp)
+
+    # --- dense MLP ----------------------------------------------------------
+    if key in ("w1", "w3") and len(body) == 2:
+        return spec(fsdp, model)
+    if key == "w2" and len(body) == 2:
+        return spec(model, fsdp)
+
+    # --- MoE (experts on the model axis = EP) ---------------------------------
+    if key == "router":
+        return spec(fsdp, None)
+    if key in ("w1", "w3") and len(body) == 3:
+        return spec(model, fsdp, None)
+    if key == "w2" and len(body) == 3:
+        return spec(model, None, fsdp)
+
+    # --- rwkv6 ----------------------------------------------------------------
+    if key in ("wr", "wk", "wv", "wg") and "rwkv" in names:
+        return spec(fsdp, model)
+    if key == "wo" and "rwkv" in names:
+        return spec(model, fsdp)
+    if key in ("cm_k",):
+        return spec(fsdp, model)
+    if key in ("cm_v",):
+        return spec(model, fsdp)
+    if key in ("cm_r",):
+        return spec(fsdp, model)
+
+    # --- mamba2 ---------------------------------------------------------------
+    if key == "in_proj":
+        return spec(fsdp, model)
+    if key == "out_proj":
+        return spec(model, fsdp)
+    if key == "conv_w":
+        return spec(None, model)
+    if key == "conv_b":
+        return spec(model)
+
+    # --- everything else (norms, loras, biases, per-head scalars) -------------
+    if len(body) >= 2:
+        return spec(*([fsdp] + [None] * (len(body) - 1)))
+    return spec(*([None] * len(body)))
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, abstract_params,
+                    tp_enabled: bool = True):
+    """NamedSharding pytree matching the abstract param pytree.
+
+    ``tp_enabled=False`` = pure-DP layout: the "model" axis joins the FSDP axes
+    instead of carrying tensor parallelism — measured in §Perf to be the right
+    mapping for small models whose TP slices would be narrower than an MXU tile
+    (olmoe's 1024-wide experts / 16 = 64)."""
+    fsdp, model = _mesh_axes(mesh)
+    if not tp_enabled and model is not None:
+        fsdp = tuple(fsdp) + (model,)
+        model = None
+    fsdp = fsdp if fsdp else None
+
+    def assign(path, leaf):
+        return NamedSharding(mesh, _param_rule(path, leaf, cfg, mesh, fsdp, model))
+
+    return jax.tree_util.tree_map_with_path(assign, abstract_params)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache rules
+# ---------------------------------------------------------------------------
+
+
+def batch_shardings(mesh: Mesh, abstract_batch, extra_axes: tuple = ()):
+    """tokens/labels/embeds: batch dim over the data axes (+ ``extra_axes`` for
+    the pure-DP layout where "model" also carries batch)."""
+    fsdp, _ = _mesh_axes(mesh)
+    fsdp = tuple(fsdp) + tuple(extra_axes) if fsdp else tuple(extra_axes) or None
+    dp = tuple(fsdp) if fsdp else None
+
+    def assign(leaf):
+        wanted = [dp] + [None] * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, best_effort_spec(leaf.shape, mesh, wanted))
+
+    return jax.tree.map(assign, abstract_batch)
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, abstract_cache):
+    """Decode caches: batch over data axes; KV heads over model when they divide,
+    else sequence-parallel (SP) over model (the long_500k batch=1 case)."""
+    fsdp, model = _mesh_axes(mesh)
+    dp = tuple(fsdp) if fsdp else None
+
+    def assign(path, leaf):
+        names = [getattr(p, "key", str(p)) for p in path]
+        key = names[-1]
+        shape = leaf.shape
+        if key in ("k", "v"):
+            # [L_or_sites, B, S, Hkv, D]
+            wanted = [None, dp, None, model, None]
+            if not divisible(shape[3], mesh, model) or shape[1] == 1:
+                # SP fallback: shard the sequence axis instead
+                wanted = [None, dp if shape[1] > 1 else None, model, None, None]
+            return NamedSharding(
+                mesh, best_effort_spec(shape, mesh, wanted[: len(shape)]))
+        if key == "S":          # rwkv state [L, B, nh, p, p]
+            wanted = [None, dp, model, None, None]
+            return NamedSharding(
+                mesh, best_effort_spec(shape, mesh, wanted[: len(shape)]))
+        if key == "h":          # mamba state [L, B, nh, P, N]
+            wanted = [None, dp, model, None, None]
+            return NamedSharding(
+                mesh, best_effort_spec(shape, mesh, wanted[: len(shape)]))
+        if key == "conv":       # [L, B, W-1, C]
+            wanted = [None, dp, None, model]
+            return NamedSharding(
+                mesh, best_effort_spec(shape, mesh, wanted[: len(shape)]))
+        if key == "pos":
+            return NamedSharding(mesh, best_effort_spec(shape, mesh, [dp]))
+        wanted = [None, dp] + [None] * (len(shape) - 2)
+        return NamedSharding(mesh, best_effort_spec(shape, mesh, wanted[: len(shape)]))
+
+    return jax.tree_util.tree_map_with_path(assign, abstract_cache)
+
+
+def replicated(mesh: Mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

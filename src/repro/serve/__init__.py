@@ -1,0 +1,3 @@
+from repro.serve.kv_planner import KVPlan, plan_kv_cache, kv_cache_bytes
+
+__all__ = ["KVPlan", "plan_kv_cache", "kv_cache_bytes"]

@@ -1,0 +1,79 @@
+"""KV-cache placement planner: the paper's DP + Algorithm 4, applied to serving.
+
+A decode step is SpGEMM-shaped: the query (A) and output (C) are tiny and
+streamed; the KV cache (B) is the big, repeatedly-gathered operand. The paper's
+decision tree maps directly:
+
+  whole_fast  — cache fits HBM alongside weights: keep it resident (all decode
+                shapes except extreme contexts land here).
+  dp          — cache fits only if something else moves: pin the cache (B) in
+                HBM, demote optimizer/aux state to host (the paper's
+                "place only B fast").
+  chunk1      — cache exceeds HBM: keep Q/O + weights resident (A,C fast),
+                stream KV chunks from host DRAM through an HBM staging buffer
+                (copy cost = cache_bytes per step -> only viable when the
+                per-step compute amortizes PCIe, i.e. huge batches) — the
+                capacity-scaling mode the paper built chunking for.
+
+The planner returns the decision + the modeled per-token overhead so serving
+code (and tests) can assert the policy, mirroring core/planner.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.memory_model import MemorySystem, TPU_V5E_HOST
+from repro.models.config import ModelConfig
+from repro.models import transformer as tf
+
+
+@dataclasses.dataclass(frozen=True)
+class KVPlan:
+    algorithm: str          # "whole_fast" | "dp" | "chunk_stream"
+    cache_bytes: float
+    weights_bytes: float
+    hbm_bytes: float
+    chunk_bytes: float      # staging chunk for chunk_stream (0 otherwise)
+    per_step_copy_s: float  # modeled extra copy time per decode step
+
+
+def kv_cache_bytes(cfg: ModelConfig, batch: int, cache_len: int) -> float:
+    """Exact bytes of the decode cache pytree (KV or SSM state)."""
+    cache = tf.init_cache(cfg, batch, cache_len, abstract=True)
+    total = 0
+    for leaf in _leaves(cache):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n * leaf.dtype.itemsize
+    return float(total)
+
+
+def _leaves(tree):
+    import jax
+
+    return jax.tree.leaves(tree)
+
+
+def plan_kv_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                  n_devices: int = 1, weights_dtype_bytes: int = 2,
+                  aux_bytes: float = 0.0,
+                  system: MemorySystem = TPU_V5E_HOST,
+                  staging_fraction: float = 0.25) -> KVPlan:
+    """Decide where the cache lives for a decode deployment.
+
+    ``n_devices`` divides both weights and cache (their sharded footprints);
+    ``aux_bytes`` is other demotable state sharing HBM."""
+    hbm = system.fast.capacity_bytes
+    weights = cfg.param_count() * weights_dtype_bytes / n_devices
+    cache = kv_cache_bytes(cfg, batch, cache_len) / n_devices
+    if weights + cache + aux_bytes <= hbm:
+        return KVPlan("whole_fast", cache, weights, hbm, 0.0, 0.0)
+    if weights + cache <= hbm:
+        # demote aux (paper's DP: the irregular operand keeps the fast memory)
+        return KVPlan("dp", cache, weights, hbm, 0.0, 0.0)
+    # stream the cache through a staging buffer (Chunk1: A/C resident)
+    chunk = max(hbm - weights, hbm * staging_fraction) * staging_fraction
+    per_step = system.copy_time(cache)   # every step touches the whole cache
+    return KVPlan("chunk_stream", cache, weights, hbm, chunk, per_step)

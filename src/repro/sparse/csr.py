@@ -1,0 +1,179 @@
+"""Static-shape padded CSR container (a JAX pytree) + conversions.
+
+Conventions (chosen so every array has a *static* shape — a JAX requirement):
+  * ``indptr``  : int32[n_rows + 1]  -- standard CSR row pointers. ``indptr[-1]`` is the
+                  true nnz; entries past it in ``indices``/``data`` are padding.
+  * ``indices`` : int32[nnz_pad]     -- column index per entry; padding entries are 0.
+  * ``data``    : dtype[nnz_pad]     -- value per entry; padding entries are 0.0.
+  * rows are contiguous (no per-row padding); all padding lives in the tail.
+  * ``shape``, ``max_row_nnz`` are static metadata (pytree aux), so jit retraces only
+    when the padded geometry changes, never per-value.
+
+``max_row_nnz`` upper-bounds the densest row and sizes the per-row expansion buffers in
+the KKMEM numeric phase (repro.core.kkmem).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("indptr", "indices", "data"),
+    meta_fields=("shape", "max_row_nnz"),
+)
+@dataclasses.dataclass(frozen=True)
+class CSR:
+    """Padded compressed-sparse-row matrix."""
+
+    indptr: jax.Array   # int32[n_rows + 1]
+    indices: jax.Array  # int32[nnz_pad]
+    data: jax.Array     # dtype[nnz_pad]
+    shape: tuple        # (n_rows, n_cols), static
+    max_row_nnz: int    # static upper bound on nnz of any row
+
+    @property
+    def n_rows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def n_cols(self) -> int:
+        return self.shape[1]
+
+    @property
+    def nnz_pad(self) -> int:
+        """Padded capacity (static)."""
+        return self.indices.shape[0]
+
+    def nnz(self):
+        """True nnz (traced value under jit; concrete int outside)."""
+        return self.indptr[-1]
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    def nbytes(self) -> int:
+        """Padded byte footprint — what a memory level must actually hold."""
+        return (
+            self.indptr.size * self.indptr.dtype.itemsize
+            + self.indices.size * self.indices.dtype.itemsize
+            + self.data.size * self.data.dtype.itemsize
+        )
+
+    def row_lengths(self) -> jax.Array:
+        return self.indptr[1:] - self.indptr[:-1]
+
+    def astype(self, dtype) -> "CSR":
+        return CSR(self.indptr, self.indices, self.data.astype(dtype), self.shape, self.max_row_nnz)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (
+            f"CSR(shape={self.shape}, nnz_pad={self.nnz_pad}, "
+            f"max_row_nnz={self.max_row_nnz}, dtype={self.dtype})"
+        )
+
+
+def csr_from_scipy_like(indptr, indices, data, shape, pad_to: int | None = None,
+                        dtype=jnp.float32) -> CSR:
+    """Build a CSR from host arrays (NumPy), padding the tail to ``pad_to``."""
+    indptr = np.asarray(indptr, dtype=np.int32)
+    indices = np.asarray(indices, dtype=np.int32)
+    data = np.asarray(data)
+    nnz = int(indptr[-1])
+    cap = int(pad_to) if pad_to is not None else nnz
+    if cap < nnz:
+        raise ValueError(f"pad_to={cap} < nnz={nnz}")
+    cap = max(cap, 1)   # zero-capacity arrays break XLA gathers downstream
+    pad = cap - nnz
+    if pad:
+        indices = np.concatenate([indices[:nnz], np.zeros(pad, np.int32)])
+        data = np.concatenate([data[:nnz], np.zeros(pad, data.dtype)])
+    else:
+        indices, data = indices[:nnz], data[:nnz]
+    row_len = indptr[1:] - indptr[:-1]
+    max_row = int(row_len.max()) if len(row_len) else 0
+    return CSR(
+        indptr=jnp.asarray(indptr),
+        indices=jnp.asarray(indices),
+        data=jnp.asarray(data, dtype=dtype),
+        shape=(int(shape[0]), int(shape[1])),
+        max_row_nnz=max_row,
+    )
+
+
+def csr_from_coo(rows, cols, vals, shape, pad_to: int | None = None, dtype=jnp.float32,
+                 sum_duplicates: bool = True) -> CSR:
+    """Host-side COO -> CSR (sorts by (row, col), optionally coalescing duplicates)."""
+    rows = np.asarray(rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+    vals = np.asarray(vals, dtype=np.float64)
+    n_rows, n_cols = int(shape[0]), int(shape[1])
+    key = rows * n_cols + cols
+    order = np.argsort(key, kind="stable")
+    key, vals = key[order], vals[order]
+    if sum_duplicates and key.size:
+        uniq, inv = np.unique(key, return_inverse=True)
+        acc = np.zeros(uniq.size, np.float64)
+        np.add.at(acc, inv, vals)
+        key, vals = uniq, acc
+    out_rows = key // n_cols
+    out_cols = key % n_cols
+    indptr = np.zeros(n_rows + 1, np.int64)
+    np.add.at(indptr, out_rows + 1, 1)
+    indptr = np.cumsum(indptr)
+    return csr_from_scipy_like(indptr, out_cols, vals, (n_rows, n_cols), pad_to, dtype)
+
+
+def csr_from_dense(dense, pad_to: int | None = None) -> CSR:
+    """Host-side dense -> CSR."""
+    dense = np.asarray(dense)
+    rows, cols = np.nonzero(dense)
+    return csr_from_coo(rows, cols, dense[rows, cols], dense.shape, pad_to,
+                        dtype=jnp.asarray(dense).dtype, sum_duplicates=False)
+
+
+def csr_to_dense(m: CSR) -> jax.Array:
+    """JAX-traceable densify (scatter-add; padding entries carry data==0 so they only
+    ever add zero into column 0)."""
+    n_rows, n_cols = m.shape
+    entry = jnp.arange(m.nnz_pad, dtype=jnp.int32)
+    row = jnp.searchsorted(m.indptr, entry, side="right") - 1
+    row = jnp.clip(row, 0, n_rows - 1)
+    dense = jnp.zeros((n_rows, n_cols), m.dtype)
+    return dense.at[row, m.indices].add(m.data)
+
+
+def csr_row_of_entry(m: CSR) -> jax.Array:
+    """Row id of every padded entry (padding maps to the last row; its data is 0)."""
+    entry = jnp.arange(m.nnz_pad, dtype=jnp.int32)
+    row = jnp.searchsorted(m.indptr, entry, side="right") - 1
+    return jnp.clip(row, 0, m.n_rows - 1).astype(jnp.int32)
+
+
+def csr_select_rows_host(m: CSR, r0: int, r1: int, pad_to: int | None = None) -> CSR:
+    """Host-side row slice m[r0:r1, :] as a new CSR (used by chunk planners/tests)."""
+    indptr = np.asarray(m.indptr)
+    indices = np.asarray(m.indices)
+    data = np.asarray(m.data)
+    s, e = int(indptr[r0]), int(indptr[r1])
+    new_ptr = indptr[r0 : r1 + 1] - s
+    return csr_from_scipy_like(new_ptr, indices[s:e], data[s:e], (r1 - r0, m.shape[1]),
+                               pad_to, dtype=m.dtype)
+
+
+def csr_transpose_host(m: CSR, pad_to: int | None = None) -> CSR:
+    """Host-side transpose (multigrid P = R^T)."""
+    indptr = np.asarray(m.indptr)
+    indices = np.asarray(m.indices)
+    data = np.asarray(m.data)
+    nnz = int(indptr[-1])
+    rows = np.repeat(np.arange(m.n_rows), indptr[1:] - indptr[:-1])
+    return csr_from_coo(indices[:nnz], rows, data[:nnz], (m.shape[1], m.shape[0]),
+                        pad_to, dtype=m.dtype, sum_duplicates=False)

@@ -1,0 +1,9 @@
+from repro.train.optim import adamw_init, adamw_update, TrainConfig, lr_schedule
+from repro.train.compress import compress_grads, decompress_grads, ef_init
+from repro.train.step import make_train_step, make_serve_step, make_prefill
+
+__all__ = [
+    "adamw_init", "adamw_update", "TrainConfig", "lr_schedule",
+    "compress_grads", "decompress_grads", "ef_init",
+    "make_train_step", "make_serve_step", "make_prefill",
+]

@@ -1,0 +1,60 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 symmetric quantization per tensor before the cross-replica reduction, with an
+error-feedback buffer that re-injects the quantization residual into the next
+step's gradient — keeping convergence within O(quantization noise) of exact SGD
+(Seide et al. / Karimireddy et al.). At 512 chips the gradient all-reduce crosses
+the slow inter-pod links once per step; int8 cuts that traffic 4x vs fp32 (2x vs
+bf16), directly shrinking the §Roofline collective term of train shapes.
+
+Enabled by TrainConfig(grad_compression="int8").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(params):
+    """Error-feedback buffers (zero residuals), matching the param pytree."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quant(g):
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, ef):
+    """Returns (quantized pytree of (int8, scale), new error-feedback buffers)."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = _quant(g32)
+        err = g32 - _dequant(q, s)
+        return (q, s), err
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(ef)
+    pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    qtree = jax.tree.unflatten(treedef, [p[0] for p in pairs])
+    ef2 = jax.tree.unflatten(treedef, [p[1] for p in pairs])
+    return qtree, ef2
+
+
+def decompress_grads(qtree):
+    def is_pair(x):
+        return isinstance(x, tuple) and len(x) == 2
+    return jax.tree.map(lambda p: _dequant(*p), qtree, is_leaf=is_pair)
+
+
+def roundtrip(grads, ef):
+    """compress -> decompress in one step (what the reduction endpoint sees)."""
+    q, ef2 = compress_grads(grads, ef)
+    return decompress_grads(q), ef2

@@ -1,0 +1,81 @@
+"""AdamW with cosine schedule + global-norm clipping (self-contained, no optax).
+
+Optimizer states mirror the parameter pytree, so they inherit the FSDP/TP param
+shardings (ZeRO-style sharded optimizer state for free).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    min_lr_fraction: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    microbatches: int = 1
+    grad_compression: str = "none"    # "none" | "int8"
+    aux_weight: float = 0.01
+
+
+def lr_schedule(tcfg: TrainConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(tcfg.warmup_steps, 1)
+    t = (step - tcfg.warmup_steps) / jnp.maximum(
+        tcfg.total_steps - tcfg.warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = tcfg.min_lr_fraction + (1 - tcfg.min_lr_fraction) * 0.5 * (
+        1 + jnp.cos(jnp.pi * t))
+    return tcfg.learning_rate * jnp.where(step < tcfg.warmup_steps, warm, cos)
+
+
+def adamw_init(params):
+    return {
+        "mu": jax.tree.map(jnp.zeros_like, params),
+        "nu": jax.tree.map(jnp.zeros_like, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree.map(lambda g: jnp.sum(g.astype(jnp.float32) ** 2), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq, jnp.float32(0.0)))
+
+
+def adamw_update(tcfg: TrainConfig, params, grads, opt_state):
+    """One AdamW step. Returns (params, opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = lr_schedule(tcfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, tcfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu2 = tcfg.beta1 * mu + (1 - tcfg.beta1) * g
+        nu2 = tcfg.beta2 * nu + (1 - tcfg.beta2) * g * g
+        mu_hat = mu2 / (1 - tcfg.beta1 ** step.astype(jnp.float32))
+        nu_hat = nu2 / (1 - tcfg.beta2 ** step.astype(jnp.float32))
+        delta = mu_hat / (jnp.sqrt(nu_hat) + tcfg.eps)
+        p2 = p.astype(jnp.float32) * (1 - lr * tcfg.weight_decay) - lr * delta
+        return p2.astype(p.dtype), mu2.astype(mu.dtype), nu2.astype(nu.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(opt_state["mu"])
+    flat_nu = treedef.flatten_up_to(opt_state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    params2 = jax.tree.unflatten(treedef, [o[0] for o in out])
+    mu2 = jax.tree.unflatten(treedef, [o[1] for o in out])
+    nu2 = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return params2, {"mu": mu2, "nu": nu2, "step": step}, {
+        "grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,102 @@
+"""train_step / serve_step factories: microbatch gradient accumulation, optional
+gradient compression, AdamW — the functions the launcher jits and the dry-run
+lowers.
+
+Microbatching: the global batch is reshaped to (n_micro, B/n_micro, S) and
+scanned; gradients accumulate in fp32 across microbatches, and the (FSDP)
+gradient reduction materializes once per step, after the scan — the reduce-once
+overlap trick (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import transformer as tf
+from repro.train.optim import TrainConfig, adamw_update
+from repro.train.compress import roundtrip
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``opt_state`` carries {"mu", "nu", "step"} (+ "ef" when compression is on).
+    """
+    use_ef = tcfg.grad_compression == "int8"
+
+    def loss_for(p, mb):
+        return tf.loss_fn(p, mb, cfg, aux_weight=tcfg.aux_weight)
+
+    def train_step(params, opt_state, batch):
+        n_micro = tcfg.microbatches
+        if n_micro == 1:
+            (loss, _), grads = jax.value_and_grad(loss_for, has_aux=True)(
+                params, batch)
+        else:
+            def resh(x):
+                return x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:])
+
+            mbatch = jax.tree.map(resh, batch)
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss_for, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(acc, (g0, jnp.float32(0.0)), mbatch)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss / n_micro
+
+        if use_ef:
+            grads, ef2 = roundtrip(grads, opt_state["ef"])
+        params2, opt2, om = adamw_update(
+            tcfg, params,
+            grads,
+            {k: opt_state[k] for k in ("mu", "nu", "step")},
+        )
+        if use_ef:
+            opt2 = dict(opt2, ef=ef2)
+        metrics = {"loss": loss, **om}
+        return params2, opt2, metrics
+
+    return train_step
+
+
+def init_opt_state(cfg: ModelConfig, tcfg: TrainConfig, params):
+    from repro.train.optim import adamw_init
+    from repro.train.compress import ef_init
+
+    state = adamw_init(params)
+    if tcfg.grad_compression == "int8":
+        state["ef"] = ef_init(params)
+    return state
+
+
+def abstract_opt_state(cfg: ModelConfig, tcfg: TrainConfig, abstract_params):
+    return jax.eval_shape(lambda p: init_opt_state(cfg, tcfg, p), abstract_params)
+
+
+def make_prefill(cfg: ModelConfig, cache_len: int):
+    def prefill_fn(params, batch):
+        return tf.prefill(params, batch, cfg, cache_len)
+
+    return prefill_fn
+
+
+def make_serve_step(cfg: ModelConfig, greedy: bool = True):
+    """serve_step(params, cache, tokens[B,1]) -> (next_tokens[B,1], cache).
+
+    One new token against the full KV cache — what decode_* shape cells lower."""
+
+    def serve_step(params, cache, tokens):
+        logits, cache = tf.decode_step(params, cache, tokens, cfg)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt[:, None], cache
+
+    return serve_step

@@ -1,0 +1,129 @@
+"""Chunk executors (Algs 1-3) + planner (Alg 4): correctness and cost properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.kkmem import spgemm_symbolic_host, spgemm_dense_oracle
+from repro.core.planner import (
+    plan_chunks, plan_knl, binary_search_partition, partition_cost, row_bytes_csr,
+)
+from repro.core.chunking import chunked_spgemm, chunk_knl, chunk_gpu1, chunk_gpu2
+from repro.core.memory_model import P100, KNL
+from repro.sparse import multigrid
+from repro.sparse.csr import csr_to_dense
+from conftest import random_csr, assert_close
+
+
+@pytest.fixture(scope="module")
+def problem():
+    A, R, P = multigrid.problem("brick3d", 5)
+    return A, P
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(1, 500), min_size=1, max_size=60),
+       st.floats(1.0, 2000.0))
+def test_binary_search_partition_properties(row_bytes, target):
+    rb = np.asarray(row_bytes, np.float64)
+    bounds = binary_search_partition(rb, target)
+    assert bounds[0] == 0 and bounds[-1] == len(row_bytes)
+    assert list(bounds) == sorted(set(bounds))
+    for s, e in zip(bounds[:-1], bounds[1:]):
+        size = rb[s:e].sum()
+        # each chunk fits, unless it is a single oversized row
+        assert size <= target or (e - s) == 1
+
+
+def test_knl_chunking_matches_oracle(problem):
+    A, P = problem
+    ref = np.asarray(spgemm_dense_oracle(A, P))
+    for frac in (0.6, 0.34, 0.15):
+        plan = plan_knl(A, P, fast_limit_bytes=P.nbytes() * frac)
+        assert plan.n_b >= 2
+        C, stats = chunked_spgemm(A, P, plan)
+        assert_close(csr_to_dense(C), ref, atol=1e-4)
+        assert stats.kernel_calls == plan.n_b
+
+
+@pytest.mark.parametrize("algorithm", ["chunk1", "chunk2"])
+def test_gpu_chunking_matches_oracle(problem, algorithm):
+    A, P = problem
+    ws = spgemm_symbolic_host(A, P)
+    ref = np.asarray(spgemm_dense_oracle(A, P))
+    crb = np.full(A.n_rows, max(ws.c_nnz / A.n_rows, 1.0) * 12)
+    tiny = (A.nbytes() + P.nbytes() + float(crb.sum())) / 5
+    plan = plan_chunks(A, P, crb, P100, fast_limit_bytes=tiny)
+    plan = type(plan)(algorithm, plan.p_ac, plan.p_b, plan.copy_bytes,
+                      plan.fast_bytes_needed)
+    fn = chunk_gpu1 if algorithm == "chunk1" else chunk_gpu2
+    C, stats = fn(A, P, plan, c_pad=ws.c_pad)
+    assert_close(csr_to_dense(C), ref, atol=1e-4)
+    assert stats.kernel_calls == plan.n_ac * plan.n_b
+
+
+def test_both_orders_same_result(problem, rng):
+    """Chunk1 and Chunk2 stream in different orders but must agree exactly."""
+    A, P = problem
+    ws = spgemm_symbolic_host(A, P)
+    crb = np.full(A.n_rows, 12.0)
+    plan = plan_chunks(A, P, crb, P100,
+                       fast_limit_bytes=(A.nbytes() + P.nbytes()) / 4)
+    c1, _ = chunk_gpu1(A, P, plan, c_pad=ws.c_pad)
+    c2, _ = chunk_gpu2(A, P, plan, c_pad=ws.c_pad)
+    assert_close(csr_to_dense(c1), csr_to_dense(c2), atol=1e-5)
+
+
+def test_planner_whole_fast_when_it_fits(problem):
+    A, P = problem
+    crb = np.full(A.n_rows, 12.0)
+    plan = plan_chunks(A, P, crb, P100, fast_limit_bytes=1e12)
+    assert plan.algorithm == "whole_fast"
+    assert plan.n_ac == 1 and plan.n_b == 1
+
+
+def test_planner_prefers_resident_b(problem):
+    """Alg 4: when B fits in the big portion, B stays resident (chunk2)."""
+    A, P = problem
+    crb = np.full(A.n_rows, 12.0)
+    # use the planner's own byte convention (row_bytes_csr = 12 B/entry)
+    size_a = float(row_bytes_csr(A).sum())
+    size_b = float(row_bytes_csr(P).sum())
+    fast = size_b / 0.7   # B fits in the 75% portion
+    assert size_a + size_b + crb.sum() > fast  # whole problem does not fit
+    plan = plan_chunks(A, P, crb, P100, fast_limit_bytes=fast)
+    assert plan.algorithm == "chunk2"
+    assert plan.n_b == 1
+
+
+def test_planner_picks_cheaper_order(problem):
+    """When 2-D chunking is forced, Alg 4 must choose the order with the lower
+    modeled copy cost (in the planner's own byte units)."""
+    A, P = problem
+    crb = np.full(A.n_rows, 12.0)
+    size_a = float(row_bytes_csr(A).sum())
+    size_b = float(row_bytes_csr(P).sum())
+    size_c = float(crb.sum())
+    tiny = (size_a + size_b + size_c) / 6
+    plan = plan_chunks(A, P, crb, P100, fast_limit_bytes=tiny)
+    c1 = partition_cost(size_a, size_b, size_c, plan.n_ac, plan.n_b, "chunk1")
+    c2 = partition_cost(size_a, size_b, size_c, plan.n_ac, plan.n_b, "chunk2")
+    assert plan.copy_bytes == min(c1, c2)
+    assert plan.algorithm == ("chunk1" if c1 <= c2 else "chunk2")
+
+
+def test_copy_cost_formulas():
+    # paper §3.3.1:  chunk1 = |A|+|C|+|B|*n_ac ; chunk2 = |B|+|A|*n_b+|C|*(n_b-1)
+    assert partition_cost(10, 20, 5, 3, 4, "chunk1") == 10 + 5 + 20 * 3
+    assert partition_cost(10, 20, 5, 3, 4, "chunk2") == 20 + 10 * 4 + 5 * 3
+
+
+def test_chunk_stats_track_copies(problem):
+    """Actual staged bytes scale with the planned partition counts."""
+    A, P = problem
+    ws = spgemm_symbolic_host(A, P)
+    plan = plan_knl(A, P, fast_limit_bytes=P.nbytes() / 3)
+    _, stats = chunk_knl(A, P, plan, ws.c_pad)
+    # B is staged exactly once in total (row-chunks are disjoint), up to padding
+    assert stats.copy_in_bytes >= P.nbytes() * 0.9
+    assert stats.copy_in_bytes <= P.nbytes() * plan.n_b  # padding slack bound

@@ -1,0 +1,158 @@
+"""Pallas kernel sweeps (interpret=True) against the pure-jnp oracles.
+
+Per instructions: sweep shapes/dtypes and assert_allclose against ref.py."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.sparse.bsr import bsr_from_dense, bsr_to_dense
+from repro.kernels import ops, ref
+from conftest import random_dense, assert_close
+
+
+def sprand_bsr(rng, m, n, density, bs, dtype=np.float32):
+    d = (random_dense(rng, m, n, density)).astype(dtype)
+    return bsr_from_dense(d, bs)
+
+
+# ---------------------------------------------------------------------------
+# bsr_spgemm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bs", [8, 16, 32])
+@pytest.mark.parametrize("shape", [(64, 64, 64), (128, 64, 96), (32, 96, 64)])
+def test_bsr_spgemm_shapes(rng, bs, shape):
+    m, k, n = shape
+    A = sprand_bsr(rng, m, k, 0.15, bs)
+    B = sprand_bsr(rng, k, n, 0.15, bs)
+    C = ops.bsr_spgemm(A, B)
+    assert_close(bsr_to_dense(C), ref.bsr_spgemm_ref(A, B), atol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bsr_spgemm_dtypes(rng, dtype):
+    A = bsr_from_dense(jnp.asarray(random_dense(rng, 64, 64, 0.2), dtype), 8)
+    B = bsr_from_dense(jnp.asarray(random_dense(rng, 64, 64, 0.2), dtype), 8)
+    C = ops.bsr_spgemm(A, B)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-3
+    assert_close(bsr_to_dense(C), ref.bsr_spgemm_ref(A, B), atol=tol, rtol=tol)
+
+
+def test_bsr_spgemm_skip_zero_equivalence(rng):
+    A = sprand_bsr(rng, 48, 48, 0.2, 8)
+    B = sprand_bsr(rng, 48, 48, 0.2, 8)
+    c1 = ops.bsr_spgemm(A, B, skip_zero=True)
+    c2 = ops.bsr_spgemm(A, B, skip_zero=False)
+    assert_close(bsr_to_dense(c1), bsr_to_dense(c2), atol=1e-5)
+
+
+def test_bsr_spgemm_empty(rng):
+    A = bsr_from_dense(np.zeros((32, 32), np.float32), 8)
+    B = sprand_bsr(rng, 32, 32, 0.3, 8)
+    C = ops.bsr_spgemm(A, B)
+    assert np.allclose(np.asarray(bsr_to_dense(C)), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# bsr_spmm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bs,nf,bn", [(8, 128, 128), (16, 256, 128), (8, 64, 64)])
+def test_bsr_spmm_shapes(rng, bs, nf, bn):
+    A = sprand_bsr(rng, 8 * bs, 6 * bs, 0.2, bs)
+    x = jnp.asarray(random_dense(rng, 6 * bs, nf, 1.0))
+    y = ops.bsr_spmm(A, x, bn=bn)
+    assert_close(y, ref.bsr_spmm_ref(A, x), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# grouped_matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sizes", [[37, 0, 91, 12], [1, 1, 1, 1], [128], [0, 64]])
+def test_grouped_matmul_ragged(rng, sizes):
+    e, k, n = len(sizes), 64, 96
+    t = sum(sizes)
+    x = jnp.asarray(random_dense(rng, max(t, 1), k, 1.0))[:t]
+    w = jnp.asarray(rng.standard_normal((e, k, n)).astype(np.float32))
+    y, offs = ops.grouped_matmul(x, w, sizes, bt=32, bn=32, bk=32)
+    tg = np.repeat(np.arange(e), sizes)
+    want = np.asarray(ref.grouped_matmul_ref(x, w, jnp.asarray(tg))) if t else None
+    src = 0
+    for g in range(e):
+        got = np.asarray(y[offs[g] : offs[g] + sizes[g]])
+        if sizes[g]:
+            assert_close(got, want[src : src + sizes[g]], atol=1e-3)
+        src += sizes[g]
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash-decoding) attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("s,bs_kv", [(128, 32), (256, 64), (64, 64)])
+@pytest.mark.parametrize("g", [1, 4])
+def test_decode_attention_shapes(rng, s, bs_kv, g):
+    b, hkv, d = 3, 2, 32
+    q = jnp.asarray(rng.standard_normal((b, hkv, g, d)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)).astype(np.float32))
+    lengths = jnp.asarray([s, s // 2, 1], jnp.int32)
+    o = ops.decode_attention(q, k, v, lengths, bs_kv=bs_kv)
+    assert_close(o, ref.decode_attention_ref(q, k, v, lengths), atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-4), (jnp.bfloat16, 3e-2)])
+def test_decode_attention_dtypes(rng, dtype, tol):
+    b, hkv, g, d, s = 2, 2, 2, 32, 128
+    q = jnp.asarray(rng.standard_normal((b, hkv, g, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), dtype)
+    lengths = jnp.asarray([s, 77], jnp.int32)
+    o = ops.decode_attention(q, k, v, lengths, bs_kv=32)
+    assert_close(np.asarray(o, np.float32),
+                 np.asarray(ref.decode_attention_ref(q, k, v, lengths), np.float32),
+                 atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# flash prefill attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("s,bq,bk,h,hkv,window", [
+    (128, 32, 32, 8, 2, 0),
+    (128, 32, 32, 8, 2, 48),
+    (64, 16, 32, 6, 3, 0),
+    (256, 64, 64, 4, 4, 0),
+])
+def test_flash_prefill_shapes(rng, s, bq, bk, h, hkv, window):
+    from repro.models import attention as att
+
+    b, d = 2, 32
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)).astype(np.float32))
+    o = ops.flash_prefill(q, k, v, bq=bq, bk=bk, window=window)
+    want = att.attention_ref(q, k, v, causal=True, window=window)
+    assert_close(o, want, atol=2e-3)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-3), (jnp.bfloat16, 4e-2)])
+def test_flash_prefill_dtypes(rng, dtype, tol):
+    from repro.models import attention as att
+
+    b, s, h, hkv, d = 2, 128, 4, 2, 32
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), dtype)
+    o = ops.flash_prefill(q, k, v, bq=32, bk=32)
+    want = att.attention_ref(q, k, v, causal=True)
+    assert_close(np.asarray(o, np.float32), np.asarray(want, np.float32),
+                 atol=tol, rtol=tol)

@@ -1,0 +1,68 @@
+"""KKMEM two-phase SpGEMM: numeric vs dense oracle + the chunk-invariance
+property (the paper's central algorithmic invariant)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.kkmem import (
+    spgemm, spgemm_ranged, spgemm_full, spgemm_symbolic_host, spgemm_dense_oracle,
+)
+from repro.sparse.csr import CSR, csr_to_dense, csr_select_rows_host
+from conftest import csr_pair, assert_close
+
+
+@settings(max_examples=15, deadline=None)
+@given(csr_pair())
+def test_spgemm_matches_dense_oracle(pair):
+    A, B = pair
+    C = spgemm_full(A, B)
+    assert_close(csr_to_dense(C), spgemm_dense_oracle(A, B), atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(csr_pair())
+def test_symbolic_counts_exact(pair):
+    A, B = pair
+    ws = spgemm_symbolic_host(A, B)
+    dense = np.asarray(spgemm_dense_oracle(A, B))
+    # structural nnz >= numeric nnz (cancellation can zero entries numerically)
+    assert ws.c_nnz >= int((np.abs(dense) > 1e-7).sum())
+    # flops = 2 * sum over A nonzeros of matching B row lengths
+    a_ptr = np.asarray(A.indptr)
+    a_idx = np.asarray(A.indices)[: int(a_ptr[-1])]
+    b_len = np.diff(np.asarray(B.indptr))
+    assert ws.flops == 2 * int(b_len[a_idx].sum())
+
+
+@settings(max_examples=10, deadline=None)
+@given(csr_pair(max_dim=12), st.integers(1, 5), st.integers(0, 2**31 - 1))
+def test_chunk_invariance_property(pair, n_chunks, seed):
+    """THE paper invariant: any row-partition of B, streamed through the ranged
+    fused-multiply-add kernel, yields exactly the unchunked product."""
+    A, B = pair
+    ws = spgemm_symbolic_host(A, B)
+    ref = spgemm_dense_oracle(A, B)
+    rng = np.random.default_rng(seed)
+    cuts = sorted(set([0, B.n_rows] + rng.integers(
+        0, B.n_rows + 1, size=min(n_chunks - 1, B.n_rows)).tolist()))
+    C = CSR(jnp.zeros(A.n_rows + 1, jnp.int32), jnp.zeros(ws.c_pad, jnp.int32),
+            jnp.zeros(ws.c_pad, A.data.dtype), (A.n_rows, B.n_cols), 0)
+    for r0, r1 in zip(cuts[:-1], cuts[1:]):
+        if r1 == r0:
+            continue
+        Bc = csr_select_rows_host(B, r0, r1, pad_to=B.nnz_pad)
+        Bc = CSR(Bc.indptr, Bc.indices, Bc.data, Bc.shape, B.max_row_nnz)
+        C = spgemm_ranged(A, Bc, r0, r1, C, ws.c_pad)
+    assert_close(csr_to_dense(C), ref, atol=1e-3)
+
+
+def test_spgemm_empty_rows():
+    """Rows with no nonzeros and an all-padding matrix behave."""
+    A = CSR(jnp.array([0, 0, 0], jnp.int32), jnp.zeros(4, jnp.int32),
+            jnp.zeros(4, jnp.float32), (2, 3), 0)
+    B = CSR(jnp.array([0, 1, 1, 2], jnp.int32), jnp.array([0, 1, 0, 0], jnp.int32),
+            jnp.array([1.0, 2.0, 0.0, 0.0], jnp.float32), (3, 2), 1)
+    C = spgemm(A, B, c_pad=8)
+    assert np.allclose(np.asarray(csr_to_dense(C)), 0.0)

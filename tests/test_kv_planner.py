@@ -1,0 +1,53 @@
+"""KV-cache placement planner (paper DP/Alg-4 applied to serving)."""
+
+import pytest
+
+from repro.configs import get_config
+from repro.serve.kv_planner import plan_kv_cache, kv_cache_bytes
+
+
+def test_cache_bytes_scale_with_context():
+    cfg = get_config("llama3_2_1b")
+    small = kv_cache_bytes(cfg, 8, 2048)
+    big = kv_cache_bytes(cfg, 8, 32768)
+    assert big == pytest.approx(small * 16, rel=0.01)
+
+
+def test_swa_cache_is_window_bounded():
+    mix = get_config("mixtral_8x22b")
+    a = kv_cache_bytes(mix, 1, 32768)
+    b = kv_cache_bytes(mix, 1, 524288)
+    assert a == b   # ring cache: bounded by the 4096 window
+
+
+def test_ssm_cache_is_constant():
+    rwkv = get_config("rwkv6_3b")
+    assert kv_cache_bytes(rwkv, 1, 1024) == kv_cache_bytes(rwkv, 1, 524288)
+
+
+def test_plan_whole_fast_when_small():
+    cfg = get_config("llama3_2_1b")
+    plan = plan_kv_cache(cfg, batch=8, cache_len=4096, n_devices=8)
+    assert plan.algorithm == "whole_fast"
+    assert plan.per_step_copy_s == 0.0
+
+
+def test_plan_demotes_aux_before_cache():
+    cfg = get_config("llama3_2_1b")
+    # big aux state forces a decision; cache+weights still fit -> DP
+    plan = plan_kv_cache(cfg, batch=64, cache_len=32768, n_devices=1,
+                         aux_bytes=12e9)
+    assert plan.algorithm in ("dp", "chunk_stream")
+    if plan.algorithm == "dp":
+        assert plan.weights_bytes + plan.cache_bytes <= plan.hbm_bytes
+
+
+def test_plan_streams_when_oversized():
+    cfg = get_config("deepseek_67b")
+    # 67B weights on ONE device cannot fit: must stream
+    plan = plan_kv_cache(cfg, batch=128, cache_len=32768, n_devices=1)
+    assert plan.algorithm == "chunk_stream"
+    assert plan.per_step_copy_s > 0
+    # sharded over 256 devices the same deployment fits
+    plan2 = plan_kv_cache(cfg, batch=128, cache_len=32768, n_devices=256)
+    assert plan2.algorithm == "whole_fast"

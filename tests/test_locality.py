@@ -1,0 +1,52 @@
+"""Reuse-distance machinery vs brute force + triangle counting."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.locality import stack_distances, analyze, b_access_trace
+from repro.core.triangle import count_triangles, count_triangles_dense
+from repro.sparse import graphs, multigrid
+
+
+def brute_stack_distance(trace):
+    out = []
+    last = {}
+    for t, r in enumerate(trace):
+        if r not in last:
+            out.append(-1)
+        else:
+            out.append(len(set(trace[last[r] + 1 : t])))
+        last[r] = t
+    return out
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 12), min_size=1, max_size=80))
+def test_stack_distance_vs_brute_force(trace):
+    got = stack_distances(np.asarray(trace), 13)
+    want = brute_stack_distance(trace)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_miss_fraction_monotone_in_capacity():
+    A, R, P = multigrid.problem("laplace3d", 6)
+    st_ = analyze(R, A)
+    fracs = [st_.miss_fraction(c) for c in (1, 4, 16, 64, 256, 4096)]
+    assert all(a >= b for a, b in zip(fracs, fracs[1:]))
+    assert fracs[-1] >= st_.n_cold / st_.n_accesses
+
+
+def test_access_trace_is_a_columns():
+    A, R, P = multigrid.problem("laplace3d", 4)
+    trace = b_access_trace(R)
+    assert trace.size == int(np.asarray(R.indptr)[-1])
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(6, 8), st.integers(3, 6), st.integers(0, 10_000))
+def test_triangle_count_property(scale, ef, seed):
+    G = graphs.rmat(scale, ef, seed=seed)
+    L = graphs.lower_triangular_degree_sorted(G)
+    got = float(count_triangles(L))
+    want = float(count_triangles_dense(L))
+    assert abs(got - want) < 1e-3

@@ -1,0 +1,177 @@
+"""Model-layer invariants: flash==naive attention, chunked==sequential scans,
+MoE==dense oracle, prefill+decode==forward for every family."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import attention as att
+from repro.models import rwkv6, mamba2, moe
+from repro.models import transformer as tf
+from conftest import assert_close
+
+KEY = jax.random.PRNGKey(0)
+
+
+def dense_cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=2, d_model=64, d_ff=128,
+                vocab_size=128, n_heads=8, n_kv_heads=2, q_chunk=16,
+                attn_chunk=16, compute_dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("window", [0, 8, 24])
+@pytest.mark.parametrize("sq,sk", [(64, 64), (48, 48), (32, 64)])
+def test_flash_matches_naive(rng, window, sq, sk):
+    b, h, hkv, d = 2, 8, 2, 16
+    q = jnp.asarray(rng.standard_normal((b, sq, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((b, sk, hkv, d)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((b, sk, hkv, d)).astype(np.float32))
+    off = sk - sq
+    o1 = att.flash_attention(q, k, v, causal=True, window=window,
+                             q_chunk=16, kv_chunk=16, q_offset=off)
+    o2 = att.attention_ref(q, k, v, causal=True, window=window, q_offset=off)
+    assert_close(o1, o2, atol=2e-3)
+
+
+@pytest.mark.parametrize("chunks", [(16, 16), (32, 8), (8, 32), (64, 64)])
+def test_flash_chunk_invariance(rng, chunks):
+    """Chunk sizes must not change the result (paper chunk-invariance, attention
+    edition)."""
+    b, s, h, hkv, d = 2, 64, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)).astype(np.float32))
+    qc, kc = chunks
+    o1 = att.flash_attention(q, k, v, q_chunk=qc, kv_chunk=kc)
+    o2 = att.attention_ref(q, k, v)
+    assert_close(o1, o2, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 / mamba2 chunked forms
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("s,chunk", [(48, 16), (50, 16), (32, 32), (7, 32)])
+def test_rwkv_chunked_equals_sequential(rng, s, chunk):
+    cfg = ModelConfig(name="r", family="ssm", ssm_family="rwkv6", n_layers=1,
+                      d_model=64, d_ff=128, vocab_size=64, ssm_head_dim=16,
+                      compute_dtype="float32")
+    p = rwkv6.rwkv_init(KEY, cfg)
+    x = jnp.asarray(rng.standard_normal((2, s, 64)).astype(np.float32)) * 0.5
+    y1, s1, _ = rwkv6.time_mix(p, x, cfg)
+    y2, s2, _ = rwkv6.time_mix_chunked(p, x, cfg, chunk=chunk)
+    assert_close(y1, y2, atol=2e-3)
+    assert_close(s1, s2, atol=2e-3)
+
+
+@pytest.mark.parametrize("s,chunk", [(48, 16), (50, 16), (64, 64), (5, 16)])
+def test_mamba_chunked_equals_scan(rng, s, chunk):
+    cfg = ModelConfig(name="m", family="hybrid", ssm_family="mamba2", n_layers=1,
+                      d_model=32, d_ff=64, vocab_size=64, n_heads=4, n_kv_heads=4,
+                      ssm_state=8, ssm_head_dim=16, compute_dtype="float32")
+    p = mamba2.mamba_init(KEY, cfg)
+    x = jnp.asarray(rng.standard_normal((2, s, 32)).astype(np.float32)) * 0.5
+    y1, h1, c1 = mamba2.ssd_scan(p, x, cfg)
+    y2, h2, c2 = mamba2.ssd_chunked(p, x, cfg, chunk=chunk)
+    assert_close(y1, y2, atol=2e-3)
+    assert_close(h1, h2, atol=2e-3)
+    assert_close(c1, c2, atol=2e-3)
+
+
+def test_rwkv_streaming_state(rng):
+    cfg = ModelConfig(name="r", family="ssm", ssm_family="rwkv6", n_layers=1,
+                      d_model=64, d_ff=128, vocab_size=64, ssm_head_dim=16,
+                      compute_dtype="float32")
+    p = rwkv6.rwkv_init(KEY, cfg)
+    x = jnp.asarray(rng.standard_normal((1, 40, 64)).astype(np.float32)) * 0.5
+    y_full, _, _ = rwkv6.time_mix(p, x, cfg)
+    ya, sa, xa = rwkv6.time_mix(p, x[:, :25], cfg)
+    yb, _, _ = rwkv6.time_mix(p, x[:, 25:], cfg, state=sa, x_prev_in=xa)
+    assert_close(jnp.concatenate([ya, yb], 1), y_full, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+def test_moe_matches_dense_oracle_when_no_drops(rng):
+    cfg = ModelConfig(name="e", family="moe", n_layers=1, d_model=32, d_ff=64,
+                      vocab_size=64, n_heads=4, n_kv_heads=4, n_experts=8,
+                      top_k=2, capacity_factor=8.0, compute_dtype="float32")
+    p = moe.moe_init(KEY, cfg)
+    x = jnp.asarray(rng.standard_normal((2, 16, 32)).astype(np.float32))
+    y, aux = moe.moe_apply(p, x, cfg)
+    assert_close(y, moe.moe_apply_dense_oracle(p, x, cfg), atol=1e-4)
+    assert float(aux) >= 1.0 - 1e-5    # switch aux lower bound at balance
+
+
+def test_moe_capacity_drops_bounded(rng):
+    """With tight capacity some tokens drop; outputs stay finite and the layer
+    never amplifies magnitude pathologically."""
+    cfg = ModelConfig(name="e", family="moe", n_layers=1, d_model=32, d_ff=64,
+                      vocab_size=64, n_heads=4, n_kv_heads=4, n_experts=4,
+                      top_k=2, capacity_factor=0.5, compute_dtype="float32")
+    p = moe.moe_init(KEY, cfg)
+    x = jnp.asarray(rng.standard_normal((2, 32, 32)).astype(np.float32))
+    y, _ = moe.moe_apply(p, x, cfg)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+# ---------------------------------------------------------------------------
+# whole-model: prefill + decode == forward, per family
+# ---------------------------------------------------------------------------
+
+
+FAMILY_CFGS = [
+    dense_cfg(name="dense"),
+    dense_cfg(name="swa", sliding_window=16),
+    ModelConfig(name="moe", family="moe", n_layers=2, d_model=64, d_ff=96,
+                vocab_size=128, n_heads=8, n_kv_heads=8, n_experts=8, top_k=2,
+                capacity_factor=8.0, q_chunk=16, attn_chunk=16,
+                compute_dtype="float32"),
+    ModelConfig(name="rwkv", family="ssm", ssm_family="rwkv6", n_layers=2,
+                d_model=64, d_ff=128, vocab_size=128, ssm_head_dim=16,
+                compute_dtype="float32"),
+    ModelConfig(name="zamba", family="hybrid", ssm_family="mamba2", n_layers=4,
+                d_model=64, d_ff=128, vocab_size=128, n_heads=8, n_kv_heads=8,
+                ssm_state=8, ssm_head_dim=16, attn_every=2, q_chunk=16,
+                attn_chunk=16, compute_dtype="float32"),
+]
+
+
+@pytest.mark.parametrize("cfg", FAMILY_CFGS, ids=lambda c: c.name)
+def test_decode_matches_forward(rng, cfg):
+    b, s = 2, 32
+    params = tf.init_params(KEY, cfg)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    logits, _ = tf.forward(params, {"tokens": toks, "labels": toks}, cfg)
+    assert not np.isnan(np.asarray(logits)).any()
+    n_pre = s - 4
+    lg, cache = tf.prefill(params, {"tokens": toks[:, :n_pre]}, cfg, cache_len=s)
+    errs = [np.abs(np.asarray(lg) - np.asarray(logits[:, n_pre - 1])).max()]
+    for t in range(n_pre, s):
+        lg, cache = tf.decode_step(params, cache, toks[:, t : t + 1], cfg)
+        errs.append(np.abs(np.asarray(lg) - np.asarray(logits[:, t])).max())
+    assert max(errs) < 2e-2, f"{cfg.name}: {max(errs)}"
+
+
+@pytest.mark.parametrize("cfg", FAMILY_CFGS, ids=lambda c: c.name)
+def test_grads_finite(rng, cfg):
+    params = tf.init_params(KEY, cfg)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 32)), jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    g = jax.grad(lambda p: tf.loss_fn(p, batch, cfg)[0])(params)
+    norms = jax.tree.map(lambda x: float(jnp.sum(x.astype(jnp.float32) ** 2)), g)
+    total = jax.tree.reduce(lambda a, b: a + b, norms, 0.0)
+    assert np.isfinite(total) and total > 0

@@ -1,0 +1,23 @@
+"""Pipeline parallelism (GPipe over shard_map/ppermute): forward, identity
+padding, and AD-derived backward all match the sequential stack.
+
+Runs in a subprocess because it needs >1 placeholder device (same pattern as
+the dry-run tests); in-process tests must keep seeing 1 CPU device."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_pipeline_matches_sequential_subprocess():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, PYTHONPATH=os.path.join(root, "src"))
+    r = subprocess.run(
+        [sys.executable, os.path.join(root, "tools", "pipeline_check.py")],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    for marker in ("PIPELINE_FWD_OK", "PIPELINE_PAD_OK", "PIPELINE_GRAD_OK"):
+        assert marker in r.stdout, r.stdout[-2000:]

@@ -1,0 +1,109 @@
+"""Roofline extraction: HLO collective parser + analytic flops + report math."""
+
+import numpy as np
+import pytest
+
+from repro.launch.roofline import (
+    collective_bytes, analytic_model_flops, RooflineReport, _shape_bytes,
+)
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES
+
+
+HLO_SAMPLE = """
+HloModule jit_f
+
+%add.clone {
+  ROOT %x = f32[] add(f32[] %a, f32[] %b)
+}
+
+ENTRY %main {
+  %p0 = f32[64,32]{1,0} parameter(0)
+  %all-reduce = f32[16,16]{1,0} all-reduce(%dot), channel_id=1, replica_groups=[4,2]<=[8]
+  %ag = bf16[128,256]{1,0} all-gather(%p0), channel_id=2, dimensions={0}
+  %rs = f32[8,8]{1,0} reduce-scatter(%ag2), channel_id=3
+  %a2a = s32[4,4]{1,0} all-to-all(%x1), channel_id=4
+  %cp = f32[32]{0} collective-permute(%y), channel_id=5
+  %ars = (f32[10]{0}, f32[20]{0}) all-reduce-start(%z1, %z2), channel_id=6
+  ROOT %out = f32[] add(%c1, %c2)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32", "16,16") == 1024
+    assert _shape_bytes("bf16", "128,256") == 65536
+    assert _shape_bytes("f32", "") == 4          # scalar
+    assert _shape_bytes("pred", "8") == 8
+
+
+def test_collective_parser_kinds_and_bytes():
+    out = collective_bytes(HLO_SAMPLE)
+    c = out["counts"]
+    assert c["all-reduce"] == 2          # all-reduce + all-reduce-start
+    assert c["all-gather"] == 1
+    assert c["reduce-scatter"] == 1
+    assert c["all-to-all"] == 1
+    assert c["collective-permute"] == 1
+    b = out["bytes"]
+    assert b["all-gather"] == 128 * 256 * 2          # result bytes, mult 1.0
+    assert b["all-reduce"] == (16 * 16 * 4 + (10 + 20) * 4) * 2.0  # ring 2x
+    assert b["reduce-scatter"] == 8 * 8 * 4
+    assert out["total_bytes"] == sum(b.values())
+
+
+def test_collective_parser_empty():
+    out = collective_bytes("ENTRY %main { ROOT %x = f32[] add(%a, %b) }")
+    assert out["total_bytes"] == 0
+
+
+def test_analytic_flops_train_vs_decode():
+    cfg = get_config("llama3_2_1b")
+    train = analytic_model_flops(cfg, SHAPES["train_4k"])
+    # 6 N D lower bound
+    assert train >= 6 * cfg.active_param_count() * 256 * 4096
+    decode = analytic_model_flops(cfg, SHAPES["decode_32k"])
+    assert decode < train / 1000
+    # MoE active < total
+    moe = get_config("olmoe_1b_7b")
+    t_moe = analytic_model_flops(moe, SHAPES["train_4k"])
+    assert t_moe < 6 * moe.param_count() * 256 * 4096 * 1.2
+
+
+def test_swa_caps_attention_flops():
+    mix = get_config("mixtral_8x22b")
+    full = analytic_model_flops(
+        type(mix)(**{**mix.__dict__, "sliding_window": 0}), SHAPES["prefill_32k"])
+    swa = analytic_model_flops(mix, SHAPES["prefill_32k"])
+    assert swa < full
+
+
+def test_attention_free_has_no_attn_term():
+    rwkv = get_config("rwkv6_3b")
+    f = analytic_model_flops(rwkv, SHAPES["prefill_32k"])
+    assert f == 2.0 * rwkv.active_param_count() * 32 * 32768
+
+
+def test_report_math():
+    rep = RooflineReport(
+        arch="x", shape="train_4k", mesh="m", n_devices=256,
+        hlo_flops=1e12, hlo_bytes=1e11, coll_bytes_raw=1e9, coll_detail={},
+        analytic_flops_global=256e12 * 2,    # 2e12 per device -> rho = 2
+        temp_bytes=8e9, arg_bytes=1e9,
+    ).finalize()
+    assert rep.rho == pytest.approx(2.0)
+    assert rep.t_compute == pytest.approx(2e12 / 197e12)
+    assert rep.t_memory == pytest.approx(1e11 * 2 / 819e9)
+    assert rep.t_collective == pytest.approx(1e9 * 2 / 50e9)
+    assert rep.bottleneck == "memory"
+    assert rep.fits_hbm
+    assert 0 < rep.roofline_fraction() <= 1.0
+
+
+def test_rho_floors_at_one():
+    rep = RooflineReport(
+        arch="x", shape="s", mesh="m", n_devices=1,
+        hlo_flops=1e12, hlo_bytes=1e9, coll_bytes_raw=0, coll_detail={},
+        analytic_flops_global=1e11,   # hlo counts MORE than model flops
+    ).finalize()
+    assert rep.rho == 1.0

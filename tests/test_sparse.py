@@ -1,0 +1,100 @@
+"""Sparse containers + generators: roundtrips, structure, padding invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.sparse.csr import (
+    CSR, csr_from_dense, csr_to_dense, csr_from_coo, csr_transpose_host,
+    csr_select_rows_host, csr_row_of_entry,
+)
+from repro.sparse.bsr import bsr_from_dense, bsr_to_dense, bsr_from_csr
+from repro.sparse import multigrid, generators, graphs
+from conftest import random_dense, assert_close
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 30), st.integers(1, 30), st.floats(0.0, 0.7),
+       st.integers(0, 9), st.integers(0, 2**31 - 1))
+def test_csr_dense_roundtrip(m, n, density, pad, seed):
+    d = random_dense(np.random.default_rng(seed), m, n, density)
+    c = csr_from_dense(d, pad_to=int((d != 0).sum()) + pad)
+    assert_close(csr_to_dense(c), d)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 20), st.integers(2, 20), st.floats(0.05, 0.6),
+       st.integers(0, 2**31 - 1))
+def test_csr_transpose(m, n, density, seed):
+    d = random_dense(np.random.default_rng(seed), m, n, density)
+    c = csr_from_dense(d)
+    assert_close(csr_to_dense(csr_transpose_host(c)), d.T)
+
+
+def test_csr_row_select_and_entry_rows(rng):
+    d = random_dense(rng, 12, 9, 0.4)
+    c = csr_from_dense(d, pad_to=int((d != 0).sum()) + 5)
+    sub = csr_select_rows_host(c, 3, 9)
+    assert_close(csr_to_dense(sub), d[3:9])
+    rows = np.asarray(csr_row_of_entry(c))
+    nnz = int(c.indptr[-1])
+    expect = np.repeat(np.arange(12), np.diff(np.asarray(c.indptr)))
+    np.testing.assert_array_equal(rows[:nnz], expect)
+
+
+def test_csr_from_coo_sums_duplicates():
+    c = csr_from_coo([0, 0, 1], [2, 2, 0], [1.0, 2.0, 5.0], (2, 3))
+    d = np.asarray(csr_to_dense(c))
+    assert d[0, 2] == pytest.approx(3.0)
+    assert d[1, 0] == pytest.approx(5.0)
+
+
+@pytest.mark.parametrize("bs", [2, 4, 8])
+def test_bsr_roundtrip(rng, bs):
+    d = random_dense(rng, 4 * bs, 6 * bs, 0.2)
+    b = bsr_from_dense(d, bs, pad_to=None)
+    assert_close(bsr_to_dense(b), d)
+
+
+def test_bsr_from_csr_pads_shape(rng):
+    d = random_dense(rng, 10, 13, 0.3)   # not multiples of 4
+    c = csr_from_dense(d)
+    b = bsr_from_csr(c, 4)
+    assert b.shape == (12, 16)
+    assert_close(np.asarray(bsr_to_dense(b))[:10, :13], d)
+
+
+@pytest.mark.parametrize("name,exp_nnz", [
+    ("laplace3d", 7), ("bigstar2d", 13), ("brick3d", 27), ("elasticity", 81)])
+def test_multigrid_stencil_widths(name, exp_nnz):
+    A, R, P = multigrid.problem(name, 5)
+    row_nnz = np.diff(np.asarray(A.indptr))
+    assert row_nnz.max() == exp_nnz
+    # P = R^T
+    assert_close(csr_to_dense(P), np.asarray(csr_to_dense(R)).T)
+    # R short and wide
+    assert R.shape[0] < R.shape[1]
+
+
+def test_random_uniform_degree_exact(rng):
+    B = generators.random_uniform_degree(40, 60, 7, seed=3)
+    np.testing.assert_array_equal(np.diff(np.asarray(B.indptr)), 7)
+    # distinct columns per row
+    idx = np.asarray(B.indices)
+    ptr = np.asarray(B.indptr)
+    for i in range(40):
+        row = idx[ptr[i]:ptr[i + 1]]
+        assert len(set(row.tolist())) == 7
+
+
+def test_graphs_symmetric_binary():
+    G = graphs.rmat(7, 4, seed=1)
+    d = np.asarray(csr_to_dense(G))
+    np.testing.assert_array_equal(d, d.T)
+    assert set(np.unique(d)).issubset({0.0, 1.0})
+    assert np.trace(d) == 0
+    L = graphs.lower_triangular_degree_sorted(G)
+    ld = np.asarray(csr_to_dense(L))
+    assert np.allclose(np.triu(ld), 0)

@@ -1,0 +1,50 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+"""Elastic-restart proof: save a checkpoint sharded on one mesh, restore it on a
+DIFFERENT mesh, verify values. Run by tests/test_checkpoint.py (slow)."""
+
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.ckpt.checkpoint import save_checkpoint, restore_checkpoint
+
+
+def main():
+    tmp = tempfile.mkdtemp(prefix="elastic_")
+    mesh_a = jax.make_mesh((8,), ("data",),
+                           axis_types=(jax.sharding.AxisType.Auto,))
+    mesh_b = jax.make_mesh((4, 2), ("data", "model"),
+                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rng = np.random.default_rng(0)
+    host = {"w": rng.standard_normal((64, 32)).astype(np.float32),
+            "b": rng.standard_normal((16,)).astype(np.float32)}
+    sharded_a = {
+        "w": jax.device_put(host["w"], NamedSharding(mesh_a, P("data", None))),
+        "b": jax.device_put(host["b"], NamedSharding(mesh_a, P("data"))),
+    }
+    save_checkpoint(tmp, 7, sharded_a)
+
+    sh_b = {
+        "w": NamedSharding(mesh_b, P("data", "model")),
+        "b": NamedSharding(mesh_b, P(("data", "model"))),
+    }
+    restored, step = restore_checkpoint(tmp, jax.eval_shape(lambda: sharded_a),
+                                        shardings=sh_b)
+    assert step == 7
+    for k in host:
+        np.testing.assert_allclose(np.asarray(restored[k]), host[k])
+        assert restored[k].sharding.mesh.shape == {"data": 4, "model": 2}, (
+            restored[k].sharding)
+    print("ELASTIC_OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
