@@ -13,9 +13,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, timeit, BENCH_SIZES
-from repro.core.chunking import chunked_spgemm
-from repro.core.kkmem import spgemm, spgemm_symbolic_host
+from benchmarks.common import emit, emit_compare, timeit, BENCH_SIZES
+from repro.core.chunking import chunked_spgemm, default_c_pad
+from repro.core.kkmem import spgemm_symbolic_host
 from repro.core.locality import analyze
 from repro.core.memory_model import KNL, P100
 from repro.core.placement import ALL_FAST, ALL_SLOW, placement_cost
@@ -77,3 +77,39 @@ def run():
                 emit(f"fig12_13/gpu/{prob}/{tag}/{label}"
                      f"[{plan.algorithm};ac={plan.n_ac};b={plan.n_b}]",
                      us, f"{speedup:.2f}x_vs_pinned")
+
+    # --- loop vs scan executors --------------------------------------------
+    # Same plan, same kernel; the only difference is host-driven per-chunk
+    # round-trips (loop) vs one device-resident jitted lax.scan (scan). The
+    # derived column is the measured wall-time speedup of scan over loop.
+    run_loop_vs_scan()
+
+
+def run_loop_vs_scan():
+    from repro.core.planner import ChunkPlan
+
+    prob = "laplace3d"
+    A, R, P = multigrid.problem(prob, BENCH_SIZES[prob])
+
+    cases = []
+    # 1-D B streaming (Alg 1) at two fast-window sizes
+    for frac, label in ((0.5, "knl-half"), (0.125, "knl-eighth")):
+        cases.append((plan_knl(A, P, fast_limit_bytes=P.nbytes() * frac),
+                      label))
+    # 2-D plans: both streaming orders on an explicit 3x4 partition
+    n_a, n_b = A.n_rows, P.n_rows
+    p_ac = tuple(int(v) for v in np.linspace(0, n_a, 4))
+    p_b = tuple(int(v) for v in np.linspace(0, n_b, 5))
+    for alg in ("chunk1", "chunk2"):
+        cases.append((ChunkPlan(alg, p_ac, p_b, 0.0, 0.0), f"{alg}-3x4"))
+
+    for plan, label in cases:
+        c_pad = default_c_pad(A, P, plan)
+        us_loop = timeit(lambda: chunked_spgemm(A, P, plan, c_pad,
+                                                backend="loop"), repeats=3)
+        us_scan = timeit(lambda: chunked_spgemm(A, P, plan, c_pad,
+                                                backend="scan"), repeats=3)
+        emit_compare(
+            f"scan_vs_loop/{prob}/AxP/{label}"
+            f"[{plan.algorithm};ac={plan.n_ac};b={plan.n_b}]",
+            us_loop, us_scan)

@@ -27,6 +27,12 @@ def emit(name: str, us_per_call: float, derived: str | float):
     print(row, flush=True)
 
 
+def emit_compare(name: str, us_base: float, us_new: float):
+    """Emit a measured base-vs-new comparison; derived = real speedup."""
+    speedup = us_base / us_new if us_new > 0 else float("inf")
+    emit(name, us_new, f"{speedup:.2f}x_vs_base({us_base:.1f}us)")
+
+
 def timeit(fn, *args, repeats: int = 5, warmup: int = 1) -> float:
     """Median wall-clock microseconds; blocks on JAX async dispatch."""
     for _ in range(warmup):

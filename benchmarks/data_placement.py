@@ -7,7 +7,6 @@ Validates the paper's central DP observation: B_Pin collapses performance
 
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import emit, timeit, BENCH_SIZES
 from repro.core.kkmem import spgemm, spgemm_symbolic_host

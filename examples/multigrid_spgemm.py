@@ -17,7 +17,7 @@ from repro.core.kkmem import spgemm, spgemm_symbolic_host, spgemm_dense_oracle
 from repro.core.locality import analyze, miss_table
 from repro.core.memory_model import KNL, P100
 from repro.core.placement import (
-    ALL_FAST, ALL_SLOW, DP, Placement, placement_cost, dp_recommendation,
+    ALL_FAST, ALL_SLOW, DP, placement_cost, dp_recommendation,
 )
 from repro.core.planner import plan_chunks, row_bytes_csr
 from repro.sparse import multigrid

@@ -15,7 +15,7 @@ from repro.core.kkmem import spgemm_full, spgemm_symbolic_host, spgemm_dense_ora
 from repro.core.planner import plan_chunks, plan_knl, row_bytes_csr
 from repro.core.chunking import chunked_spgemm
 from repro.core.placement import dp_recommendation
-from repro.core.memory_model import P100, KNL
+from repro.core.memory_model import P100
 
 
 def main():

@@ -22,6 +22,9 @@ from repro.core.planner import (
 from repro.core.chunking import (
     ChunkStats, chunk_knl, chunk_gpu1, chunk_gpu2, chunked_spgemm,
 )
+from repro.core.chunk_stream import (
+    chunk_knl_scan, chunk_gpu1_scan, chunk_gpu2_scan, chunked_spgemm_batched,
+)
 from repro.core.triangle import count_triangles, count_triangles_dense
 
 __all__ = [
@@ -35,5 +38,7 @@ __all__ = [
     "ChunkPlan", "plan_chunks", "plan_knl", "binary_search_partition",
     "partition_cost", "row_bytes_csr",
     "ChunkStats", "chunk_knl", "chunk_gpu1", "chunk_gpu2", "chunked_spgemm",
+    "chunk_knl_scan", "chunk_gpu1_scan", "chunk_gpu2_scan",
+    "chunked_spgemm_batched",
     "count_triangles", "count_triangles_dense",
 ]

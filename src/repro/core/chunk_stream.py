@@ -1,0 +1,282 @@
+"""Device-resident streaming chunk executors: the scan backend.
+
+The loop executors in repro.core.chunking drive the paper's chunk streams from
+host Python — every chunk boundary is a device->host->device round-trip, which
+forfeits exactly the copy/compute overlap the paper identifies as the point of
+multi-memory-aware chunking. Here the same three algorithms (KNL / Chunk1 /
+Chunk2) run as **one jitted program each**:
+
+  * the uniformly-padded B chunks and A/C strips are stacked host-side into
+    batched CSRs (``csr_stack`` — a plain CSR whose array fields carry a
+    leading ``[n_chunks]`` axis, sliced back into per-chunk CSRs by scan),
+  * the chunk loop is a ``jax.lax.scan`` (nested scans for the 2-D Chunk1 /
+    Chunk2 orders) over the stacked chunks with the fused ``spgemm_ranged``
+    body inlined,
+
+so the whole multi-chunk multiply compiles once, never leaves the device
+between chunks, and XLA is free to double-buffer the slow->fast chunk
+transfers behind the kernel (the `copy2Fast` of the paper becomes a prefetch
+the compiler schedules instead of a NumPy round-trip).
+
+Because a traced scan cannot mutate Python-side counters, ChunkStats for this
+backend is *computed from the plan*: the uniform padding makes every staged
+chunk/strip/partial the same size, so the loop executors' exact per-copy event
+sequence is reproducible host-side (and is asserted identical in tests).
+
+``chunked_spgemm_batched`` vmaps the scan executors over stacked problem
+instances sharing one plan — the many-small-matrices serving scenario.
+"""
+
+from __future__ import annotations
+
+import collections
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.chunking import (
+    ChunkStats, _assemble, a_strips, b_chunks, default_c_pad,
+)
+from repro.core.kkmem import spgemm_ranged_impl
+from repro.core.planner import ChunkPlan
+from repro.sparse.csr import CSR, csr_stack, csr_unstack
+
+# Python-side trace counters: each key increments once per (re)trace of the
+# corresponding jitted wrapper / scan body. Tests assert these stay O(1) in
+# the chunk count — the whole point of the single-trace executors.
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+def _empty_c(n_rows: int, n_cols: int, c_pad: int, dtype) -> CSR:
+    """Empty C with ``max_row_nnz=c_pad`` so the scan carry has exactly the
+    pytree structure ``spgemm_ranged_impl`` returns (aux mismatch would fail
+    the carry check)."""
+    return CSR(
+        indptr=jnp.zeros(n_rows + 1, jnp.int32),
+        indices=jnp.zeros(c_pad, jnp.int32),
+        data=jnp.zeros(c_pad, dtype),
+        shape=(n_rows, n_cols),
+        max_row_nnz=c_pad,
+    )
+
+
+def _empty_c_stack(n: int, n_rows: int, n_cols: int, c_pad: int, dtype) -> CSR:
+    """Stacked empty partials ([n, ...] leading axis) for the Chunk2 carry."""
+    return CSR(
+        indptr=jnp.zeros((n, n_rows + 1), jnp.int32),
+        indices=jnp.zeros((n, c_pad), jnp.int32),
+        data=jnp.zeros((n, c_pad), dtype),
+        shape=(n_rows, n_cols),
+        max_row_nnz=c_pad,
+    )
+
+
+# ---------------------------------------------------------------------------
+# jitted scan cores (one compilation per padded geometry, not per chunk)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("c_pad",))
+def _knl_scan(A: CSR, Bs: CSR, r0s, r1s, C0: CSR, c_pad: int) -> CSR:
+    TRACE_COUNTS["knl"] += 1
+
+    def body(C, x):
+        TRACE_COUNTS["knl_body"] += 1
+        Bc, r0, r1 = x
+        return spgemm_ranged_impl(A, Bc, r0, r1, C, c_pad), None
+
+    C, _ = lax.scan(body, C0, (Bs, r0s, r1s))
+    return C
+
+
+@partial(jax.jit, static_argnames=("c_pad",))
+def _chunk1_scan(As: CSR, Bs: CSR, r0s, r1s, C0: CSR, c_pad: int) -> CSR:
+    """A/C strips outer (stationary), B chunks inner (streamed). Returns the
+    stacked per-strip results ([n_ac] leading axis)."""
+    TRACE_COUNTS["chunk1"] += 1
+
+    def outer(carry, Ai):
+        def inner(C, x):
+            TRACE_COUNTS["chunk1_body"] += 1
+            Bc, r0, r1 = x
+            return spgemm_ranged_impl(Ai, Bc, r0, r1, C, c_pad), None
+
+        Ci, _ = lax.scan(inner, C0, (Bs, r0s, r1s))
+        return carry, Ci
+
+    _, Cs = lax.scan(outer, None, As)
+    return Cs
+
+
+@partial(jax.jit, static_argnames=("c_pad",))
+def _chunk2_scan(As: CSR, Bs: CSR, r0s, r1s, C0s: CSR, c_pad: int) -> CSR:
+    """B chunk outer (stationary), A/C strips inner (streamed); all per-strip
+    partials ride the scan carry. Returns the stacked per-strip results."""
+    TRACE_COUNTS["chunk2"] += 1
+
+    def outer(Cs, x):
+        Bc, r0, r1 = x
+
+        def inner(carry, y):
+            TRACE_COUNTS["chunk2_body"] += 1
+            Ai, Ci = y
+            return carry, spgemm_ranged_impl(Ai, Bc, r0, r1, Ci, c_pad)
+
+        _, Cs2 = lax.scan(inner, None, (As, Cs))
+        return Cs2, None
+
+    Cs, _ = lax.scan(outer, C0s, (Bs, r0s, r1s))
+    return Cs
+
+
+# ---------------------------------------------------------------------------
+# plan-derived copy accounting (the scan cannot mutate Python stats)
+# ---------------------------------------------------------------------------
+
+
+def planned_stats(plan: ChunkPlan, chunk_nbytes: int, strip_nbytes: int,
+                  c_strip_nbytes: int) -> ChunkStats:
+    """Replay the loop executors' per-copy event sequence from the plan.
+
+    Uniform padding makes every B chunk / A strip / C partial the same size,
+    so the event stream is fully determined by (algorithm, n_ac, n_b) plus the
+    three footprints — tests assert event-for-event equality with the loop.
+    """
+    stats = ChunkStats(plan.algorithm, plan.n_ac, plan.n_b)
+    if plan.algorithm == "knl":
+        for _ in range(plan.n_b):
+            stats.add_in(chunk_nbytes)
+        stats.kernel_calls = plan.n_b
+        return stats
+    if plan.algorithm == "chunk1":
+        for a0, a1 in zip(plan.p_ac[:-1], plan.p_ac[1:]):
+            stats.add_in(strip_nbytes)
+            stats.add_in((a1 - a0 + 1) * 4)
+            for _ in range(plan.n_b):
+                stats.add_in(chunk_nbytes)
+                stats.kernel_calls += 1
+            stats.add_out(c_strip_nbytes)
+        return stats
+    if plan.algorithm == "chunk2":
+        for jb in range(plan.n_b):
+            stats.add_in(chunk_nbytes)
+            for _ in range(plan.n_ac):
+                stats.add_in(strip_nbytes)
+                if jb > 0:
+                    stats.add_in(c_strip_nbytes)
+                stats.kernel_calls += 1
+                if jb < plan.n_b - 1:
+                    stats.add_out(c_strip_nbytes)
+            if jb == plan.n_b - 1:
+                for _ in range(plan.n_ac):
+                    stats.add_out(c_strip_nbytes)
+        return stats
+    raise ValueError(f"unknown algorithm {plan.algorithm!r}")
+
+
+def _c_strip_nbytes(strip_rows: int, c_pad: int, dtype) -> int:
+    itemsize = jnp.dtype(dtype).itemsize
+    return (strip_rows + 1) * 4 + c_pad * (4 + itemsize)
+
+
+# ---------------------------------------------------------------------------
+# executors (drop-in signatures of chunk_knl / chunk_gpu1 / chunk_gpu2)
+# ---------------------------------------------------------------------------
+
+
+def chunk_knl_scan(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int):
+    chunks = b_chunks(B, plan.p_b)
+    Bs = csr_stack(chunks)
+    r0s, r1s = plan.b_ranges()
+    C0 = _empty_c(A.n_rows, B.n_cols, c_pad, A.dtype)
+    C = _knl_scan(A, Bs, jnp.asarray(r0s), jnp.asarray(r1s), C0, c_pad)
+    stats = planned_stats(plan, chunks[0].nbytes(), 0, 0)
+    return C, stats
+
+
+def chunk_gpu1_scan(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int):
+    strips = a_strips(A, plan.p_ac)
+    chunks = b_chunks(B, plan.p_b)
+    As, Bs = csr_stack(strips), csr_stack(chunks)
+    r0s, r1s = plan.b_ranges()
+    strip_rows = strips[0].n_rows
+    C0 = _empty_c(strip_rows, B.n_cols, c_pad, A.dtype)
+    Cs = _chunk1_scan(As, Bs, jnp.asarray(r0s), jnp.asarray(r1s), C0, c_pad)
+    stats = planned_stats(plan, chunks[0].nbytes(), strips[0].nbytes(),
+                          _c_strip_nbytes(strip_rows, c_pad, A.dtype))
+    return _assemble(csr_unstack(Cs), plan.p_ac, B.n_cols), stats
+
+
+def chunk_gpu2_scan(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int):
+    strips = a_strips(A, plan.p_ac)
+    chunks = b_chunks(B, plan.p_b)
+    As, Bs = csr_stack(strips), csr_stack(chunks)
+    r0s, r1s = plan.b_ranges()
+    strip_rows = strips[0].n_rows
+    C0s = _empty_c_stack(plan.n_ac, strip_rows, B.n_cols, c_pad, A.dtype)
+    Cs = _chunk2_scan(As, Bs, jnp.asarray(r0s), jnp.asarray(r1s), C0s, c_pad)
+    stats = planned_stats(plan, chunks[0].nbytes(), strips[0].nbytes(),
+                          _c_strip_nbytes(strip_rows, c_pad, A.dtype))
+    return _assemble(csr_unstack(Cs), plan.p_ac, B.n_cols), stats
+
+
+# ---------------------------------------------------------------------------
+# batched entry point: many problem instances, one plan, one compilation
+# ---------------------------------------------------------------------------
+
+
+def chunked_spgemm_batched(As, Bs, plan: ChunkPlan, c_pad: int | None = None):
+    """vmap the scan executor over stacked problem instances sharing one plan.
+
+    All instances must share the padded geometry (same shapes, nnz capacities,
+    ``max_row_nnz`` — e.g. the same sparsity structure with different values),
+    which is what lets one compiled program serve the whole batch. Returns
+    ``(list_of_C, stats)`` where ``stats`` is the per-instance modeled copy
+    accounting (identical across the batch by construction).
+    """
+    As, Bs = list(As), list(Bs)
+    if len(As) != len(Bs) or not As:
+        raise ValueError("need equal, nonzero numbers of A and B instances")
+    if c_pad is None:
+        c_pad = max(default_c_pad(A, B, plan) for A, B in zip(As, Bs))
+    if plan.algorithm not in ("knl", "chunk1", "chunk2"):
+        raise ValueError(f"unsupported algorithm {plan.algorithm!r}")
+    r0s, r1s = plan.b_ranges()
+    r0s, r1s = jnp.asarray(r0s), jnp.asarray(r1s)
+    n_cols = Bs[0].n_cols
+    dtype = As[0].dtype
+    chunk_lists = [b_chunks(B, plan.p_b) for B in Bs]
+    Bst = csr_stack([csr_stack(cl) for cl in chunk_lists])   # [batch, n_b, ...]
+    chunk_nbytes = chunk_lists[0][0].nbytes()
+
+    if plan.algorithm == "knl":
+        Ast = csr_stack(As)
+        C0 = csr_stack([_empty_c(A.n_rows, n_cols, c_pad, dtype) for A in As])
+        run = jax.vmap(partial(_knl_scan, c_pad=c_pad),
+                       in_axes=(0, 0, None, None, 0))
+        Cb = run(Ast, Bst, r0s, r1s, C0)
+        stats = planned_stats(plan, chunk_nbytes, 0, 0)
+        return csr_unstack(Cb), stats
+
+    strip_lists = [a_strips(A, plan.p_ac) for A in As]
+    Ast = csr_stack([csr_stack(sl) for sl in strip_lists])   # [batch, n_ac, ...]
+    strip_rows = strip_lists[0][0].n_rows
+    stats = planned_stats(plan, chunk_nbytes, strip_lists[0][0].nbytes(),
+                          _c_strip_nbytes(strip_rows, c_pad, dtype))
+    if plan.algorithm == "chunk1":
+        C0 = _empty_c(strip_rows, n_cols, c_pad, dtype)
+        run = jax.vmap(partial(_chunk1_scan, c_pad=c_pad),
+                       in_axes=(0, 0, None, None, None))
+        Cb = run(Ast, Bst, r0s, r1s, C0)
+    else:
+        C0s = _empty_c_stack(plan.n_ac, strip_rows, n_cols, c_pad, dtype)
+        run = jax.vmap(partial(_chunk2_scan, c_pad=c_pad),
+                       in_axes=(0, 0, None, None, None))
+        Cb = run(Ast, Bst, r0s, r1s, C0s)
+    out = [
+        _assemble(csr_unstack(Ci), plan.p_ac, n_cols)
+        for Ci in csr_unstack(Cb)
+    ]
+    return out, stats

@@ -12,6 +12,10 @@ Executors return (C, ChunkStats); ChunkStats carries the *actual* fast<->slow tr
 (what `copy2Fast`/`copy2Slow` would have moved), which tests compare against the
 planner's modeled copy cost, and which the benchmarks feed into the memory cost model
 to reproduce the paper's figures.
+
+This module holds the host-driven loop executors (the oracle path) and the
+dispatcher; the device-resident single-trace scan executors live in
+repro.core.chunk_stream and are the default backend of ``chunked_spgemm``.
 """
 
 from __future__ import annotations
@@ -34,10 +38,24 @@ class ChunkStats:
     copy_in_bytes: float = 0.0   # slow -> fast
     copy_out_bytes: float = 0.0  # fast -> slow
     kernel_calls: int = 0
+    # ordered per-copy event logs (one entry per staged transfer, in issue
+    # order). The loop executors append as they go; the scan executors compute
+    # the identical sequence from the plan (a traced scan cannot mutate Python
+    # state), so loop-vs-scan stats can be compared event-for-event.
+    per_copy_in: list = dataclasses.field(default_factory=list)
+    per_copy_out: list = dataclasses.field(default_factory=list)
 
     @property
     def copy_bytes(self) -> float:
         return self.copy_in_bytes + self.copy_out_bytes
+
+    def add_in(self, nbytes: float) -> None:
+        self.copy_in_bytes += nbytes
+        self.per_copy_in.append(float(nbytes))
+
+    def add_out(self, nbytes: float) -> None:
+        self.copy_out_bytes += nbytes
+        self.per_copy_out.append(float(nbytes))
 
 
 def _with_uniform_meta(m: CSR, max_row_nnz: int) -> CSR:
@@ -45,7 +63,7 @@ def _with_uniform_meta(m: CSR, max_row_nnz: int) -> CSR:
     return CSR(m.indptr, m.indices, m.data, m.shape, max_row_nnz)
 
 
-def _b_chunks(B: CSR, p_b: tuple):
+def b_chunks(B: CSR, p_b: tuple):
     """Row chunks of B, all padded to the largest chunk's nnz."""
     ptr = np.asarray(B.indptr)
     cap = max(int(ptr[e] - ptr[s]) for s, e in zip(p_b[:-1], p_b[1:]))
@@ -64,7 +82,7 @@ def _b_chunks(B: CSR, p_b: tuple):
     return out
 
 
-def _a_strips(A: CSR, p_ac: tuple):
+def a_strips(A: CSR, p_ac: tuple):
     """Row strips of A, padded to the largest strip (rows and nnz)."""
     ptr = np.asarray(A.indptr)
     cap = max(int(ptr[e] - ptr[s]) for s, e in zip(p_ac[:-1], p_ac[1:]))
@@ -99,7 +117,7 @@ def _assemble(strips, p_ac: tuple, n_cols: int) -> CSR:
     for (s, e), c in zip(zip(p_ac[:-1], p_ac[1:]), strips):
         ptr = np.asarray(c.indptr)[: e - s + 1]
         nnz = int(ptr[-1])
-        ptrs.append(ptr[:-1] + base if s > p_ac[0] or base else ptr[:-1] + base)
+        ptrs.append(ptr[:-1] + base)
         idxs.append(np.asarray(c.indices)[:nnz])
         vals.append(np.asarray(c.data)[:nnz])
         base += nnz
@@ -117,10 +135,10 @@ def _assemble(strips, p_ac: tuple, n_cols: int) -> CSR:
 
 def chunk_knl(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int):
     stats = ChunkStats("knl", 1, plan.n_b)
-    chunks = _b_chunks(B, plan.p_b)
+    chunks = b_chunks(B, plan.p_b)
     C = _empty_like_c(A.n_rows, B.n_cols, c_pad, A.dtype)
     for (r0, r1), Bc in zip(zip(plan.p_b[:-1], plan.p_b[1:]), chunks):
-        stats.copy_in_bytes += Bc.nbytes()              # copy2Fast(B, B_rp)
+        stats.add_in(Bc.nbytes())                       # copy2Fast(B, B_rp)
         C = spgemm_ranged(A, Bc, r0, r1, C, c_pad)      # kkmem(A, FastB, C, B_rp)
         stats.kernel_calls += 1
     return C, stats
@@ -134,18 +152,18 @@ def chunk_knl(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int):
 def chunk_gpu1(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int):
     """Alg. 2 — A,C strips stationary in fast memory; B chunks streamed (inner)."""
     stats = ChunkStats("chunk1", plan.n_ac, plan.n_b)
-    strips = _a_strips(A, plan.p_ac)
-    b_chunks = _b_chunks(B, plan.p_b)
+    strips = a_strips(A, plan.p_ac)
+    chunks = b_chunks(B, plan.p_b)
     out = []
     for (a0, a1), Ai in zip(zip(plan.p_ac[:-1], plan.p_ac[1:]), strips):
-        stats.copy_in_bytes += Ai.nbytes()               # FA = copy2Fast(A)
-        stats.copy_in_bytes += (a1 - a0 + 1) * 4         # FC row pointers only
+        stats.add_in(Ai.nbytes())                        # FA = copy2Fast(A)
+        stats.add_in((a1 - a0 + 1) * 4)                  # FC row pointers only
         Ci = _empty_like_c(Ai.n_rows, B.n_cols, c_pad, A.dtype)
-        for (r0, r1), Bc in zip(zip(plan.p_b[:-1], plan.p_b[1:]), b_chunks):
-            stats.copy_in_bytes += Bc.nbytes()           # FB = copy2Fast(B)
+        for (r0, r1), Bc in zip(zip(plan.p_b[:-1], plan.p_b[1:]), chunks):
+            stats.add_in(Bc.nbytes())                    # FB = copy2Fast(B)
             Ci = spgemm_ranged(Ai, Bc, r0, r1, Ci, c_pad)
             stats.kernel_calls += 1
-        stats.copy_out_bytes += Ci.nbytes()              # copy2Slow(FC)
+        stats.add_out(Ci.nbytes())                       # copy2Slow(FC)
         out.append(Ci)
     return _assemble(out, plan.p_ac, B.n_cols), stats
 
@@ -153,25 +171,25 @@ def chunk_gpu1(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int):
 def chunk_gpu2(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int):
     """Alg. 3 — B chunk stationary in fast memory; A,C strips streamed (inner)."""
     stats = ChunkStats("chunk2", plan.n_ac, plan.n_b)
-    strips = _a_strips(A, plan.p_ac)
-    b_chunks = _b_chunks(B, plan.p_b)
+    strips = a_strips(A, plan.p_ac)
+    chunks = b_chunks(B, plan.p_b)
     partials = [
         _empty_like_c(s.n_rows, B.n_cols, c_pad, A.dtype) for s in strips
     ]
     n_b = plan.n_b
-    for jb, ((r0, r1), Bc) in enumerate(zip(zip(plan.p_b[:-1], plan.p_b[1:]), b_chunks)):
-        stats.copy_in_bytes += Bc.nbytes()               # FB = copy2Fast(B)
+    for jb, ((r0, r1), Bc) in enumerate(zip(zip(plan.p_b[:-1], plan.p_b[1:]), chunks)):
+        stats.add_in(Bc.nbytes())                        # FB = copy2Fast(B)
         for ia, Ai in enumerate(strips):
-            stats.copy_in_bytes += Ai.nbytes()           # FA = copy2Fast(A)
+            stats.add_in(Ai.nbytes())                    # FA = copy2Fast(A)
             if jb > 0:
-                stats.copy_in_bytes += partials[ia].nbytes()   # FC partial back in
+                stats.add_in(partials[ia].nbytes())            # FC partial back in
             partials[ia] = spgemm_ranged(Ai, Bc, r0, r1, partials[ia], c_pad)
             stats.kernel_calls += 1
             if jb < n_b - 1:
-                stats.copy_out_bytes += partials[ia].nbytes()  # partial out
+                stats.add_out(partials[ia].nbytes())           # partial out
         if jb == n_b - 1:
             for ia in range(len(strips)):
-                stats.copy_out_bytes += partials[ia].nbytes()  # final copy2Slow
+                stats.add_out(partials[ia].nbytes())           # final copy2Slow
     return _assemble(partials, plan.p_ac, B.n_cols), stats
 
 
@@ -180,30 +198,48 @@ def chunk_gpu2(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int):
 # ---------------------------------------------------------------------------
 
 
-def chunked_spgemm(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int | None = None):
+def default_c_pad(A: CSR, B: CSR, plan: ChunkPlan) -> int:
+    """Exact symbolic capacity of the largest row strip (whole C for 1-strip
+    plans)."""
+    if plan.n_ac == 1:
+        return spgemm_symbolic_host(A, B).c_pad
+    return max(
+        spgemm_symbolic_host(
+            csr_select_rows_host(A, s, e, pad_to=A.nnz_pad), B
+        ).c_pad
+        for s, e in zip(plan.p_ac[:-1], plan.p_ac[1:])
+    )
+
+
+def chunked_spgemm(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int | None = None,
+                   backend: str = "scan"):
     """Execute a ChunkPlan. ``c_pad`` defaults to the exact symbolic capacity of the
-    largest row strip (whole C for 1-strip plans)."""
+    largest row strip (whole C for 1-strip plans).
+
+    ``backend`` selects the executor: ``"scan"`` (default) runs the whole chunk
+    loop device-resident inside one jitted ``lax.scan``; ``"loop"`` is the
+    host-driven Python loop, retained as the bitwise oracle for the scan path.
+    """
     if c_pad is None:
-        if plan.n_ac == 1:
-            c_pad = spgemm_symbolic_host(A, B).c_pad
-        else:
-            c_pad = max(
-                spgemm_symbolic_host(
-                    csr_select_rows_host(A, s, e, pad_to=A.nnz_pad), B
-                ).c_pad
-                for s, e in zip(plan.p_ac[:-1], plan.p_ac[1:])
-            )
+        c_pad = default_c_pad(A, B, plan)
     if plan.algorithm == "whole_fast":
         stats = ChunkStats("whole_fast", 1, 1)
-        stats.copy_in_bytes = A.nbytes() + B.nbytes()
+        stats.add_in(A.nbytes() + B.nbytes())
         C = spgemm(A, B, c_pad)
-        stats.copy_out_bytes = C.nbytes()
+        stats.add_out(C.nbytes())
         stats.kernel_calls = 1
         return C, stats
-    if plan.algorithm == "knl":
-        return chunk_knl(A, B, plan, c_pad)
-    if plan.algorithm == "chunk1":
-        return chunk_gpu1(A, B, plan, c_pad)
-    if plan.algorithm == "chunk2":
-        return chunk_gpu2(A, B, plan, c_pad)
-    raise ValueError(f"unknown algorithm {plan.algorithm!r}")
+    if backend == "scan":
+        from repro.core.chunk_stream import (
+            chunk_knl_scan, chunk_gpu1_scan, chunk_gpu2_scan,
+        )
+        table = {"knl": chunk_knl_scan, "chunk1": chunk_gpu1_scan,
+                 "chunk2": chunk_gpu2_scan}
+    elif backend == "loop":
+        table = {"knl": chunk_knl, "chunk1": chunk_gpu1, "chunk2": chunk_gpu2}
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    fn = table.get(plan.algorithm)
+    if fn is None:
+        raise ValueError(f"unknown algorithm {plan.algorithm!r}")
+    return fn(A, B, plan, c_pad)

@@ -157,14 +157,17 @@ def spgemm(A: CSR, B: CSR, c_pad: int, c_max_row_nnz: int = 0) -> CSR:
                c_max_row_nnz or c_pad)
 
 
-@partial(jax.jit, static_argnames=("c_pad", "c_max_row_nnz"))
-def spgemm_ranged(A: CSR, B_chunk: CSR, r0, r1, C_prev: CSR, c_pad: int,
-                  c_max_row_nnz: int = 0) -> CSR:
+def spgemm_ranged_impl(A: CSR, B_chunk: CSR, r0, r1, C_prev: CSR, c_pad: int,
+                       c_max_row_nnz: int = 0) -> CSR:
     """Fused multiply-add over a B row-range: C = A[:, r0:r1] x B_chunk + C_prev.
 
     The previous partial result's entries join the product stream before
     accumulation — the paper's fused-add into the hashmap accumulators. A is NOT
     physically column-partitioned; out-of-range entries are masked ("skipped").
+
+    This is the traceable body; ``spgemm_ranged`` is the jitted entry point. The
+    scan executors (repro.core.chunk_stream) inline this body inside a
+    ``lax.scan`` so the whole chunk loop compiles as one program.
     """
     rows, cols, vals = _expand_products(A, B_chunk, r0, r1)
     prev_entry = jnp.arange(C_prev.nnz_pad, dtype=jnp.int32)
@@ -178,6 +181,11 @@ def spgemm_ranged(A: CSR, B_chunk: CSR, r0, r1, C_prev: CSR, c_pad: int,
     indptr, indices, data = _accumulate(rows, cols, vals, A.n_rows, B_chunk.n_cols, c_pad)
     return CSR(indptr, indices, data, (A.n_rows, B_chunk.n_cols),
                c_max_row_nnz or c_pad)
+
+
+spgemm_ranged = partial(jax.jit, static_argnames=("c_pad", "c_max_row_nnz"))(
+    spgemm_ranged_impl
+)
 
 
 def spgemm_full(A: CSR, B: CSR) -> CSR:

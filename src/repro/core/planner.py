@@ -39,6 +39,11 @@ class ChunkPlan:
     def n_b(self) -> int:
         return len(self.p_b) - 1
 
+    def b_ranges(self) -> tuple:
+        """(r0s, r1s) of the B partition as int32 arrays — scan per-step inputs."""
+        b = np.asarray(self.p_b, np.int32)
+        return b[:-1], b[1:]
+
 
 def row_bytes_csr(m: CSR, value_bytes: int = 8, index_bytes: int = 4) -> np.ndarray:
     """Per-row byte footprint (values + column indices; indptr amortized)."""

@@ -1,0 +1,9 @@
+"""jax version compat shims shared by the Pallas kernels.
+
+jax <= 0.4.x ships ``pltpu.TPUCompilerParams``; newer jax renamed it to
+``pltpu.CompilerParams``. Every kernel imports the resolved name from here.
+"""
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "TPUCompilerParams", None) or pltpu.CompilerParams

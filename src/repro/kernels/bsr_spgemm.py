@@ -30,6 +30,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 from repro.sparse.bsr import BSR
 
 
@@ -165,7 +167,7 @@ def bsr_spgemm_blocks(a_blocks: jax.Array, b_blocks: jax.Array, a_slots: jax.Arr
             scratch_shapes=[pltpu.VMEM((bs, bs), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((nc_pad, bs, bs), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -28,7 +28,7 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch import roofline as rf
 from repro.models import transformer as tf
 from repro.parallel.sharding import (
-    param_shardings, batch_shardings, cache_shardings, replicated,
+    param_shardings, batch_shardings, cache_shardings,
 )
 from repro.train.optim import TrainConfig
 from repro.train.step import make_train_step, make_prefill, make_serve_step, \

@@ -10,6 +10,16 @@ from __future__ import annotations
 import jax
 
 
+def mesh_kwargs(n_axes: int) -> dict:
+    """jax >= 0.5 takes axis_types=(AxisType.Auto, ...); older jax has neither
+    the enum nor the kwarg — explicit-sharding mode simply doesn't exist there,
+    so omitting it is the exact equivalent."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips with a leading "pod" axis.
 
@@ -19,14 +29,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **mesh_kwargs(len(axes)))
 
 
 def make_host_mesh(model_parallel: int = 1):
     """Degenerate mesh over whatever devices exist (CPU tests / examples)."""
     n = len(jax.devices())
     mp = model_parallel if n % model_parallel == 0 else 1
-    return jax.make_mesh(
-        (n // mp, mp), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((n // mp, mp), ("data", "model"), **mesh_kwargs(2))

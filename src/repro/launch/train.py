@@ -21,7 +21,6 @@ import dataclasses
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import get_config
 from repro.data.pipeline import make_batch_iterator

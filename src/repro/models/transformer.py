@@ -19,7 +19,6 @@ frontend (DESIGN.md §5).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

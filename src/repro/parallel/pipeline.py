@@ -19,7 +19,6 @@ residual blocks (zero attn/mlp output => x + 0 = x).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -168,6 +168,52 @@ def csr_select_rows_host(m: CSR, r0: int, r1: int, pad_to: int | None = None) ->
                                pad_to, dtype=m.dtype)
 
 
+def csr_stack(mats) -> CSR:
+    """Stack uniformly-padded CSRs along a new leading axis (host-side).
+
+    The result reuses the ``CSR`` container: every array field gains a leading
+    ``len(mats)`` axis while ``shape``/``max_row_nnz`` keep the *per-element*
+    geometry. That makes the stack directly usable as ``lax.scan`` xs (or
+    ``vmap`` operands): slicing the leading axis of each field yields a valid
+    per-chunk ``CSR`` with identical static metadata, so the scan body traces
+    once. Element-wise host accessors (``nnz_pad`` etc.) are meaningless on the
+    stacked object — unstack first.
+
+    All inputs must share shape, indptr length, nnz capacity and
+    ``max_row_nnz`` (what the chunkers' uniform padding guarantees).
+    """
+    mats = list(mats)
+    if not mats:
+        raise ValueError("csr_stack needs at least one matrix")
+    first = mats[0]
+    for m in mats[1:]:
+        if (m.shape != first.shape or m.indptr.shape != first.indptr.shape
+                or m.indices.shape != first.indices.shape
+                or m.max_row_nnz != first.max_row_nnz
+                or m.dtype != first.dtype):
+            raise ValueError(
+                "csr_stack requires uniform padded geometry: "
+                f"{m!r} vs {first!r}"
+            )
+    return CSR(
+        indptr=jnp.stack([m.indptr for m in mats]),
+        indices=jnp.stack([m.indices for m in mats]),
+        data=jnp.stack([m.data for m in mats]),
+        shape=first.shape,
+        max_row_nnz=first.max_row_nnz,
+    )
+
+
+def csr_unstack(stacked: CSR) -> list:
+    """Inverse of ``csr_stack``: split the leading axis back into CSRs."""
+    n = stacked.indptr.shape[0]
+    return [
+        CSR(stacked.indptr[i], stacked.indices[i], stacked.data[i],
+            stacked.shape, stacked.max_row_nnz)
+        for i in range(n)
+    ]
+
+
 def csr_transpose_host(m: CSR, pad_to: int | None = None) -> CSR:
     """Host-side transpose (multigrid P = R^T)."""
     indptr = np.asarray(m.indptr)

@@ -15,6 +15,10 @@ from repro.models import transformer as tf
 from repro.train.optim import TrainConfig
 from repro.train.step import make_train_step, init_opt_state
 
+# the arch zoo is ~4 min of compile-heavy smoke on CPU — nightly/full-lane
+# material; the fast CI lane covers the model stack via test_models.py
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 
 

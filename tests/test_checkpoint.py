@@ -7,6 +7,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from repro.launch.mesh import mesh_kwargs
 from repro.ckpt.checkpoint import (
     save_checkpoint, restore_checkpoint, latest_step, CheckpointManager,
 )
@@ -66,8 +67,7 @@ def test_elastic_restore_with_shardings(tmp_path):
     On 1 device the sharding is degenerate but the code path is identical."""
     t = _tree()
     save_checkpoint(str(tmp_path), 5, t)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((1,), ("data",), **mesh_kwargs(1))
     sh = jax.tree.map(
         lambda _: jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
         t)

@@ -1,0 +1,142 @@
+"""Scan executors (repro.core.chunk_stream) vs the loop oracle.
+
+The contract: for every algorithm and every plan, the device-resident scan
+executor produces the *identical* CSR (structure and values, bit-for-bit) and
+the *identical* modeled per-copy byte event sequence as the host-driven loop,
+while compiling its chunk loop O(1) times regardless of the chunk count.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.chunk_stream import (
+    TRACE_COUNTS, chunk_gpu1_scan, chunk_gpu2_scan, chunk_knl_scan,
+    chunked_spgemm_batched,
+)
+from repro.core.chunking import (
+    chunk_gpu1, chunk_gpu2, chunk_knl, chunked_spgemm,
+)
+from repro.core.kkmem import spgemm_dense_oracle, spgemm_symbolic_host
+from repro.core.planner import ChunkPlan, plan_knl
+from repro.sparse import multigrid
+from repro.sparse.csr import csr_from_dense, csr_to_dense
+from conftest import assert_close, csr_pair_cases
+
+LOOP = {"knl": chunk_knl, "chunk1": chunk_gpu1, "chunk2": chunk_gpu2}
+SCAN = {"knl": chunk_knl_scan, "chunk1": chunk_gpu1_scan, "chunk2": chunk_gpu2_scan}
+
+
+def _random_plan(algorithm, A, B, rng):
+    """A random-but-valid plan: contiguous row partitions of A/C and B."""
+    def cuts(n, max_parts):
+        k = int(rng.integers(1, max_parts + 1))
+        inner = sorted(set(rng.integers(1, n, size=k - 1).tolist())) if n > 1 else []
+        return tuple([0] + inner + [n])
+
+    p_ac = (0, A.n_rows) if algorithm == "knl" else cuts(A.n_rows, 4)
+    p_b = cuts(B.n_rows, 4)
+    return ChunkPlan(algorithm, p_ac, p_b, copy_bytes=0.0, fast_bytes_needed=0.0)
+
+
+def _assert_same_csr(Cl, Cs):
+    assert Cl.shape == Cs.shape
+    np.testing.assert_array_equal(np.asarray(Cl.indptr), np.asarray(Cs.indptr))
+    np.testing.assert_array_equal(np.asarray(Cl.indices), np.asarray(Cs.indices))
+    np.testing.assert_array_equal(np.asarray(Cl.data), np.asarray(Cs.data))
+
+
+@pytest.mark.parametrize("algorithm", ["knl", "chunk1", "chunk2"])
+def test_scan_matches_loop_random_plans(algorithm):
+    """Property: identical CSRs and identical per-copy byte events across
+    random matrices x random plans."""
+    rng = np.random.default_rng(7)
+    for i, (A, B) in enumerate(csr_pair_cases(n_examples=5, max_dim=18, seed=3)):
+        plan = _random_plan(algorithm, A, B, rng)
+        c_pad = spgemm_symbolic_host(A, B).c_pad
+        Cl, sl = LOOP[algorithm](A, B, plan, c_pad)
+        Cs, ss = SCAN[algorithm](A, B, plan, c_pad)
+        _assert_same_csr(Cl, Cs)
+        assert sl.per_copy_in == ss.per_copy_in, f"case {i}"
+        assert sl.per_copy_out == ss.per_copy_out, f"case {i}"
+        assert sl.copy_in_bytes == ss.copy_in_bytes
+        assert sl.copy_out_bytes == ss.copy_out_bytes
+        assert sl.kernel_calls == ss.kernel_calls
+        assert_close(csr_to_dense(Cs), spgemm_dense_oracle(A, B), atol=1e-3,
+                     msg=f"case {i}")
+
+
+@pytest.mark.parametrize("algorithm", ["chunk1", "chunk2"])
+def test_scan_matches_loop_2d_plans(algorithm):
+    """Both 2-D streaming orders on a real multigrid problem."""
+    A, R, P = multigrid.problem("brick3d", 5)
+    ws = spgemm_symbolic_host(A, P)
+    n_a, n_b = A.n_rows, P.n_rows
+    plan = ChunkPlan(algorithm,
+                     (0, n_a // 3, 2 * n_a // 3, n_a),
+                     (0, n_b // 4, n_b // 2, n_b),
+                     copy_bytes=0.0, fast_bytes_needed=0.0)
+    Cl, sl = LOOP[algorithm](A, P, plan, ws.c_pad)
+    Cs, ss = SCAN[algorithm](A, P, plan, ws.c_pad)
+    _assert_same_csr(Cl, Cs)
+    assert sl.per_copy_in == ss.per_copy_in
+    assert sl.per_copy_out == ss.per_copy_out
+    assert_close(csr_to_dense(Cs), spgemm_dense_oracle(A, P), atol=1e-4)
+
+
+def test_dispatcher_backends_agree():
+    A, R, P = multigrid.problem("laplace3d", 6)
+    plan = plan_knl(A, P, fast_limit_bytes=P.nbytes() * 0.3)
+    assert plan.n_b >= 2
+    Cl, sl = chunked_spgemm(A, P, plan, backend="loop")
+    Cs, ss = chunked_spgemm(A, P, plan, backend="scan")
+    _assert_same_csr(Cl, Cs)
+    assert sl.copy_bytes == ss.copy_bytes
+    with pytest.raises(ValueError):
+        chunked_spgemm(A, P, plan, backend="nope")
+
+
+@pytest.mark.parametrize("algorithm", ["knl", "chunk1", "chunk2"])
+def test_scan_compiles_once_per_algorithm(algorithm):
+    """<= 2 compilations of the chunk loop regardless of the chunk count, and
+    zero recompilation on a second run with the same padded geometry."""
+    A, R, P = multigrid.problem("brick3d", 5)
+    ws = spgemm_symbolic_host(A, P)
+    n_a, n_b = A.n_rows, P.n_rows
+    p_ac = (0, n_a) if algorithm == "knl" else tuple(
+        int(v) for v in np.linspace(0, n_a, 5))
+    p_b = tuple(int(v) for v in np.linspace(0, n_b, 7))   # 6 B chunks
+    plan = ChunkPlan(algorithm, p_ac, p_b, 0.0, 0.0)
+    before_w = TRACE_COUNTS[algorithm]
+    before_b = TRACE_COUNTS[f"{algorithm}_body"]
+    SCAN[algorithm](A, P, plan, ws.c_pad)
+    assert TRACE_COUNTS[algorithm] - before_w <= 2
+    assert TRACE_COUNTS[f"{algorithm}_body"] - before_b <= 2
+    mid_w = TRACE_COUNTS[algorithm]
+    mid_b = TRACE_COUNTS[f"{algorithm}_body"]
+    SCAN[algorithm](A, P, plan, ws.c_pad)   # same geometry: cache hit
+    assert TRACE_COUNTS[algorithm] == mid_w
+    assert TRACE_COUNTS[f"{algorithm}_body"] == mid_b
+
+
+@pytest.mark.parametrize("algorithm", ["knl", "chunk1", "chunk2"])
+def test_batched_matches_per_instance_loop(algorithm):
+    """vmapped scan over instances sharing one structure == per-instance loop."""
+    rng = np.random.default_rng(11)
+    base_a = (rng.random((20, 16)) < 0.25) * 1.0
+    base_b = (rng.random((16, 18)) < 0.25) * 1.0
+    As, Bs = [], []
+    for _ in range(3):
+        As.append(csr_from_dense(
+            (base_a * rng.standard_normal(base_a.shape)).astype(np.float32)))
+        Bs.append(csr_from_dense(
+            (base_b * rng.standard_normal(base_b.shape)).astype(np.float32)))
+    c_pad = max(spgemm_symbolic_host(A, B).c_pad for A, B in zip(As, Bs))
+    p_ac = (0, 20) if algorithm == "knl" else (0, 7, 20)
+    plan = ChunkPlan(algorithm, p_ac, (0, 6, 11, 16), 0.0, 0.0)
+    Cs_list, stats = chunked_spgemm_batched(As, Bs, plan, c_pad=c_pad)
+    assert len(Cs_list) == 3
+    for A, B, Cb in zip(As, Bs, Cs_list):
+        Cl, sl = LOOP[algorithm](A, B, plan, c_pad)
+        _assert_same_csr(Cl, Cb)
+        assert sl.per_copy_in == stats.per_copy_in
+        assert sl.per_copy_out == stats.per_copy_out

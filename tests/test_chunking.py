@@ -2,17 +2,17 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import given, settings, st
 
 from repro.core.kkmem import spgemm_symbolic_host, spgemm_dense_oracle
 from repro.core.planner import (
     plan_chunks, plan_knl, binary_search_partition, partition_cost, row_bytes_csr,
 )
 from repro.core.chunking import chunked_spgemm, chunk_knl, chunk_gpu1, chunk_gpu2
-from repro.core.memory_model import P100, KNL
+from repro.core.memory_model import P100
 from repro.sparse import multigrid
 from repro.sparse.csr import csr_to_dense
-from conftest import random_csr, assert_close
+from conftest import assert_close
 
 
 @pytest.fixture(scope="module")

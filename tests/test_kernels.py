@@ -4,7 +4,6 @@ Per instructions: sweep shapes/dtypes and assert_allclose against ref.py."""
 
 import numpy as np
 import pytest
-import jax
 import jax.numpy as jnp
 
 from repro.sparse.bsr import bsr_from_dense, bsr_to_dense

@@ -2,7 +2,7 @@
 property (the paper's central algorithmic invariant)."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from conftest import given, settings, st
 
 import jax.numpy as jnp
 

@@ -1,7 +1,7 @@
 """Reuse-distance machinery vs brute force + triangle counting."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from conftest import given, settings, st
 
 from repro.core.locality import stack_distances, analyze, b_access_trace
 from repro.core.triangle import count_triangles, count_triangles_dense

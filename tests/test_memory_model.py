@@ -1,6 +1,5 @@
 """Memory cost model + placement: the paper's qualitative claims hold."""
 
-import numpy as np
 import pytest
 
 from repro.core.memory_model import KNL, P100, TPU_V5E, spgemm_cost

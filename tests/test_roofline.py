@@ -1,6 +1,5 @@
 """Roofline extraction: HLO collective parser + analytic flops + report math."""
 
-import numpy as np
 import pytest
 
 from repro.launch.roofline import (

@@ -7,12 +7,11 @@ arithmetic, which is what we check here against mesh shape dicts. The real-mesh
 compile check is the dry-run's job (launch/dryrun.py, run as a subprocess in
 test_dryrun_subprocess below)."""
 
-import numpy as np
 import pytest
 import jax
 
 from repro.configs import ARCH_IDS, get_config
-from repro.configs.shapes import SHAPES, input_specs, skip_reason
+from repro.configs.shapes import input_specs, skip_reason
 from repro.models import transformer as tf
 
 

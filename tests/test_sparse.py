@@ -2,12 +2,10 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-
-import jax.numpy as jnp
+from conftest import given, settings, st
 
 from repro.sparse.csr import (
-    CSR, csr_from_dense, csr_to_dense, csr_from_coo, csr_transpose_host,
+    csr_from_dense, csr_to_dense, csr_from_coo, csr_transpose_host,
     csr_select_rows_host, csr_row_of_entry,
 )
 from repro.sparse.bsr import bsr_from_dense, bsr_to_dense, bsr_from_csr

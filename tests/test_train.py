@@ -8,8 +8,7 @@ import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
 from repro.models import transformer as tf
-from repro.train.optim import TrainConfig, lr_schedule, adamw_init, adamw_update, \
-    global_norm
+from repro.train.optim import TrainConfig, lr_schedule, adamw_init, adamw_update
 from repro.train.compress import compress_grads, decompress_grads, ef_init, roundtrip
 from repro.train.step import make_train_step, init_opt_state
 from repro.data.pipeline import SyntheticLM

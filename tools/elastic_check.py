@@ -14,14 +14,13 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.ckpt.checkpoint import save_checkpoint, restore_checkpoint
+from repro.launch.mesh import mesh_kwargs
 
 
 def main():
     tmp = tempfile.mkdtemp(prefix="elastic_")
-    mesh_a = jax.make_mesh((8,), ("data",),
-                           axis_types=(jax.sharding.AxisType.Auto,))
-    mesh_b = jax.make_mesh((4, 2), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh_a = jax.make_mesh((8,), ("data",), **mesh_kwargs(1))
+    mesh_b = jax.make_mesh((4, 2), ("data", "model"), **mesh_kwargs(2))
     rng = np.random.default_rng(0)
     host = {"w": rng.standard_normal((64, 32)).astype(np.float32),
             "b": rng.standard_normal((16,)).astype(np.float32)}

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.launch.mesh import mesh_kwargs
 from repro.parallel.pipeline import (
     pipeline_forward, sequential_reference, split_stages, pad_layers_identity,
 )
@@ -32,8 +33,7 @@ def main():
                           jnp.float32),
     }
     x = jnp.asarray(rng.standard_normal((t_micro, mb, d)), jnp.float32)
-    mesh = jax.make_mesh((n_stages,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((n_stages,), ("stage",), **mesh_kwargs(1))
 
     want = sequential_reference(stacked, x, body_fn)
     staged = split_stages(stacked, n_stages)
