@@ -17,10 +17,11 @@ from repro.core.placement import (
 )
 from repro.core.planner import (
     ChunkPlan, plan_chunks, plan_knl, binary_search_partition, partition_cost,
-    row_bytes_csr,
+    row_bytes_csr, staged_chunk_bytes,
 )
 from repro.core.chunking import (
     ChunkStats, chunk_knl, chunk_gpu1, chunk_gpu2, chunked_spgemm,
+    instance_envelope, batch_envelope,
 )
 from repro.core.chunk_stream import (
     chunk_knl_scan, chunk_gpu1_scan, chunk_gpu2_scan, chunked_spgemm_batched,
@@ -36,8 +37,9 @@ __all__ = [
     "Placement", "ALL_FAST", "ALL_SLOW", "DP", "dp_recommendation",
     "placement_cost", "place",
     "ChunkPlan", "plan_chunks", "plan_knl", "binary_search_partition",
-    "partition_cost", "row_bytes_csr",
+    "partition_cost", "row_bytes_csr", "staged_chunk_bytes",
     "ChunkStats", "chunk_knl", "chunk_gpu1", "chunk_gpu2", "chunked_spgemm",
+    "instance_envelope", "batch_envelope",
     "chunk_knl_scan", "chunk_gpu1_scan", "chunk_gpu2_scan",
     "chunked_spgemm_batched",
     "count_triangles", "count_triangles_dense",

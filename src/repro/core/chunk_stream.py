@@ -24,7 +24,11 @@ chunk/strip/partial the same size, so the loop executors' exact per-copy event
 sequence is reproducible host-side (and is asserted identical in tests).
 
 ``chunked_spgemm_batched`` vmaps the scan executors over stacked problem
-instances sharing one plan — the many-small-matrices serving scenario.
+instances sharing one plan — the many-small-matrices serving scenario. Batches
+may mix sparsity structures: every instance is repadded to a shared
+``GeometryEnvelope`` (the batch union, or a caller-provided bucket envelope)
+before stacking. ``repro.serve.spgemm_service`` builds the request-bucketing
+service on top.
 """
 
 from __future__ import annotations
@@ -37,11 +41,13 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.chunking import (
-    ChunkStats, _assemble, a_strips, b_chunks, default_c_pad,
+    ChunkStats, _assemble, a_strips, b_chunks, batch_envelope,
 )
 from repro.core.kkmem import spgemm_ranged_impl
 from repro.core.planner import ChunkPlan
-from repro.sparse.csr import CSR, csr_stack, csr_unstack
+from repro.sparse.csr import (
+    CSR, GeometryEnvelope, csr_pad_to, csr_stack, csr_unstack,
+)
 
 # Python-side trace counters: each key increments once per (re)trace of the
 # corresponding jitted wrapper / scan body. Tests assert these stay O(1) in
@@ -78,10 +84,7 @@ def _empty_c_stack(n: int, n_rows: int, n_cols: int, c_pad: int, dtype) -> CSR:
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("c_pad",))
-def _knl_scan(A: CSR, Bs: CSR, r0s, r1s, C0: CSR, c_pad: int) -> CSR:
-    TRACE_COUNTS["knl"] += 1
-
+def _knl_scan_impl(A: CSR, Bs: CSR, r0s, r1s, C0: CSR, c_pad: int) -> CSR:
     def body(C, x):
         TRACE_COUNTS["knl_body"] += 1
         Bc, r0, r1 = x
@@ -91,12 +94,7 @@ def _knl_scan(A: CSR, Bs: CSR, r0s, r1s, C0: CSR, c_pad: int) -> CSR:
     return C
 
 
-@partial(jax.jit, static_argnames=("c_pad",))
-def _chunk1_scan(As: CSR, Bs: CSR, r0s, r1s, C0: CSR, c_pad: int) -> CSR:
-    """A/C strips outer (stationary), B chunks inner (streamed). Returns the
-    stacked per-strip results ([n_ac] leading axis)."""
-    TRACE_COUNTS["chunk1"] += 1
-
+def _chunk1_scan_impl(As: CSR, Bs: CSR, r0s, r1s, C0: CSR, c_pad: int) -> CSR:
     def outer(carry, Ai):
         def inner(C, x):
             TRACE_COUNTS["chunk1_body"] += 1
@@ -110,12 +108,7 @@ def _chunk1_scan(As: CSR, Bs: CSR, r0s, r1s, C0: CSR, c_pad: int) -> CSR:
     return Cs
 
 
-@partial(jax.jit, static_argnames=("c_pad",))
-def _chunk2_scan(As: CSR, Bs: CSR, r0s, r1s, C0s: CSR, c_pad: int) -> CSR:
-    """B chunk outer (stationary), A/C strips inner (streamed); all per-strip
-    partials ride the scan carry. Returns the stacked per-strip results."""
-    TRACE_COUNTS["chunk2"] += 1
-
+def _chunk2_scan_impl(As: CSR, Bs: CSR, r0s, r1s, C0s: CSR, c_pad: int) -> CSR:
     def outer(Cs, x):
         Bc, r0, r1 = x
 
@@ -129,6 +122,57 @@ def _chunk2_scan(As: CSR, Bs: CSR, r0s, r1s, C0s: CSR, c_pad: int) -> CSR:
 
     Cs, _ = lax.scan(outer, C0s, (Bs, r0s, r1s))
     return Cs
+
+
+@partial(jax.jit, static_argnames=("c_pad",))
+def _knl_scan(A: CSR, Bs: CSR, r0s, r1s, C0: CSR, c_pad: int) -> CSR:
+    TRACE_COUNTS["knl"] += 1
+    return _knl_scan_impl(A, Bs, r0s, r1s, C0, c_pad)
+
+
+@partial(jax.jit, static_argnames=("c_pad",))
+def _chunk1_scan(As: CSR, Bs: CSR, r0s, r1s, C0: CSR, c_pad: int) -> CSR:
+    """A/C strips outer (stationary), B chunks inner (streamed). Returns the
+    stacked per-strip results ([n_ac] leading axis)."""
+    TRACE_COUNTS["chunk1"] += 1
+    return _chunk1_scan_impl(As, Bs, r0s, r1s, C0, c_pad)
+
+
+@partial(jax.jit, static_argnames=("c_pad",))
+def _chunk2_scan(As: CSR, Bs: CSR, r0s, r1s, C0s: CSR, c_pad: int) -> CSR:
+    """B chunk outer (stationary), A/C strips inner (streamed); all per-strip
+    partials ride the scan carry. Returns the stacked per-strip results."""
+    TRACE_COUNTS["chunk2"] += 1
+    return _chunk2_scan_impl(As, Bs, r0s, r1s, C0s, c_pad)
+
+
+# Batched (vmapped) cores: one jitted program per (envelope, plan, batch)
+# geometry. Each gets its own TRACE_COUNTS key so the serving layer can assert
+# "one compile per geometry bucket" directly.
+
+
+@partial(jax.jit, static_argnames=("c_pad",))
+def _knl_scan_batched(Ast: CSR, Bst: CSR, r0s, r1s, C0s: CSR, c_pad: int) -> CSR:
+    TRACE_COUNTS["knl_batched"] += 1
+    return jax.vmap(
+        lambda A, Bs, C0: _knl_scan_impl(A, Bs, r0s, r1s, C0, c_pad)
+    )(Ast, Bst, C0s)
+
+
+@partial(jax.jit, static_argnames=("c_pad",))
+def _chunk1_scan_batched(Ast: CSR, Bst: CSR, r0s, r1s, C0: CSR, c_pad: int) -> CSR:
+    TRACE_COUNTS["chunk1_batched"] += 1
+    return jax.vmap(
+        lambda As, Bs: _chunk1_scan_impl(As, Bs, r0s, r1s, C0, c_pad)
+    )(Ast, Bst)
+
+
+@partial(jax.jit, static_argnames=("c_pad",))
+def _chunk2_scan_batched(Ast: CSR, Bst: CSR, r0s, r1s, C0s: CSR, c_pad: int) -> CSR:
+    TRACE_COUNTS["chunk2_batched"] += 1
+    return jax.vmap(
+        lambda As, Bs: _chunk2_scan_impl(As, Bs, r0s, r1s, C0s, c_pad)
+    )(Ast, Bst)
 
 
 # ---------------------------------------------------------------------------
@@ -227,54 +271,76 @@ def chunk_gpu2_scan(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int):
 # ---------------------------------------------------------------------------
 
 
-def chunked_spgemm_batched(As, Bs, plan: ChunkPlan, c_pad: int | None = None):
+def chunked_spgemm_batched(As, Bs, plan: ChunkPlan, c_pad: int | None = None,
+                           envelope: GeometryEnvelope | None = None):
     """vmap the scan executor over stacked problem instances sharing one plan.
 
-    All instances must share the padded geometry (same shapes, nnz capacities,
-    ``max_row_nnz`` — e.g. the same sparsity structure with different values),
-    which is what lets one compiled program serve the whole batch. Returns
-    ``(list_of_C, stats)`` where ``stats`` is the per-instance modeled copy
-    accounting (identical across the batch by construction).
+    Instances must share shapes and dtype but may differ in sparsity
+    *structure* (nnz, nnz capacities, ``max_row_nnz``): every instance's chunks
+    and strips are repadded to a shared :class:`GeometryEnvelope` — by default
+    the batch's union envelope, or a caller-provided (e.g. bucket-quantized)
+    one — before stacking, so one compiled program serves the whole batch.
+    Same-structure batches repad to their own geometry (a no-op), keeping the
+    results bitwise-identical to the unbatched scan executors.
+
+    Returns ``(list_of_C, stats)`` where ``stats`` is the per-instance modeled
+    copy accounting at the *envelope-padded* staged sizes (identical across the
+    batch by construction).
     """
     As, Bs = list(As), list(Bs)
     if len(As) != len(Bs) or not As:
         raise ValueError("need equal, nonzero numbers of A and B instances")
-    if c_pad is None:
-        c_pad = max(default_c_pad(A, B, plan) for A, B in zip(As, Bs))
     if plan.algorithm not in ("knl", "chunk1", "chunk2"):
         raise ValueError(f"unsupported algorithm {plan.algorithm!r}")
+    for A, B in zip(As, Bs):
+        if A.shape != As[0].shape or B.shape != Bs[0].shape:
+            raise ValueError(
+                "batched instances must share shapes: "
+                f"{A.shape}x{B.shape} vs {As[0].shape}x{Bs[0].shape}"
+            )
+    if envelope is None:
+        envelope = batch_envelope(As, Bs, plan, c_pad=c_pad)
+    elif c_pad is not None and c_pad != envelope.c_pad:
+        raise ValueError(
+            f"conflicting c_pad={c_pad} vs envelope.c_pad={envelope.c_pad}"
+        )
+    if envelope.a_shape != As[0].shape or envelope.b_shape != Bs[0].shape:
+        raise ValueError(
+            f"envelope shapes {envelope.a_shape}x{envelope.b_shape} do not "
+            f"match instances {As[0].shape}x{Bs[0].shape}"
+        )
+    c_pad = envelope.c_pad
     r0s, r1s = plan.b_ranges()
     r0s, r1s = jnp.asarray(r0s), jnp.asarray(r1s)
     n_cols = Bs[0].n_cols
     dtype = As[0].dtype
-    chunk_lists = [b_chunks(B, plan.p_b) for B in Bs]
+    chunk_lists = [b_chunks(B, plan.p_b, envelope=envelope) for B in Bs]
     Bst = csr_stack([csr_stack(cl) for cl in chunk_lists])   # [batch, n_b, ...]
     chunk_nbytes = chunk_lists[0][0].nbytes()
 
     if plan.algorithm == "knl":
-        Ast = csr_stack(As)
-        C0 = csr_stack([_empty_c(A.n_rows, n_cols, c_pad, dtype) for A in As])
-        run = jax.vmap(partial(_knl_scan, c_pad=c_pad),
-                       in_axes=(0, 0, None, None, 0))
-        Cb = run(Ast, Bst, r0s, r1s, C0)
+        Ast = csr_stack([
+            csr_pad_to(A, nnz_cap=envelope.a_nnz_cap,
+                       max_row_nnz=envelope.a_max_row_nnz)
+            for A in As
+        ])
+        n_rows = envelope.a_shape[0]
+        C0s = _empty_c_stack(len(As), n_rows, n_cols, c_pad, dtype)
+        Cb = _knl_scan_batched(Ast, Bst, r0s, r1s, C0s, c_pad=c_pad)
         stats = planned_stats(plan, chunk_nbytes, 0, 0)
         return csr_unstack(Cb), stats
 
-    strip_lists = [a_strips(A, plan.p_ac) for A in As]
+    strip_lists = [a_strips(A, plan.p_ac, envelope=envelope) for A in As]
     Ast = csr_stack([csr_stack(sl) for sl in strip_lists])   # [batch, n_ac, ...]
-    strip_rows = strip_lists[0][0].n_rows
+    strip_rows = envelope.strip_rows
     stats = planned_stats(plan, chunk_nbytes, strip_lists[0][0].nbytes(),
                           _c_strip_nbytes(strip_rows, c_pad, dtype))
     if plan.algorithm == "chunk1":
         C0 = _empty_c(strip_rows, n_cols, c_pad, dtype)
-        run = jax.vmap(partial(_chunk1_scan, c_pad=c_pad),
-                       in_axes=(0, 0, None, None, None))
-        Cb = run(Ast, Bst, r0s, r1s, C0)
+        Cb = _chunk1_scan_batched(Ast, Bst, r0s, r1s, C0, c_pad=c_pad)
     else:
         C0s = _empty_c_stack(plan.n_ac, strip_rows, n_cols, c_pad, dtype)
-        run = jax.vmap(partial(_chunk2_scan, c_pad=c_pad),
-                       in_axes=(0, 0, None, None, None))
-        Cb = run(Ast, Bst, r0s, r1s, C0s)
+        Cb = _chunk2_scan_batched(Ast, Bst, r0s, r1s, C0s, c_pad=c_pad)
     out = [
         _assemble(csr_unstack(Ci), plan.p_ac, n_cols)
         for Ci in csr_unstack(Cb)

@@ -27,7 +27,9 @@ import jax.numpy as jnp
 
 from repro.core.kkmem import spgemm, spgemm_ranged, spgemm_symbolic_host
 from repro.core.planner import ChunkPlan
-from repro.sparse.csr import CSR, csr_select_rows_host
+from repro.sparse.csr import (
+    CSR, GeometryEnvelope, csr_pad_to, csr_select_rows_host,
+)
 
 
 @dataclasses.dataclass
@@ -58,46 +60,75 @@ class ChunkStats:
         self.per_copy_out.append(float(nbytes))
 
 
-def _with_uniform_meta(m: CSR, max_row_nnz: int) -> CSR:
-    """Force identical static metadata across chunks so jit traces once."""
-    return CSR(m.indptr, m.indices, m.data, m.shape, max_row_nnz)
+def _partition_caps(m: CSR, bounds: tuple) -> tuple:
+    """(nnz cap, row cap) of the largest piece of a contiguous row partition."""
+    ptr = np.asarray(m.indptr)
+    cap = max(int(ptr[e] - ptr[s]) for s, e in zip(bounds[:-1], bounds[1:]))
+    rows = max(e - s for s, e in zip(bounds[:-1], bounds[1:]))
+    return max(cap, 1), rows
 
 
-def b_chunks(B: CSR, p_b: tuple):
-    """Row chunks of B, all padded to the largest chunk's nnz."""
-    ptr = np.asarray(B.indptr)
-    cap = max(int(ptr[e] - ptr[s]) for s, e in zip(p_b[:-1], p_b[1:]))
-    cap = max(cap, 1)
-    rows = max(e - s for s, e in zip(p_b[:-1], p_b[1:]))
-    out = []
-    for s, e in zip(p_b[:-1], p_b[1:]):
-        c = csr_select_rows_host(B, s, e, pad_to=cap)
-        # pad the row count too (extra empty rows) for a single trace
-        if c.n_rows < rows:
-            pad_ptr = jnp.concatenate(
-                [c.indptr, jnp.full(rows - c.n_rows, c.indptr[-1], jnp.int32)]
-            )
-            c = CSR(pad_ptr, c.indices, c.data, (rows, c.shape[1]), c.max_row_nnz)
-        out.append(_with_uniform_meta(c, B.max_row_nnz))
-    return out
+def b_chunks(B: CSR, p_b: tuple, envelope: GeometryEnvelope | None = None):
+    """Row chunks of B, uniformly padded (rows and nnz) so jit traces once.
+
+    Without an envelope the caps come from this instance's largest chunk (the
+    single-problem case); with one, every chunk is padded to the envelope's
+    ``chunk_nnz_cap``/``chunk_rows``/``b_max_row_nnz`` so chunks from
+    *different* instances stack into one batch."""
+    if envelope is None:
+        cap, rows = _partition_caps(B, p_b)
+        mrn = B.max_row_nnz
+    else:
+        cap, rows = envelope.chunk_nnz_cap, envelope.chunk_rows
+        mrn = envelope.b_max_row_nnz
+    return [
+        csr_pad_to(csr_select_rows_host(B, s, e, pad_to=cap),
+                   rows=rows, max_row_nnz=mrn)
+        for s, e in zip(p_b[:-1], p_b[1:])
+    ]
 
 
-def a_strips(A: CSR, p_ac: tuple):
-    """Row strips of A, padded to the largest strip (rows and nnz)."""
-    ptr = np.asarray(A.indptr)
-    cap = max(int(ptr[e] - ptr[s]) for s, e in zip(p_ac[:-1], p_ac[1:]))
-    cap = max(cap, 1)
-    rows = max(e - s for s, e in zip(p_ac[:-1], p_ac[1:]))
-    out = []
-    for s, e in zip(p_ac[:-1], p_ac[1:]):
-        c = csr_select_rows_host(A, s, e, pad_to=cap)
-        if c.n_rows < rows:
-            pad_ptr = jnp.concatenate(
-                [c.indptr, jnp.full(rows - c.n_rows, c.indptr[-1], jnp.int32)]
-            )
-            c = CSR(pad_ptr, c.indices, c.data, (rows, c.shape[1]), c.max_row_nnz)
-        out.append(_with_uniform_meta(c, A.max_row_nnz))
-    return out
+def a_strips(A: CSR, p_ac: tuple, envelope: GeometryEnvelope | None = None):
+    """Row strips of A, uniformly padded (rows and nnz); with an envelope the
+    caps are the batch-wide ``strip_nnz_cap``/``strip_rows``/``a_max_row_nnz``."""
+    if envelope is None:
+        cap, rows = _partition_caps(A, p_ac)
+        mrn = A.max_row_nnz
+    else:
+        cap, rows = envelope.strip_nnz_cap, envelope.strip_rows
+        mrn = envelope.a_max_row_nnz
+    return [
+        csr_pad_to(csr_select_rows_host(A, s, e, pad_to=cap),
+                   rows=rows, max_row_nnz=mrn)
+        for s, e in zip(p_ac[:-1], p_ac[1:])
+    ]
+
+
+def instance_envelope(A: CSR, B: CSR, plan: ChunkPlan,
+                      c_pad: int | None = None) -> GeometryEnvelope:
+    """The padded geometry one (A, B) instance needs under ``plan``."""
+    if c_pad is None:
+        c_pad = default_c_pad(A, B, plan)
+    chunk_cap, chunk_rows = _partition_caps(B, plan.p_b)
+    strip_cap, strip_rows = _partition_caps(A, plan.p_ac)
+    return GeometryEnvelope(
+        a_shape=A.shape, b_shape=B.shape,
+        a_nnz_cap=A.nnz_pad, a_max_row_nnz=A.max_row_nnz,
+        b_max_row_nnz=B.max_row_nnz,
+        chunk_rows=chunk_rows, chunk_nnz_cap=chunk_cap,
+        strip_rows=strip_rows, strip_nnz_cap=strip_cap,
+        c_pad=int(c_pad), dtype=str(A.dtype),
+    )
+
+
+def batch_envelope(As, Bs, plan: ChunkPlan,
+                   c_pad: int | None = None) -> GeometryEnvelope:
+    """Union of per-instance envelopes: the smallest shared padded geometry a
+    heterogeneous batch can be repadded to (``c_pad`` overrides the symbolic
+    default for every instance when given)."""
+    return GeometryEnvelope.batch(
+        instance_envelope(A, B, plan, c_pad=c_pad) for A, B in zip(As, Bs)
+    )
 
 
 def _empty_like_c(n_rows: int, n_cols: int, c_pad: int, dtype) -> CSR:

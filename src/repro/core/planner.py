@@ -25,7 +25,7 @@ from repro.sparse.csr import CSR
 class ChunkPlan:
     """Everything the chunk executors need, all host-static."""
 
-    algorithm: str            # "whole_fast" | "dp" | "chunk1" | "chunk2" | "knl"
+    algorithm: str            # "whole_fast" | "knl" | "chunk1" | "chunk2"
     p_ac: tuple               # row boundaries of the A/C partition, len = n_ac + 1
     p_b: tuple                # row boundaries of the B partition,   len = n_b + 1
     copy_bytes: float         # modeled total fast<->slow traffic
@@ -134,6 +134,22 @@ def plan_chunks(A: CSR, B: CSR, c_row_bytes: np.ndarray, system: MemorySystem,
                      fast_bytes_needed=fast)
 
 
+def staged_chunk_bytes(m: CSR, bounds: tuple, value_bytes: int = 8,
+                       index_bytes: int = 4) -> float:
+    """Modeled fast-memory footprint of one *staged* chunk of a row partition.
+
+    The executors pad every chunk to the largest chunk's nnz and row count
+    (static shapes), so what fast memory must hold is the padded envelope —
+    ``cap`` entries plus the padded row pointers — not the unpadded bytes of
+    whichever chunk is resident. Summing unpadded per-chunk bytes undercounts
+    exactly when the row distribution is skewed."""
+    lens = np.asarray(m.indptr[1:]) - np.asarray(m.indptr[:-1])
+    cap = max(int(lens[s:e].sum()) for s, e in zip(bounds[:-1], bounds[1:]))
+    rows = max(e - s for s, e in zip(bounds[:-1], bounds[1:]))
+    return float((rows + 1) * index_bytes
+                 + max(cap, 1) * (value_bytes + index_bytes))
+
+
 def plan_knl(A: CSR, B: CSR, fast_limit_bytes: float,
              system: MemorySystem | None = None) -> ChunkPlan:
     """Algorithm 1 planning: np = ceil(size(B)/FastSize), equal-byte row partition of
@@ -144,6 +160,4 @@ def plan_knl(A: CSR, B: CSR, fast_limit_bytes: float,
     p_size = size_b / n_p
     p_b = binary_search_partition(b_rows, p_size)
     return ChunkPlan("knl", (0, A.n_rows), p_b, copy_bytes=size_b,
-                     fast_bytes_needed=float(max(
-                         b_rows[s:e].sum() for s, e in zip(p_b[:-1], p_b[1:])
-                     )) if len(p_b) > 1 else size_b)
+                     fast_bytes_needed=staged_chunk_bytes(B, p_b))

@@ -38,14 +38,28 @@ class ServeStats:
 
 
 def serve_batch(cfg, prompts: list, *, max_new_tokens: int = 16,
-                cache_len: int = 256, eos_id: int = 0, mesh=None,
-                params=None, seed: int = 0) -> tuple:
+                cache_len: int = 256, eos_id: int | None = None,
+                pad_id: int = 0, mesh=None, params=None,
+                seed: int = 0) -> tuple:
     """Generate greedily for a batch of token-id prompts. Returns
-    (list of generated id lists, ServeStats)."""
+    (list of generated id lists, ServeStats).
+
+    Prompts are right-padded with ``pad_id`` to the longest prompt's length;
+    the true lengths are threaded into prefill so each sequence's first
+    generated token is predicted from its own last real token, never from
+    padding. ``eos_id`` is opt-in (default: no early stop) — it no longer
+    collides with the pad id by both defaulting to 0.
+
+    Known limitation: the prefill cache still holds K/V (or recurrent state)
+    for the pad positions of shorter prompts, and decode appends after the
+    padded length, so tokens after the first can still attend to pads. Fixing
+    that needs per-sequence cache positions + pad masking in decode (proper
+    continuous batching) — production systems bucket by length instead."""
     mesh = mesh or make_host_mesh()
     b = len(prompts)
     max_len = max(len(p) for p in prompts)
-    toks = np.zeros((b, max_len), np.int32)
+    lengths = np.array([len(p) for p in prompts], np.int32)
+    toks = np.full((b, max_len), pad_id, np.int32)
     for i, p in enumerate(prompts):
         toks[i, : len(p)] = p          # right-pad (static prefill shape)
 
@@ -63,12 +77,14 @@ def serve_batch(cfg, prompts: list, *, max_new_tokens: int = 16,
 
     with mesh:
         t0 = time.time()
-        logits, cache = prefill_fn(params, {"tokens": jnp.asarray(toks)})
+        logits, cache = prefill_fn(
+            params, {"tokens": jnp.asarray(toks), "lengths": jnp.asarray(lengths)})
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         stats.prefill_s = time.time() - t0
 
         outs = [[int(nxt[i, 0])] for i in range(b)]
-        done = np.array([outs[i][-1] == eos_id for i in range(b)])
+        done = np.array([eos_id is not None and outs[i][-1] == eos_id
+                         for i in range(b)])
         t0 = time.time()
         for _ in range(max_new_tokens - 1):
             nxt, cache = step_fn(params, cache, nxt)
@@ -76,8 +92,7 @@ def serve_batch(cfg, prompts: list, *, max_new_tokens: int = 16,
             for i in range(b):
                 if not done[i]:
                     outs[i].append(int(arr[i, 0]))
-                    done[i] = arr[i, 0] == eos_id
-            stats.generated_tokens += int((~done).sum()) + int(done.sum() == 0)
+                    done[i] = eos_id is not None and arr[i, 0] == eos_id
             if done.all():
                 break
         stats.decode_s = time.time() - t0

@@ -260,7 +260,12 @@ def init_cache(cfg: ModelConfig, batch_size: int, cache_len: int, abstract=False
 
 
 def prefill(params, batch, cfg: ModelConfig, cache_len: int):
-    """Run the prompt, return (last-token logits [B, vocab], cache)."""
+    """Run the prompt, return (next-token logits [B, vocab], cache).
+
+    With uneven right-padded prompts, ``batch["lengths"]`` (int32[B], true
+    prompt lengths) selects each sequence's logits at its own last real token
+    instead of the padded final position; without it, the last position is
+    used for every sequence (uniform-length prompts)."""
     from repro.parallel import constraints as con
 
     h = _embed_input(params, batch, cfg)
@@ -324,7 +329,13 @@ def prefill(params, batch, cfg: ModelConfig, cache_len: int):
             cache["k"], cache["v"] = jnp.stack(ks), jnp.stack(vs)
 
     h = ly.rmsnorm(params["final_norm"], h)
-    logits = ly.unembed(params["embed"], h[:, -1:], cfg)
+    lengths = batch.get("lengths") if isinstance(batch, dict) else None
+    if lengths is None:
+        h_last = h[:, -1:]
+    else:
+        last = jnp.clip(jnp.asarray(lengths, jnp.int32) - 1, 0, s - 1)
+        h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)
+    logits = ly.unembed(params["embed"], h_last, cfg)
     return logits[:, 0], cache
 
 

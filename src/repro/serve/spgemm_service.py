@@ -1,0 +1,239 @@
+"""Batched SpGEMM serving: queue (A, B) requests, bucket by padded geometry,
+execute each bucket through one compiled vmapped-scan program.
+
+The paper's chunked algorithms (Deveci et al., 1804.00695) exist to serve big
+multiplies from a small fast memory; the symmetric serving scenario — many
+*small* multiplies behind one endpoint — is instead dominated by per-multiply
+setup (Nagasaka & Azad, 1804.01698): replanning, repadding, and above all
+recompilation. ``SpGEMMService`` amortizes all three:
+
+  * each request gets a per-instance :class:`GeometryEnvelope` for its plan,
+    **quantized** (nnz caps rounded up to a quantum, row-nnz bounds to powers
+    of two) so near-identical geometries collapse into one *bucket*;
+  * each bucket owns one ``(envelope, plan)`` executable — the repaired
+    ``chunked_spgemm_batched`` vmapped over a fixed microbatch width, so the
+    bucket compiles exactly once no matter how many flushes serve it;
+  * a **retrace budget** caps the number of distinct executables: once
+    exhausted, new geometries fold into a compatible existing bucket (growing
+    its envelope) instead of compiling program #budget+1;
+  * responses report per-request latency and the modeled fast<->slow
+    :class:`ChunkStats` copy traffic at the envelope-padded staged sizes.
+
+``benchmarks/spgemm_serving.py`` measures the resulting throughput against
+naive per-instance dispatch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+
+from repro.core.chunk_stream import TRACE_COUNTS, chunked_spgemm_batched
+from repro.core.chunking import ChunkStats, instance_envelope
+from repro.core.planner import ChunkPlan, plan_knl
+from repro.sparse.csr import CSR, GeometryEnvelope
+
+
+def plan_key(plan: ChunkPlan) -> tuple:
+    """The compile-relevant identity of a plan (cost fields excluded)."""
+    return (plan.algorithm, tuple(plan.p_ac), tuple(plan.p_b))
+
+
+@dataclasses.dataclass(frozen=True)
+class SpGEMMRequest:
+    req_id: int
+    A: CSR
+    B: CSR
+    submit_s: float          # perf_counter timestamp at submit
+
+
+@dataclasses.dataclass
+class SpGEMMResponse:
+    req_id: int
+    C: CSR                   # assembled result for this request
+    latency_s: float         # submit -> bucket results materialized
+    exec_s: float            # wall time of this request's bucket execution
+    bucket_key: tuple        # (GeometryEnvelope, plan_key)
+    batch_size: int          # true requests in the executed microbatch
+    stats: ChunkStats        # modeled copy traffic at envelope-padded sizes
+
+
+@dataclasses.dataclass
+class _Bucket:
+    envelope: GeometryEnvelope
+    plan: ChunkPlan
+    queue: list              # pending SpGEMMRequest
+    compiles: int = 0        # new traces of the batched core while executing
+    executions: int = 0      # microbatches run
+    served: int = 0          # requests completed
+
+    @property
+    def key(self) -> tuple:
+        return (self.envelope, plan_key(self.plan))
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    submitted: int = 0
+    served: int = 0
+    buckets_created: int = 0
+    budget_merges: int = 0     # geometries folded into an existing bucket
+    budget_overflows: int = 0  # no compatible bucket; budget exceeded anyway
+    dominated_hits: int = 0    # requests absorbed by a larger existing bucket
+    compiles: int = 0          # total batched-core traces across all buckets
+    exec_s: float = 0.0        # total bucket execution wall time
+
+
+class SpGEMMService:
+    """Queue-and-flush SpGEMM endpoint over ``chunked_spgemm_batched``.
+
+    ``plan`` pins one ChunkPlan for every request (all requests must share its
+    row geometry); without it, each request is planned by ``plan_knl`` against
+    ``fast_limit_bytes``. ``quantum`` controls envelope quantization (bigger =
+    fewer buckets, more padding waste), ``max_batch`` the fixed microbatch
+    width every execution is padded to (fixed so a bucket never retraces on
+    batch size), and ``retrace_budget`` the maximum number of distinct
+    compiled buckets.
+    """
+
+    def __init__(self, plan: ChunkPlan | None = None, *,
+                 fast_limit_bytes: float | None = None,
+                 quantum: int = 32, max_batch: int = 4,
+                 retrace_budget: int = 8):
+        if plan is None and fast_limit_bytes is None:
+            raise ValueError("need a fixed plan or fast_limit_bytes to plan by")
+        if max_batch < 1 or quantum < 1 or retrace_budget < 1:
+            raise ValueError("quantum, max_batch, retrace_budget must be >= 1")
+        self._plan = plan
+        self._fast_limit = fast_limit_bytes
+        self.quantum = quantum
+        self.max_batch = max_batch
+        self.retrace_budget = retrace_budget
+        self._buckets: dict = {}         # key -> _Bucket
+        self._next_id = 0
+        self.stats = ServiceStats()
+
+    # -- request path -------------------------------------------------------
+
+    def _plan_for(self, A: CSR, B: CSR) -> ChunkPlan:
+        if self._plan is not None:
+            return self._plan
+        return plan_knl(A, B, fast_limit_bytes=self._fast_limit)
+
+    def _resolve_bucket(self, env: GeometryEnvelope, plan: ChunkPlan) -> _Bucket:
+        key = (env, plan_key(plan))
+        bucket = self._buckets.get(key)
+        if bucket is not None:
+            return bucket
+        # a bigger already-compiled bucket serves this geometry for free
+        for b in self._buckets.values():
+            if plan_key(b.plan) == plan_key(plan) and b.envelope.dominates(env):
+                self.stats.dominated_hits += 1
+                return b
+        if len(self._buckets) < self.retrace_budget:
+            bucket = _Bucket(envelope=env, plan=plan, queue=[])
+            self._buckets[bucket.key] = bucket
+            self.stats.buckets_created += 1
+            return bucket
+        # budget exhausted: grow a compatible bucket's envelope instead of
+        # compiling another program (its next flush retraces once, then the
+        # merged geometry is stable)
+        candidates = [
+            b for b in self._buckets.values()
+            if plan_key(b.plan) == plan_key(plan)
+            and b.envelope.a_shape == env.a_shape
+            and b.envelope.b_shape == env.b_shape
+            and b.envelope.dtype == env.dtype
+        ]
+        if candidates:
+            host = max(candidates, key=lambda b: b.served + len(b.queue))
+            del self._buckets[host.key]
+            host.envelope = host.envelope.union(env).quantized(self.quantum)
+            other = self._buckets.get(host.key)
+            if other is not None:
+                # the grown envelope landed exactly on another bucket: fold
+                # the host's queue into it rather than clobbering either
+                other.queue.extend(host.queue)
+                host = other
+            else:
+                self._buckets[host.key] = host
+            self.stats.budget_merges += 1
+            return host
+        # nothing compatible (different shapes/plan): must exceed the budget
+        bucket = _Bucket(envelope=env, plan=plan, queue=[])
+        self._buckets[bucket.key] = bucket
+        self.stats.buckets_created += 1
+        self.stats.budget_overflows += 1
+        return bucket
+
+    def submit(self, A: CSR, B: CSR) -> int:
+        """Queue one C = A x B request; returns its request id."""
+        plan = self._plan_for(A, B)
+        env = instance_envelope(A, B, plan).quantized(self.quantum)
+        bucket = self._resolve_bucket(env, plan)
+        req = SpGEMMRequest(self._next_id, A, B, time.perf_counter())
+        self._next_id += 1
+        bucket.queue.append(req)
+        self.stats.submitted += 1
+        return req.req_id
+
+    @property
+    def pending(self) -> int:
+        return sum(len(b.queue) for b in self._buckets.values())
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self._buckets)
+
+    def bucket_summaries(self) -> list:
+        """(envelope, algorithm, compiles, executions, served) per bucket."""
+        return [
+            (b.envelope, b.plan.algorithm, b.compiles, b.executions, b.served)
+            for b in self._buckets.values()
+        ]
+
+    # -- execution path -----------------------------------------------------
+
+    def _execute_bucket(self, bucket: _Bucket) -> list:
+        """Drain one bucket in fixed-width microbatches; returns responses."""
+        counter = f"{bucket.plan.algorithm}_batched"
+        responses = []
+        while bucket.queue:
+            batch = bucket.queue[: self.max_batch]
+            del bucket.queue[: len(batch)]
+            # pad to the fixed microbatch width (repeating the first request)
+            # so the executable never retraces on batch size; padded slots'
+            # outputs are discarded
+            padded = batch + [batch[0]] * (self.max_batch - len(batch))
+            traces0 = TRACE_COUNTS[counter]
+            t0 = time.perf_counter()
+            Cs, stats = chunked_spgemm_batched(
+                [r.A for r in padded], [r.B for r in padded],
+                bucket.plan, envelope=bucket.envelope,
+            )
+            jax.block_until_ready([(C.indptr, C.indices, C.data) for C in Cs])
+            t1 = time.perf_counter()
+            new_traces = TRACE_COUNTS[counter] - traces0
+            bucket.compiles += new_traces
+            bucket.executions += 1
+            self.stats.compiles += new_traces
+            self.stats.exec_s += t1 - t0
+            for req, C in zip(batch, Cs[: len(batch)]):
+                responses.append(SpGEMMResponse(
+                    req_id=req.req_id, C=C,
+                    latency_s=t1 - req.submit_s, exec_s=t1 - t0,
+                    bucket_key=bucket.key, batch_size=len(batch), stats=stats,
+                ))
+            bucket.served += len(batch)
+            self.stats.served += len(batch)
+        return responses
+
+    def flush(self) -> list:
+        """Execute every queued request; responses ordered by request id."""
+        responses = []
+        for bucket in list(self._buckets.values()):
+            responses.extend(self._execute_bucket(bucket))
+        responses.sort(key=lambda r: r.req_id)
+        return responses

@@ -1,9 +1,13 @@
-from repro.sparse.csr import CSR, csr_from_dense, csr_to_dense, csr_from_coo
+from repro.sparse.csr import (
+    CSR, GeometryEnvelope, csr_from_dense, csr_to_dense, csr_from_coo,
+    csr_pad_to,
+)
 from repro.sparse.bsr import BSR, bsr_from_dense, bsr_to_dense, bsr_from_csr
 from repro.sparse import multigrid, generators, graphs
 
 __all__ = [
-    "CSR", "csr_from_dense", "csr_to_dense", "csr_from_coo",
+    "CSR", "GeometryEnvelope", "csr_from_dense", "csr_to_dense",
+    "csr_from_coo", "csr_pad_to",
     "BSR", "bsr_from_dense", "bsr_to_dense", "bsr_from_csr",
     "multigrid", "generators", "graphs",
 ]

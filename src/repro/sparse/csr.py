@@ -168,6 +168,141 @@ def csr_select_rows_host(m: CSR, r0: int, r1: int, pad_to: int | None = None) ->
                                pad_to, dtype=m.dtype)
 
 
+@dataclasses.dataclass(frozen=True)
+class GeometryEnvelope:
+    """Padded geometry that a chunked-SpGEMM executable is compiled for.
+
+    Every field is host-static, so the envelope doubles as a hashable compile
+    key: two (A, B) instances with the same envelope (and plan) run through the
+    same jitted scan without retracing. ``union`` over a batch of per-instance
+    envelopes yields the smallest geometry that fits them all — the fix for
+    heterogeneous-structure batches, where per-instance padding caps used to
+    make ``csr_stack`` reject the batch.
+
+    ``chunk_rows``/``strip_rows`` derive from the plan's row partitions (shared
+    across a batch by construction); the nnz caps and ``max_row_nnz`` bounds
+    are per-instance quantities that the envelope maxes over the batch.
+    """
+
+    a_shape: tuple      # (m, k) of every A instance
+    b_shape: tuple      # (k, n) of every B instance
+    a_nnz_cap: int      # padded nnz capacity of the whole-A operand (KNL)
+    a_max_row_nnz: int  # bound on any A row (sizes nothing directly; meta)
+    b_max_row_nnz: int  # bound on any B row (sizes the expansion buffer)
+    chunk_rows: int     # rows every staged B chunk is padded to
+    chunk_nnz_cap: int  # nnz capacity every staged B chunk is padded to
+    strip_rows: int     # rows every staged A/C strip is padded to
+    strip_nnz_cap: int  # nnz capacity every staged A strip is padded to
+    c_pad: int          # output capacity (>= exact symbolic nnz of any C strip)
+    dtype: str          # value dtype name ("float32", ...)
+
+    def _check_compatible(self, other: "GeometryEnvelope") -> None:
+        if (self.a_shape != other.a_shape or self.b_shape != other.b_shape
+                or self.dtype != other.dtype):
+            raise ValueError(
+                "incompatible envelopes: "
+                f"{self.a_shape}x{self.b_shape}/{self.dtype} vs "
+                f"{other.a_shape}x{other.b_shape}/{other.dtype}"
+            )
+
+    def union(self, other: "GeometryEnvelope") -> "GeometryEnvelope":
+        """Smallest envelope covering both (same shapes/dtype required)."""
+        self._check_compatible(other)
+        return GeometryEnvelope(
+            a_shape=self.a_shape, b_shape=self.b_shape,
+            a_nnz_cap=max(self.a_nnz_cap, other.a_nnz_cap),
+            a_max_row_nnz=max(self.a_max_row_nnz, other.a_max_row_nnz),
+            b_max_row_nnz=max(self.b_max_row_nnz, other.b_max_row_nnz),
+            chunk_rows=max(self.chunk_rows, other.chunk_rows),
+            chunk_nnz_cap=max(self.chunk_nnz_cap, other.chunk_nnz_cap),
+            strip_rows=max(self.strip_rows, other.strip_rows),
+            strip_nnz_cap=max(self.strip_nnz_cap, other.strip_nnz_cap),
+            c_pad=max(self.c_pad, other.c_pad),
+            dtype=self.dtype,
+        )
+
+    def dominates(self, other: "GeometryEnvelope") -> bool:
+        """True when instances fitting ``other`` also fit this envelope."""
+        try:
+            self._check_compatible(other)
+        except ValueError:
+            return False
+        return (self.a_nnz_cap >= other.a_nnz_cap
+                and self.a_max_row_nnz >= other.a_max_row_nnz
+                and self.b_max_row_nnz >= other.b_max_row_nnz
+                and self.chunk_rows >= other.chunk_rows
+                and self.chunk_nnz_cap >= other.chunk_nnz_cap
+                and self.strip_rows >= other.strip_rows
+                and self.strip_nnz_cap >= other.strip_nnz_cap
+                and self.c_pad >= other.c_pad)
+
+    def quantized(self, quantum: int = 32) -> "GeometryEnvelope":
+        """Round the nnz caps up to ``quantum`` multiples and the row-nnz
+        bounds up to powers of two, collapsing near-identical geometries into
+        one bucket (fewer compiles, bounded padding waste)."""
+
+        def up(v: int) -> int:
+            return max(quantum, -(-int(v) // quantum) * quantum)
+
+        def up_pow2(v: int) -> int:
+            return 1 << max(int(v) - 1, 0).bit_length() if v > 1 else max(v, 1)
+
+        return GeometryEnvelope(
+            a_shape=self.a_shape, b_shape=self.b_shape,
+            a_nnz_cap=up(self.a_nnz_cap),
+            a_max_row_nnz=up_pow2(self.a_max_row_nnz),
+            b_max_row_nnz=up_pow2(self.b_max_row_nnz),
+            chunk_rows=self.chunk_rows,
+            chunk_nnz_cap=up(self.chunk_nnz_cap),
+            strip_rows=self.strip_rows,
+            strip_nnz_cap=up(self.strip_nnz_cap),
+            c_pad=up(self.c_pad),
+            dtype=self.dtype,
+        )
+
+    @classmethod
+    def batch(cls, envelopes) -> "GeometryEnvelope":
+        """Union over per-instance envelopes (the batch's shared geometry)."""
+        envelopes = list(envelopes)
+        if not envelopes:
+            raise ValueError("GeometryEnvelope.batch needs at least one envelope")
+        out = envelopes[0]
+        for env in envelopes[1:]:
+            out = out.union(env)
+        return out
+
+
+def csr_pad_to(m: CSR, nnz_cap: int | None = None, rows: int | None = None,
+               max_row_nnz: int | None = None) -> CSR:
+    """Repad a CSR to a larger static geometry: grow the entry tail to
+    ``nnz_cap``, append empty rows up to ``rows``, and/or raise the
+    ``max_row_nnz`` bound. Growing only — shrinking the capacities would need
+    the true nnz (a traced value under jit), and lowering ``max_row_nnz``
+    below the actual densest row would silently truncate the SpGEMM expansion
+    buffer downstream, so an undersized target (e.g. a stale envelope applied
+    to a denser batch) fails loudly here instead."""
+    nnz_cap = m.nnz_pad if nnz_cap is None else int(nnz_cap)
+    rows = m.n_rows if rows is None else int(rows)
+    mrn = m.max_row_nnz if max_row_nnz is None else int(max_row_nnz)
+    if nnz_cap < m.nnz_pad or rows < m.n_rows or mrn < m.max_row_nnz:
+        raise ValueError(
+            f"csr_pad_to only grows: nnz_cap={nnz_cap} rows={rows} "
+            f"max_row_nnz={mrn} vs nnz_pad={m.nnz_pad} n_rows={m.n_rows} "
+            f"max_row_nnz={m.max_row_nnz}"
+        )
+    indptr, indices, data = m.indptr, m.indices, m.data
+    if rows > m.n_rows:
+        indptr = jnp.concatenate(
+            [indptr, jnp.full(rows - m.n_rows, indptr[-1], jnp.int32)]
+        )
+    if nnz_cap > m.nnz_pad:
+        indices = jnp.concatenate(
+            [indices, jnp.zeros(nnz_cap - m.nnz_pad, jnp.int32)]
+        )
+        data = jnp.concatenate([data, jnp.zeros(nnz_cap - m.nnz_pad, m.dtype)])
+    return CSR(indptr, indices, data, (rows, m.shape[1]), mrn)
+
+
 def csr_stack(mats) -> CSR:
     """Stack uniformly-padded CSRs along a new leading axis (host-side).
 

@@ -14,13 +14,14 @@ from repro.core.chunk_stream import (
     chunked_spgemm_batched,
 )
 from repro.core.chunking import (
-    chunk_gpu1, chunk_gpu2, chunk_knl, chunked_spgemm,
+    batch_envelope, chunk_gpu1, chunk_gpu2, chunk_knl, chunked_spgemm,
+    instance_envelope,
 )
 from repro.core.kkmem import spgemm_dense_oracle, spgemm_symbolic_host
 from repro.core.planner import ChunkPlan, plan_knl
 from repro.sparse import multigrid
 from repro.sparse.csr import csr_from_dense, csr_to_dense
-from conftest import assert_close, csr_pair_cases
+from conftest import assert_close, csr_pair_cases, random_csr
 
 LOOP = {"knl": chunk_knl, "chunk1": chunk_gpu1, "chunk2": chunk_gpu2}
 SCAN = {"knl": chunk_knl_scan, "chunk1": chunk_gpu1_scan, "chunk2": chunk_gpu2_scan}
@@ -116,6 +117,68 @@ def test_scan_compiles_once_per_algorithm(algorithm):
     SCAN[algorithm](A, P, plan, ws.c_pad)   # same geometry: cache hit
     assert TRACE_COUNTS[algorithm] == mid_w
     assert TRACE_COUNTS[f"{algorithm}_body"] == mid_b
+
+
+@pytest.mark.parametrize("algorithm", ["knl", "chunk1", "chunk2"])
+def test_batched_heterogeneous_structures(algorithm):
+    """Regression: instances differing in sparsity *structure* (nnz,
+    max_row_nnz) used to crash csr_stack with 'uniform padded geometry';
+    the batch envelope must repad them into one program whose per-instance
+    results are bitwise-identical to the unbatched scan executor."""
+    rng = np.random.default_rng(5)
+    # the original repro: 32x32 at 10% vs 20% density, 2-chunk plan
+    As = [random_csr(rng, 32, 32, d) for d in (0.10, 0.20, 0.05)]
+    Bs = [random_csr(rng, 32, 32, d) for d in (0.10, 0.20, 0.30)]
+    p_ac = (0, 32) if algorithm == "knl" else (0, 13, 32)
+    plan = ChunkPlan(algorithm, p_ac, (0, 16, 32), 0.0, 0.0)
+    env = batch_envelope(As, Bs, plan)
+    for A, B in zip(As, Bs):
+        assert env.dominates(instance_envelope(A, B, plan))
+    Cs_list, _ = chunked_spgemm_batched(As, Bs, plan)
+    assert len(Cs_list) == 3
+    for A, B, Cb in zip(As, Bs, Cs_list):
+        Ci, _ = chunked_spgemm(A, B, plan, c_pad=env.c_pad)
+        _assert_same_csr(Ci, Cb)
+        assert_close(csr_to_dense(Cb), spgemm_dense_oracle(A, B), atol=1e-3)
+
+
+def test_batched_same_structure_unchanged():
+    """Same-structure batches must keep the pre-envelope behavior bitwise:
+    the batch envelope degenerates to every instance's own geometry."""
+    rng = np.random.default_rng(13)
+    base_a = (rng.random((20, 16)) < 0.25) * 1.0
+    base_b = (rng.random((16, 18)) < 0.25) * 1.0
+    As = [csr_from_dense((base_a * rng.standard_normal(base_a.shape))
+                         .astype(np.float32)) for _ in range(3)]
+    Bs = [csr_from_dense((base_b * rng.standard_normal(base_b.shape))
+                         .astype(np.float32)) for _ in range(3)]
+    plan = ChunkPlan("knl", (0, 20), (0, 6, 11, 16), 0.0, 0.0)
+    env = batch_envelope(As, Bs, plan)
+    assert env == instance_envelope(As[0], Bs[0], plan, c_pad=env.c_pad)
+    Cs_list, stats = chunked_spgemm_batched(As, Bs, plan)
+    for A, B, Cb in zip(As, Bs, Cs_list):
+        Cs, ss = chunk_knl_scan(A, B, plan, env.c_pad)
+        _assert_same_csr(Cs, Cb)
+        assert ss.per_copy_in == stats.per_copy_in
+        assert ss.per_copy_out == stats.per_copy_out
+
+
+def test_batched_rejects_mismatched_shapes_and_conflicting_c_pad():
+    rng = np.random.default_rng(3)
+    A1, B1 = random_csr(rng, 8, 8, 0.3), random_csr(rng, 8, 8, 0.3)
+    A2, B2 = random_csr(rng, 9, 8, 0.3), random_csr(rng, 8, 8, 0.3)
+    plan = ChunkPlan("knl", (0, 8), (0, 4, 8), 0.0, 0.0)
+    with pytest.raises(ValueError, match="share shapes"):
+        chunked_spgemm_batched([A1, A2], [B1, B2], plan)
+    env = batch_envelope([A1], [B1], plan)
+    with pytest.raises(ValueError, match="c_pad"):
+        chunked_spgemm_batched([A1], [B1], plan, c_pad=env.c_pad + 1,
+                               envelope=env)
+    # an undersized caller envelope (e.g. stale bucket applied to a denser
+    # batch) must fail loudly, never silently truncate
+    A3, B3 = random_csr(rng, 8, 8, 0.9), random_csr(rng, 8, 8, 0.9)
+    with pytest.raises(ValueError):
+        chunked_spgemm_batched([A3], [B3], plan, envelope=env)
 
 
 @pytest.mark.parametrize("algorithm", ["knl", "chunk1", "chunk2"])

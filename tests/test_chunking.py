@@ -127,3 +127,38 @@ def test_chunk_stats_track_copies(problem):
     # B is staged exactly once in total (row-chunks are disjoint), up to padding
     assert stats.copy_in_bytes >= P.nbytes() * 0.9
     assert stats.copy_in_bytes <= P.nbytes() * plan.n_b  # padding slack bound
+
+
+def test_plan_knl_models_padded_staged_footprint():
+    """The executors stage uniformly padded chunks (every chunk padded to the
+    largest chunk's nnz and rows), so the planned fast footprint must cover
+    the *staged* chunk bytes — summing unpadded per-chunk bytes undercounts
+    on skewed row distributions."""
+    from repro.core.chunking import b_chunks
+    from repro.sparse.csr import csr_from_dense
+
+    rng = np.random.default_rng(2)
+    # skewed B: one fully dense row among hundreds of near-empty ones, so the
+    # padded chunk envelope (dense-row nnz cap x widest row span) far exceeds
+    # any single chunk's unpadded bytes
+    n_rows = 256
+    dense = (rng.random((n_rows, 48)) < 0.01) * rng.standard_normal((n_rows, 48))
+    dense[0] = rng.standard_normal(48)             # one fully dense row
+    B = csr_from_dense(dense.astype(np.float32))
+    A = csr_from_dense(np.eye(n_rows, dtype=np.float32))
+    size_b = float(row_bytes_csr(B).sum())
+    for frac in (0.5, 0.3, 0.15):
+        plan = plan_knl(A, B, fast_limit_bytes=size_b * frac)
+        chunks = b_chunks(B, plan.p_b)
+        staged = max(c.nbytes() for c in chunks)
+        assert plan.fast_bytes_needed >= staged, (
+            f"frac={frac}: modeled {plan.fast_bytes_needed} < staged {staged}"
+        )
+    # the pre-fix model (max unpadded chunk bytes) genuinely undercounts here
+    plan = plan_knl(A, B, fast_limit_bytes=size_b * 0.15)
+    unpadded = max(
+        float(row_bytes_csr(B)[s:e].sum())
+        for s, e in zip(plan.p_b[:-1], plan.p_b[1:])
+    )
+    staged = max(c.nbytes() for c in b_chunks(B, plan.p_b))
+    assert unpadded < staged

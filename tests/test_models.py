@@ -175,3 +175,33 @@ def test_grads_finite(rng, cfg):
     norms = jax.tree.map(lambda x: float(jnp.sum(x.astype(jnp.float32) ** 2)), g)
     total = jax.tree.reduce(lambda a, b: a + b, norms, 0.0)
     assert np.isfinite(total) and total > 0
+
+
+def test_prefill_gathers_logits_at_true_prompt_lengths(rng):
+    """Uneven right-padded prompts + batch["lengths"]: each sequence's prefill
+    logits must match an unpadded single-prompt prefill — the first generated
+    token is predicted from the prompt's true last token, never from padding."""
+    cfg = dense_cfg()
+    params = tf.init_params(KEY, cfg)
+    lens = [9, 16]
+    prompts = [rng.integers(1, cfg.vocab_size, n).astype(np.int32)
+               for n in lens]
+    toks = np.zeros((2, max(lens)), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, : len(p)] = p
+    lg, _ = tf.prefill(
+        params,
+        {"tokens": jnp.asarray(toks), "lengths": jnp.asarray(lens, jnp.int32)},
+        cfg, cache_len=32)
+    for i, p in enumerate(prompts):
+        ref, _ = tf.prefill(params, {"tokens": jnp.asarray(p[None, :])}, cfg,
+                            cache_len=32)
+        assert_close(lg[i], ref[0], atol=1e-3,
+                     msg=f"prompt {i} (len {lens[i]})")
+    # without lengths, the padded short prompt reads logits from padding —
+    # the pre-fix behavior this test guards against
+    lg_bad, _ = tf.prefill(params, {"tokens": jnp.asarray(toks)}, cfg,
+                           cache_len=32)
+    ref0, _ = tf.prefill(params, {"tokens": jnp.asarray(prompts[0][None, :])},
+                         cfg, cache_len=32)
+    assert np.abs(np.asarray(lg_bad[0]) - np.asarray(ref0[0])).max() > 1e-3

@@ -96,3 +96,59 @@ def test_graphs_symmetric_binary():
     L = graphs.lower_triangular_degree_sorted(G)
     ld = np.asarray(csr_to_dense(L))
     assert np.allclose(np.triu(ld), 0)
+
+
+# ---------------------------------------------------------------------------
+# geometry envelopes + repadding
+# ---------------------------------------------------------------------------
+
+
+def _env(**kw):
+    from repro.sparse.csr import GeometryEnvelope
+
+    base = dict(a_shape=(8, 8), b_shape=(8, 8), a_nnz_cap=10, a_max_row_nnz=3,
+                b_max_row_nnz=5, chunk_rows=4, chunk_nnz_cap=7, strip_rows=8,
+                strip_nnz_cap=10, c_pad=64, dtype="float32")
+    base.update(kw)
+    return GeometryEnvelope(**base)
+
+
+def test_envelope_union_dominates_quantize():
+    e1 = _env(chunk_nnz_cap=7, c_pad=64)
+    e2 = _env(chunk_nnz_cap=9, c_pad=32, b_max_row_nnz=2)
+    u = e1.union(e2)
+    assert u.chunk_nnz_cap == 9 and u.c_pad == 64 and u.b_max_row_nnz == 5
+    assert u.dominates(e1) and u.dominates(e2)
+    assert not e2.dominates(e1)          # c_pad smaller
+    assert not e1.dominates(_env(a_shape=(9, 8)))  # shape mismatch
+    with pytest.raises(ValueError):
+        e1.union(_env(dtype="float64"))
+    q = e2.quantized(32)
+    assert q.chunk_nnz_cap == 32 and q.c_pad == 32 and q.a_nnz_cap == 32
+    assert q.b_max_row_nnz == 2 and q.a_max_row_nnz == 4   # pow2 rounding
+    assert q.chunk_rows == e2.chunk_rows                   # plan-derived: exact
+    assert q.dominates(e2)
+    # quantization is idempotent -> stable bucket keys
+    assert q.quantized(32) == q
+
+
+def test_csr_pad_to_grows_only(rng):
+    from repro.sparse.csr import csr_pad_to
+
+    d = random_dense(rng, 5, 6, 0.4)
+    m = csr_from_dense(d)
+    p = csr_pad_to(m, nnz_cap=m.nnz_pad + 7, rows=9, max_row_nnz=11)
+    assert p.nnz_pad == m.nnz_pad + 7 and p.n_rows == 9
+    assert p.max_row_nnz == 11 and p.shape[1] == m.shape[1]
+    # true content unchanged; appended rows are empty
+    assert_close(csr_to_dense(p)[:5], d)
+    assert_close(csr_to_dense(p)[5:], np.zeros((4, 6)))
+    ptr = np.asarray(p.indptr)
+    assert (ptr[6:] == ptr[5]).all()
+    with pytest.raises(ValueError):
+        csr_pad_to(m, nnz_cap=m.nnz_pad - 1)
+    with pytest.raises(ValueError):
+        csr_pad_to(m, rows=4)
+    with pytest.raises(ValueError):
+        # lowering the row-nnz bound would truncate SpGEMM expansion buffers
+        csr_pad_to(m, max_row_nnz=m.max_row_nnz - 1)

@@ -1,0 +1,120 @@
+"""SpGEMMService: bucketed batched serving over chunked_spgemm_batched.
+
+Contracts: correct results for mixed-structure workloads, at most one compile
+per geometry bucket (TRACE_COUNTS on the batched scan cores), zero retraces
+for repeat traffic, and a retrace budget that folds new geometries into
+existing buckets instead of compiling more programs.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.chunk_stream import TRACE_COUNTS
+from repro.core.kkmem import spgemm_dense_oracle
+from repro.core.planner import ChunkPlan, plan_knl
+from repro.serve.spgemm_service import SpGEMMService
+from repro.sparse.csr import csr_to_dense
+from conftest import assert_close, random_csr
+
+
+def _mixed_workload(rng, n, dim, densities):
+    return [(random_csr(rng, dim, dim, densities[i % len(densities)]),
+             random_csr(rng, dim, dim, densities[i % len(densities)]))
+            for i in range(n)]
+
+
+def test_service_mixed_structures_correct_and_one_compile_per_bucket():
+    """Fast-lane heterogeneous case: mixed densities through one knl plan."""
+    rng = np.random.default_rng(0)
+    dim = 24
+    plan = ChunkPlan("knl", (0, dim), (0, dim // 2, dim), 0.0, 0.0)
+    svc = SpGEMMService(plan, quantum=32, max_batch=3, retrace_budget=8)
+    reqs = _mixed_workload(rng, 7, dim, [0.08, 0.25])
+    before = TRACE_COUNTS["knl_batched"]
+    ids = [svc.submit(A, B) for A, B in reqs]
+    out = svc.flush()
+    assert [r.req_id for r in out] == sorted(ids)
+    for (A, B), resp in zip(reqs, out):
+        assert_close(csr_to_dense(resp.C), spgemm_dense_oracle(A, B), atol=1e-3)
+        assert resp.latency_s >= resp.exec_s > 0.0
+        assert resp.stats.copy_in_bytes > 0
+    # <= 1 compile per geometry bucket, and the service's own accounting agrees
+    new = TRACE_COUNTS["knl_batched"] - before
+    assert new == svc.stats.compiles <= svc.n_buckets
+    for _env, _alg, compiles, _execs, _served in svc.bucket_summaries():
+        assert compiles <= 1
+    # repeat traffic with the same structures: zero retraces
+    mid = TRACE_COUNTS["knl_batched"]
+    for A, B in _mixed_workload(rng, 4, dim, [0.08, 0.25]):
+        svc.submit(A, B)
+    out2 = svc.flush()
+    assert len(out2) == 4
+    assert TRACE_COUNTS["knl_batched"] == mid
+    assert svc.pending == 0
+
+
+def test_service_retrace_budget_folds_geometries():
+    """With budget=2, many distinct structures still serve correctly through
+    at most 2 compiled buckets (envelopes grow by union instead)."""
+    rng = np.random.default_rng(7)
+    dim = 24
+    plan = ChunkPlan("knl", (0, dim), (0, dim // 2, dim), 0.0, 0.0)
+    svc = SpGEMMService(plan, quantum=8, max_batch=2, retrace_budget=2)
+    reqs = _mixed_workload(rng, 8, dim, [0.03, 0.1, 0.2, 0.3, 0.4])
+    for A, B in reqs:
+        svc.submit(A, B)
+    assert svc.n_buckets <= 2
+    assert svc.stats.budget_merges > 0 and svc.stats.budget_overflows == 0
+    out = svc.flush()
+    for (A, B), resp in zip(reqs, out):
+        assert_close(csr_to_dense(resp.C), spgemm_dense_oracle(A, B), atol=1e-3)
+
+
+def test_service_requires_plan_or_limit_and_plans_itself():
+    with pytest.raises(ValueError):
+        SpGEMMService()
+    rng = np.random.default_rng(3)
+    dim = 20
+    A, B = random_csr(rng, dim, dim, 0.3), random_csr(rng, dim, dim, 0.3)
+    limit = float(B.nbytes()) * 0.4
+    svc = SpGEMMService(fast_limit_bytes=limit, max_batch=2)
+    svc.submit(A, B)
+    (resp,) = svc.flush()
+    assert_close(csr_to_dense(resp.C), spgemm_dense_oracle(A, B), atol=1e-3)
+    # the derived plan matches what plan_knl would choose
+    assert resp.bucket_key[1][0] == plan_knl(A, B, limit).algorithm == "knl"
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("algorithm", ["knl", "chunk1", "chunk2"])
+def test_service_large_mixed_sweep(algorithm):
+    """Nightly sweep: bigger mixed-structure workloads across all three
+    algorithms and several flush waves; every response matches the oracle and
+    buckets never recompile after their first wave."""
+    rng = np.random.default_rng(42)
+    dim = 48
+    p_ac = (0, dim) if algorithm == "knl" else (0, dim // 3, dim)
+    plan = ChunkPlan(algorithm, p_ac, (0, dim // 3, 2 * dim // 3, dim), 0.0, 0.0)
+    svc = SpGEMMService(plan, quantum=64, max_batch=4, retrace_budget=6)
+    counter = f"{algorithm}_batched"
+    densities = [0.02, 0.08, 0.15, 0.25]
+    for wave in range(3):
+        reqs = _mixed_workload(rng, 10, dim, densities)
+        traces0 = TRACE_COUNTS[counter]
+        created0 = svc.stats.buckets_created
+        merges0 = svc.stats.budget_merges
+        for A, B in reqs:
+            svc.submit(A, B)
+        out = svc.flush()
+        for (A, B), resp in zip(reqs, out):
+            assert_close(csr_to_dense(resp.C), spgemm_dense_oracle(A, B),
+                         atol=1e-3)
+        # compiles this wave are bounded by the geometries that are genuinely
+        # new to it: freshly created buckets plus envelope-growing merges
+        new_traces = TRACE_COUNTS[counter] - traces0
+        assert new_traces <= (svc.stats.buckets_created - created0
+                              + svc.stats.budget_merges - merges0)
+    # lifetime: every bucket compiled at most once per envelope it has had
+    assert svc.stats.compiles <= (svc.stats.buckets_created
+                                  + svc.stats.budget_merges)
+    assert svc.stats.served == 30
