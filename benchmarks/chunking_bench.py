@@ -7,9 +7,19 @@ copy cost, vs DDR and HBM.
 GPU (Figs 12/13): Chunk8 / Chunk16 (fast window of 8/16 "GiB" scaled to bench
 size) with the Alg-4 planner choosing the streaming order; derived speedup vs
 host-pinned — the paper reports 3.1x-14.7x.
+
+Executor lanes: ``run_loop_vs_scan`` (host loop vs device-resident lax.scan,
+CSV rows) and ``run_scan_vs_pallas`` (scan vs the explicitly double-buffered
+Pallas backend). The latter also powers ``python benchmarks/chunking_bench.py
+[--smoke]``, which prints one JSON document (the ``BENCH_chunking.json``
+schema: ``{"bench": ..., "rows": [...]}``) that CI smoke-parses like the
+serving bench.
 """
 
 from __future__ import annotations
+
+import argparse
+import json
 
 import numpy as np
 
@@ -78,11 +88,10 @@ def run():
                      f"[{plan.algorithm};ac={plan.n_ac};b={plan.n_b}]",
                      us, f"{speedup:.2f}x_vs_pinned")
 
-    # --- loop vs scan executors --------------------------------------------
-    # Same plan, same kernel; the only difference is host-driven per-chunk
-    # round-trips (loop) vs one device-resident jitted lax.scan (scan). The
-    # derived column is the measured wall-time speedup of scan over loop.
-    run_loop_vs_scan()
+    # The executor comparison sweeps (loop vs scan, scan vs pallas) are their
+    # own driver lanes — `scan_vs_loop` / `scan_vs_pallas` in
+    # benchmarks.run.SUITES — so a full `python -m benchmarks.run` covers
+    # them exactly once.
 
 
 def run_loop_vs_scan():
@@ -113,3 +122,84 @@ def run_loop_vs_scan():
             f"scan_vs_loop/{prob}/AxP/{label}"
             f"[{plan.algorithm};ac={plan.n_ac};b={plan.n_b}]",
             us_loop, us_scan)
+
+
+def run_scan_vs_pallas(smoke: bool = False) -> dict:
+    """Scan (XLA-scheduled transfers) vs Pallas (explicit double-buffered
+    prefetch) on the same plans, as a machine-checkable JSON report.
+
+    On CPU the Pallas path runs in interpret mode over *densified* staged
+    pieces, so the absolute numbers only validate plumbing; the lane exists so
+    the comparison harness (and its JSON schema) is exercised continuously and
+    ready for real-TPU runs, where the dense slabs hit the MXU and the DMA
+    overlap is the paper's measured effect.
+    """
+    from repro.core.planner import ChunkPlan
+
+    prob = "laplace3d"
+    size = 5 if smoke else 8
+    A, R, P = multigrid.problem(prob, size)
+    n_a, n_b = A.n_rows, P.n_rows
+
+    cases = [(plan_knl(A, P, fast_limit_bytes=P.nbytes() * 0.4), "knl-chunks")]
+    p_ac = tuple(int(v) for v in np.linspace(0, n_a, 3))
+    p_b = tuple(int(v) for v in np.linspace(0, n_b, 4))
+    for alg in ("chunk1", "chunk2"):
+        cases.append((ChunkPlan(alg, p_ac, p_b, 0.0, 0.0), f"{alg}-2x3"))
+
+    repeats = 2 if smoke else 3
+    rows = []
+    for plan, label in cases:
+        c_pad = default_c_pad(A, P, plan)
+        # plan-derived stats are deterministic: take them from the warmup
+        # call instead of re-executing after the timed runs
+        _, stats_scan = chunked_spgemm(A, P, plan, c_pad, backend="scan")
+        _, stats_pallas = chunked_spgemm(A, P, plan, c_pad, backend="pallas")
+        us_scan = timeit(lambda: chunked_spgemm(A, P, plan, c_pad,
+                                                backend="scan"),
+                         repeats=repeats)
+        us_pallas = timeit(lambda: chunked_spgemm(A, P, plan, c_pad,
+                                                  backend="pallas"),
+                           repeats=repeats)
+        rows.append({
+            "case": f"{prob}/AxP/{label}",
+            "algorithm": plan.algorithm,
+            "n_ac": plan.n_ac,
+            "n_b": plan.n_b,
+            "scan_us": round(us_scan, 1),
+            "pallas_us": round(us_pallas, 1),
+            "pallas_vs_scan": round(us_scan / us_pallas, 3) if us_pallas
+            else float("inf"),
+            "scan_copy_bytes": stats_scan.copy_bytes,
+            "pallas_copy_bytes": stats_pallas.copy_bytes,
+        })
+    from repro.kernels.ranged_spgemm import default_interpret
+
+    return {
+        "bench": "chunking_scan_vs_pallas",
+        "problem": prob,
+        "size": size,
+        "interpret_mode": default_interpret(),
+        "rows": rows,
+    }
+
+
+def run_csv_scan_vs_pallas():
+    """The scan-vs-pallas lane as driver CSV rows (JSON stays in ``main``)."""
+    report = run_scan_vs_pallas()
+    for row in report["rows"]:
+        emit(f"scan_vs_pallas/{row['case']}"
+             f"[{row['algorithm']};ac={row['n_ac']};b={row['n_b']}]",
+             row["pallas_us"], f"{row['pallas_vs_scan']}x_vs_scan")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI (seconds, still valid JSON)")
+    args = ap.parse_args()
+    print(json.dumps(run_scan_vs_pallas(smoke=args.smoke), indent=2))
+
+
+if __name__ == "__main__":
+    main()

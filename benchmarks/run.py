@@ -1,10 +1,12 @@
-"""Benchmark driver: one module per paper table/figure.
+"""Benchmark driver: one suite per paper table/figure (plus executor and
+serving lanes).
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run table2 fig11   # a subset
 
 Prints ``name,us_per_call,derived`` CSV (see benchmarks/common.py for the
-semantics of each column)."""
+semantics of each column). A SUITES value is ``module`` (whose ``run()`` is
+called) or ``module:function`` for lanes that live inside a bigger module."""
 
 from __future__ import annotations
 
@@ -20,7 +22,16 @@ SUITES = {
     "chunkability": "benchmarks.chunkability",    # Bender properties
     "kernels": "benchmarks.kernels_bench",        # Pallas kernel microbenches
     "roofline": "benchmarks.roofline_table",      # §Roofline aggregation
+    "serving": "benchmarks.spgemm_serving:run_suite",   # SpGEMMService vs naive
+    "scan_vs_loop": "benchmarks.chunking_bench:run_loop_vs_scan",
+    "scan_vs_pallas": "benchmarks.chunking_bench:run_csv_scan_vs_pallas",
 }
+
+
+def _resolve(spec: str):
+    mod_name, _, fn_name = spec.partition(":")
+    mod = __import__(mod_name, fromlist=["run"])
+    return getattr(mod, fn_name or "run")
 
 
 def main() -> None:
@@ -31,10 +42,10 @@ def main() -> None:
         if name not in SUITES:
             print(f"# unknown suite {name!r}; have {list(SUITES)}", file=sys.stderr)
             continue
-        mod = __import__(SUITES[name], fromlist=["run"])
+        fn = _resolve(SUITES[name])
         t0 = time.time()
         print(f"# --- {name} ({SUITES[name]}) ---")
-        mod.run()
+        fn()
         print(f"# {name} done in {time.time()-t0:.1f}s")
 
 

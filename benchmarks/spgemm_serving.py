@@ -131,6 +131,26 @@ def run(dim: int, batch_sizes, densities_by_workload, max_batch: int,
     }
 
 
+def run_suite():
+    """Driver entry point (``python -m benchmarks.run serving``): a small
+    serving sweep emitted as the driver's ``name,us_per_call,derived`` CSV
+    rows. The standalone ``main()`` JSON document remains the primary output
+    (CI smoke-parses it); this lane makes serving reachable from the same
+    driver as every paper table/figure."""
+    from benchmarks.common import emit
+
+    report = run(dim=24, batch_sizes=[3, 6], max_batch=4, quantum=32,
+                 densities_by_workload={"uniform": [0.2],
+                                        "mixed": [0.08, 0.25]})
+    for row in report["rows"]:
+        emit(
+            f"serving/{row['workload']}/{row['regime']}/n={row['n_requests']}"
+            f"[buckets={row['buckets']}]",
+            row["service_us"],
+            f"{row['speedup']}x_vs_naive({row['service_rps']}rps)",
+        )
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",

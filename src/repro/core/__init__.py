@@ -17,14 +17,16 @@ from repro.core.placement import (
 )
 from repro.core.planner import (
     ChunkPlan, plan_chunks, plan_knl, binary_search_partition, partition_cost,
-    row_bytes_csr, staged_chunk_bytes,
+    row_bytes_csr, staged_chunk_bytes, staged_row_bytes,
 )
 from repro.core.chunking import (
     ChunkStats, chunk_knl, chunk_gpu1, chunk_gpu2, chunked_spgemm,
     instance_envelope, batch_envelope,
 )
 from repro.core.chunk_stream import (
-    chunk_knl_scan, chunk_gpu1_scan, chunk_gpu2_scan, chunked_spgemm_batched,
+    chunk_knl_scan, chunk_gpu1_scan, chunk_gpu2_scan,
+    chunk_knl_pallas, chunk_gpu1_pallas, chunk_gpu2_pallas,
+    chunked_spgemm_batched,
 )
 from repro.core.triangle import count_triangles, count_triangles_dense
 
@@ -37,10 +39,11 @@ __all__ = [
     "Placement", "ALL_FAST", "ALL_SLOW", "DP", "dp_recommendation",
     "placement_cost", "place",
     "ChunkPlan", "plan_chunks", "plan_knl", "binary_search_partition",
-    "partition_cost", "row_bytes_csr", "staged_chunk_bytes",
+    "partition_cost", "row_bytes_csr", "staged_chunk_bytes", "staged_row_bytes",
     "ChunkStats", "chunk_knl", "chunk_gpu1", "chunk_gpu2", "chunked_spgemm",
     "instance_envelope", "batch_envelope",
     "chunk_knl_scan", "chunk_gpu1_scan", "chunk_gpu2_scan",
+    "chunk_knl_pallas", "chunk_gpu1_pallas", "chunk_gpu2_pallas",
     "chunked_spgemm_batched",
     "count_triangles", "count_triangles_dense",
 ]

@@ -13,19 +13,29 @@ Chunk2) run as **one jitted program each**:
     Chunk2 orders) over the stacked chunks with the fused ``spgemm_ranged``
     body inlined,
 
-so the whole multi-chunk multiply compiles once, never leaves the device
-between chunks, and XLA is free to double-buffer the slow->fast chunk
-transfers behind the kernel (the `copy2Fast` of the paper becomes a prefetch
-the compiler schedules instead of a NumPy round-trip).
+so the whole multi-chunk multiply compiles once and never leaves the device
+between chunks. The scan backend leaves the slow->fast chunk transfers to
+XLA's scheduler — it is *free* to double-buffer them behind the kernel, but
+nothing forces the overlap. The third backend closes that gap: the
+``chunk_*_pallas`` executors run the same three streaming orders through
+``repro.kernels.ranged_spgemm``, whose pallas_call hand-DMAs the streamed
+operand through a two-slot VMEM buffer (copy chunk j+1 while chunk j
+multiplies — the paper's `copy2Fast` overlap made explicit rather than hoped
+for).
 
-Because a traced scan cannot mutate Python-side counters, ChunkStats for this
-backend is *computed from the plan*: the uniform padding makes every staged
-chunk/strip/partial the same size, so the loop executors' exact per-copy event
-sequence is reproducible host-side (and is asserted identical in tests).
+Because a traced scan (or Pallas grid) cannot mutate Python-side counters,
+ChunkStats for these backends is *computed from the plan*: the uniform padding
+makes every staged chunk/strip/partial the same size, so the per-copy event
+sequence is reproducible host-side. ``planned_stats`` replays the loop
+executors' CSR-staging events (asserted identical in tests);
+``planned_stats_pallas`` replays the Pallas pipeline's dense-slab DMA events,
+which differ structurally (dense staged sizes; Chunk2's C partials persist in
+VMEM instead of bouncing to slow memory).
 
-``chunked_spgemm_batched`` vmaps the scan executors over stacked problem
-instances sharing one plan — the many-small-matrices serving scenario. Batches
-may mix sparsity structures: every instance is repadded to a shared
+``chunked_spgemm_batched`` runs the scan executors vmapped — or the Pallas
+kernel with a leading batch grid dimension — over stacked problem instances
+sharing one plan: the many-small-matrices serving scenario. Batches may mix
+sparsity structures: every instance is repadded to a shared
 ``GeometryEnvelope`` (the batch union, or a caller-provided bucket envelope)
 before stacking. ``repro.serve.spgemm_service`` builds the request-bucketing
 service on top.
@@ -36,6 +46,8 @@ from __future__ import annotations
 import collections
 from functools import partial
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 from jax import lax
@@ -45,8 +57,10 @@ from repro.core.chunking import (
 )
 from repro.core.kkmem import spgemm_ranged_impl
 from repro.core.planner import ChunkPlan
+from repro.kernels.ranged_spgemm import ranged_spgemm_stream
 from repro.sparse.csr import (
-    CSR, GeometryEnvelope, csr_pad_to, csr_stack, csr_unstack,
+    CSR, GeometryEnvelope, csr_from_dense, csr_pad_to, csr_stack, csr_to_dense,
+    csr_unstack,
 )
 
 # Python-side trace counters: each key increments once per (re)trace of the
@@ -225,6 +239,53 @@ def _c_strip_nbytes(strip_rows: int, c_pad: int, dtype) -> int:
     return (strip_rows + 1) * 4 + c_pad * (4 + itemsize)
 
 
+def planned_stats_pallas(plan: ChunkPlan, slab_nbytes: int, a_stage_nbytes: int,
+                         c_stage_nbytes: int) -> ChunkStats:
+    """Replay the Pallas pipeline's per-copy event sequence from the plan.
+
+    The event model differs from :func:`planned_stats` in three structural
+    ways, all of them properties of the kernel rather than modeling choices:
+
+      * staged pieces are **dense** (slab = ``chunk_rows x n`` floats, strip =
+        ``strip_rows x k_pad`` floats), not padded CSR triples;
+      * the stationary operand is staged by the Pallas pipeline once per outer
+        step, and the streamed operand is hand-DMA'd once per grid step — the
+        double-buffer *overlaps* those copies with compute but their byte
+        volume is unchanged;
+      * in the Chunk2 order the per-strip C partials persist in the VMEM
+        output block across outer steps, so the ``(n_b - 1)`` per-strip
+        out+in partial bounces of the loop/scan model collapse into one
+        ``C_prev`` fetch and one final writeback per strip.
+    """
+    stats = ChunkStats(plan.algorithm, plan.n_ac, plan.n_b)
+    if plan.algorithm in ("knl", "chunk1"):
+        for _ in range(plan.n_ac):           # knl is the 1-strip special case
+            stats.add_in(a_stage_nbytes)     # stationary strip -> VMEM
+            stats.add_in(c_stage_nbytes)     # fused C_prev block
+            for _ in range(plan.n_b):
+                stats.add_in(slab_nbytes)    # double-buffered slab DMA
+                stats.kernel_calls += 1
+            stats.add_out(c_stage_nbytes)    # strip result writeback
+        return stats
+    if plan.algorithm == "chunk2":
+        for jb in range(plan.n_b):
+            stats.add_in(slab_nbytes)        # stationary chunk -> VMEM
+            for _ in range(plan.n_ac):
+                if jb == 0:
+                    stats.add_in(c_stage_nbytes)   # C_prev fetched once
+                stats.add_in(a_stage_nbytes)       # streamed strip DMA
+                stats.kernel_calls += 1
+        for _ in range(plan.n_ac):
+            stats.add_out(c_stage_nbytes)    # single final writeback
+        return stats
+    raise ValueError(f"unknown algorithm {plan.algorithm!r}")
+
+
+def _pallas_stage_nbytes(strip_rows: int, k: int, span: int, n: int) -> tuple:
+    """(slab, a_stage, c_stage) dense staged footprints in bytes (f32)."""
+    return span * n * 4, strip_rows * (k + span) * 4, strip_rows * n * 4
+
+
 # ---------------------------------------------------------------------------
 # executors (drop-in signatures of chunk_knl / chunk_gpu1 / chunk_gpu2)
 # ---------------------------------------------------------------------------
@@ -267,13 +328,136 @@ def chunk_gpu2_scan(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int):
 
 
 # ---------------------------------------------------------------------------
+# Pallas backend: explicit double-buffered prefetch (kernels/ranged_spgemm)
+# ---------------------------------------------------------------------------
+
+
+def _dense_stack(stacked: CSR, levels: int = 1) -> jax.Array:
+    """Densify a (possibly doubly) ``csr_stack``-ed CSR: ``levels`` leading
+    stack axes become leading dense axes."""
+    shape, mrn = stacked.shape, stacked.max_row_nnz
+
+    def densify(ip, ix, d):
+        return csr_to_dense(CSR(ip, ix, d, shape, mrn))
+
+    fn = densify
+    for _ in range(levels):
+        fn = jax.vmap(fn)
+    return fn(stacked.indptr, stacked.indices, stacked.data)
+
+
+def _pad_cols(a: jax.Array, span: int) -> jax.Array:
+    """Zero-pad the last (column) axis by ``span`` so the kernel's ranged
+    slice of the final chunk never reads out of bounds."""
+    pad = [(0, 0)] * (a.ndim - 1) + [(0, span)]
+    return jnp.pad(a.astype(jnp.float32), pad)
+
+
+def _make_pallas_core(key: str, order: str, *, batched: bool, strips: bool):
+    """One jitted staging-and-launch core; the six variants differ only in
+    the streaming order, the trace-counter key, and whether A arrives as a
+    plain CSR (knl), a strip stack, or a per-instance (doubly) stacked batch.
+
+    Batched cores ride the batch on a leading grid dimension of the same
+    kernel (one pallas_call for the whole microbatch — no vmap-of-pallas),
+    with their own TRACE_COUNTS keys so the serving layer's compile
+    accounting stays exact.
+    """
+    a_levels = (1 if strips else 0) + (1 if batched else 0)
+
+    @jax.jit
+    def core(Ast: CSR, Bst: CSR, r0s) -> jax.Array:
+        TRACE_COUNTS[key] += 1
+        span = Bst.n_rows
+        a = _pad_cols(_dense_stack(Ast, levels=a_levels), span)
+        slabs = _dense_stack(Bst, levels=2 if batched else 1).astype(jnp.float32)
+        if not strips:               # knl: the whole A is the single strip
+            a = a[:, None] if batched else a[None]
+        if not batched:              # width-1 batch axis
+            a, slabs = a[None], slabs[None]
+        c0 = jnp.zeros(a.shape[:3] + (Bst.n_cols,), jnp.float32)
+        out = ranged_spgemm_stream(a, slabs, c0, r0s, order=order)
+        if not batched:
+            out = out[0]
+        if not strips:
+            out = out[:, 0] if batched else out[0]
+        return out
+
+    return core
+
+
+_knl_pallas = _make_pallas_core("knl_pallas", "chunk1",
+                                batched=False, strips=False)
+_chunk1_pallas = _make_pallas_core("chunk1_pallas", "chunk1",
+                                   batched=False, strips=True)
+_chunk2_pallas = _make_pallas_core("chunk2_pallas", "chunk2",
+                                   batched=False, strips=True)
+_knl_pallas_batched = _make_pallas_core("knl_pallas_batched", "chunk1",
+                                        batched=True, strips=False)
+_chunk1_pallas_batched = _make_pallas_core("chunk1_pallas_batched", "chunk1",
+                                           batched=True, strips=True)
+_chunk2_pallas_batched = _make_pallas_core("chunk2_pallas_batched", "chunk2",
+                                           batched=True, strips=True)
+
+
+def _pallas_assemble(dense, p_ac: tuple, dtype) -> CSR:
+    """Crop per-strip dense results to their true rows, concatenate, and
+    sparsify (host). The Pallas backend's CSR keeps exactly the nonzeros of
+    the dense result, so comparisons against the loop oracle are allclose on
+    the densified values rather than bitwise on padding structure."""
+    dense = np.asarray(dense)
+    whole = np.concatenate([
+        dense[i][: e - s]
+        for i, (s, e) in enumerate(zip(p_ac[:-1], p_ac[1:]))
+    ])
+    return csr_from_dense(whole.astype(dtype))
+
+
+def chunk_knl_pallas(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int):
+    del c_pad  # capacity is implicit in the dense accumulator
+    chunks = b_chunks(B, plan.p_b)
+    Bs = csr_stack(chunks)
+    r0s, _ = plan.b_ranges()
+    dense = _knl_pallas(A, Bs, jnp.asarray(r0s))
+    C = csr_from_dense(np.asarray(dense).astype(np.dtype(A.dtype)))
+    stats = planned_stats_pallas(
+        plan, *_pallas_stage_nbytes(A.n_rows, A.n_cols, Bs.n_rows, B.n_cols))
+    return C, stats
+
+
+def chunk_gpu1_pallas(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int):
+    del c_pad
+    strips = a_strips(A, plan.p_ac)
+    chunks = b_chunks(B, plan.p_b)
+    As, Bs = csr_stack(strips), csr_stack(chunks)
+    r0s, _ = plan.b_ranges()
+    dense = _chunk1_pallas(As, Bs, jnp.asarray(r0s))
+    stats = planned_stats_pallas(
+        plan, *_pallas_stage_nbytes(As.n_rows, A.n_cols, Bs.n_rows, B.n_cols))
+    return _pallas_assemble(dense, plan.p_ac, np.dtype(A.dtype)), stats
+
+
+def chunk_gpu2_pallas(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int):
+    del c_pad
+    strips = a_strips(A, plan.p_ac)
+    chunks = b_chunks(B, plan.p_b)
+    As, Bs = csr_stack(strips), csr_stack(chunks)
+    r0s, _ = plan.b_ranges()
+    dense = _chunk2_pallas(As, Bs, jnp.asarray(r0s))
+    stats = planned_stats_pallas(
+        plan, *_pallas_stage_nbytes(As.n_rows, A.n_cols, Bs.n_rows, B.n_cols))
+    return _pallas_assemble(dense, plan.p_ac, np.dtype(A.dtype)), stats
+
+
+# ---------------------------------------------------------------------------
 # batched entry point: many problem instances, one plan, one compilation
 # ---------------------------------------------------------------------------
 
 
 def chunked_spgemm_batched(As, Bs, plan: ChunkPlan, c_pad: int | None = None,
-                           envelope: GeometryEnvelope | None = None):
-    """vmap the scan executor over stacked problem instances sharing one plan.
+                           envelope: GeometryEnvelope | None = None,
+                           backend: str = "scan"):
+    """Run the batched executor over stacked problem instances sharing one plan.
 
     Instances must share shapes and dtype but may differ in sparsity
     *structure* (nnz, nnz capacities, ``max_row_nnz``): every instance's chunks
@@ -282,6 +466,13 @@ def chunked_spgemm_batched(As, Bs, plan: ChunkPlan, c_pad: int | None = None,
     one — before stacking, so one compiled program serves the whole batch.
     Same-structure batches repad to their own geometry (a no-op), keeping the
     results bitwise-identical to the unbatched scan executors.
+
+    ``backend="scan"`` (default) vmaps the jitted lax.scan executors;
+    ``backend="pallas"`` runs the whole microbatch through one
+    ``ranged_spgemm_stream`` launch whose leading grid dimension is the batch
+    (explicit double-buffered chunk prefetch; allclose rather than bitwise
+    against the loop oracle, with staging and accumulation in float32
+    regardless of the instances' dtype).
 
     Returns ``(list_of_C, stats)`` where ``stats`` is the per-instance modeled
     copy accounting at the *envelope-padded* staged sizes (identical across the
@@ -292,6 +483,8 @@ def chunked_spgemm_batched(As, Bs, plan: ChunkPlan, c_pad: int | None = None,
         raise ValueError("need equal, nonzero numbers of A and B instances")
     if plan.algorithm not in ("knl", "chunk1", "chunk2"):
         raise ValueError(f"unsupported algorithm {plan.algorithm!r}")
+    if backend not in ("scan", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}")
     for A, B in zip(As, Bs):
         if A.shape != As[0].shape or B.shape != Bs[0].shape:
             raise ValueError(
@@ -325,6 +518,14 @@ def chunked_spgemm_batched(As, Bs, plan: ChunkPlan, c_pad: int | None = None,
             for A in As
         ])
         n_rows = envelope.a_shape[0]
+        if backend == "pallas":
+            dense = _knl_pallas_batched(Ast, Bst, r0s)
+            stats = planned_stats_pallas(plan, *_pallas_stage_nbytes(
+                n_rows, envelope.a_shape[1], envelope.chunk_rows, n_cols))
+            np_dtype = np.dtype(dtype)
+            return [
+                csr_from_dense(np.asarray(d).astype(np_dtype)) for d in dense
+            ], stats
         C0s = _empty_c_stack(len(As), n_rows, n_cols, c_pad, dtype)
         Cb = _knl_scan_batched(Ast, Bst, r0s, r1s, C0s, c_pad=c_pad)
         stats = planned_stats(plan, chunk_nbytes, 0, 0)
@@ -333,6 +534,16 @@ def chunked_spgemm_batched(As, Bs, plan: ChunkPlan, c_pad: int | None = None,
     strip_lists = [a_strips(A, plan.p_ac, envelope=envelope) for A in As]
     Ast = csr_stack([csr_stack(sl) for sl in strip_lists])   # [batch, n_ac, ...]
     strip_rows = envelope.strip_rows
+    if backend == "pallas":
+        core = (_chunk1_pallas_batched if plan.algorithm == "chunk1"
+                else _chunk2_pallas_batched)
+        dense = core(Ast, Bst, r0s)
+        stats = planned_stats_pallas(plan, *_pallas_stage_nbytes(
+            strip_rows, envelope.a_shape[1], envelope.chunk_rows, n_cols))
+        np_dtype = np.dtype(dtype)
+        return [
+            _pallas_assemble(d, plan.p_ac, np_dtype) for d in dense
+        ], stats
     stats = planned_stats(plan, chunk_nbytes, strip_lists[0][0].nbytes(),
                           _c_strip_nbytes(strip_rows, c_pad, dtype))
     if plan.algorithm == "chunk1":

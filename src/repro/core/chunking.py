@@ -248,8 +248,12 @@ def chunked_spgemm(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int | None = None,
     largest row strip (whole C for 1-strip plans).
 
     ``backend`` selects the executor: ``"scan"`` (default) runs the whole chunk
-    loop device-resident inside one jitted ``lax.scan``; ``"loop"`` is the
-    host-driven Python loop, retained as the bitwise oracle for the scan path.
+    loop device-resident inside one jitted ``lax.scan``; ``"pallas"`` runs it
+    through the ranged-SpGEMM Pallas kernel with explicit double-buffered
+    chunk prefetch (allclose to the oracle, not bitwise: dense accumulation
+    reorders the float adds, and the kernel stages and accumulates in
+    float32 regardless of the input dtype); ``"loop"`` is the host-driven
+    Python loop, retained as the bitwise oracle for the scan path.
     """
     if c_pad is None:
         c_pad = default_c_pad(A, B, plan)
@@ -266,6 +270,12 @@ def chunked_spgemm(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int | None = None,
         )
         table = {"knl": chunk_knl_scan, "chunk1": chunk_gpu1_scan,
                  "chunk2": chunk_gpu2_scan}
+    elif backend == "pallas":
+        from repro.core.chunk_stream import (
+            chunk_knl_pallas, chunk_gpu1_pallas, chunk_gpu2_pallas,
+        )
+        table = {"knl": chunk_knl_pallas, "chunk1": chunk_gpu1_pallas,
+                 "chunk2": chunk_gpu2_pallas}
     elif backend == "loop":
         table = {"knl": chunk_knl, "chunk1": chunk_gpu1, "chunk2": chunk_gpu2}
     else:

@@ -81,22 +81,51 @@ def partition_cost(bytes_a: float, bytes_b: float, bytes_c: float,
     raise ValueError(algorithm)
 
 
+def staged_row_bytes(row_bytes: np.ndarray, bounds: tuple,
+                     index_bytes: int = 4) -> float:
+    """Padded-envelope fast footprint of one staged piece of a row partition,
+    in the planner's per-row byte units.
+
+    The executors pad every piece to the largest piece's capacity and row
+    count, so what fast memory holds is ``max_rows`` row pointers plus the
+    byte envelope ``max_piece_bytes`` — the partition-level analogue of
+    :func:`staged_chunk_bytes` for operands the planner only knows as a
+    per-row byte vector (the symbolic C estimate)."""
+    rb = np.asarray(row_bytes, np.float64)
+    cap = max(float(rb[s:e].sum()) for s, e in zip(bounds[:-1], bounds[1:]))
+    rows = max(e - s for s, e in zip(bounds[:-1], bounds[1:]))
+    return float((rows + 1) * index_bytes) + max(cap, 1.0)
+
+
 def plan_chunks(A: CSR, B: CSR, c_row_bytes: np.ndarray, system: MemorySystem,
                 fast_limit_bytes: float | None = None,
                 big_portion: float = 0.75) -> ChunkPlan:
     """Algorithm 4. ``c_row_bytes`` is the symbolic-phase estimate of C's per-row
-    footprint (A and C are always co-partitioned: same row boundaries)."""
+    footprint (A and C are always co-partitioned: same row boundaries).
+
+    ``fast_bytes_needed`` models the *staged* peak footprint the executors
+    actually allocate: resident operands at their full size plus the padded
+    envelope of every streamed piece (every chunk/strip is padded to the
+    largest one's rows and capacity). Modeling the streamed term as the
+    densest single row — the pre-fix behavior — undercounts whenever the row
+    distribution is skewed, exactly the staging overhead Nagasaka & Azad
+    (1804.01698) flag on KNL."""
     fast = float(fast_limit_bytes or system.fast.capacity_bytes)
     small_portion = 1.0 - big_portion
     a_rows = row_bytes_csr(A)
     b_rows = row_bytes_csr(B)
-    ac_rows = a_rows + np.asarray(c_row_bytes, np.float64)
-    size_a, size_b, size_c = float(a_rows.sum()), float(b_rows.sum()), float(np.sum(c_row_bytes))
+    c_rows = np.asarray(c_row_bytes, np.float64)
+    ac_rows = a_rows + c_rows
+    size_a, size_b, size_c = float(a_rows.sum()), float(b_rows.sum()), float(c_rows.sum())
 
     whole = size_a + size_b + size_c
     if whole <= fast:
         return ChunkPlan("whole_fast", (0, A.n_rows), (0, B.n_rows),
                          copy_bytes=whole, fast_bytes_needed=whole)
+
+    def staged_ac(p_ac: tuple) -> float:
+        # the executors stage the padded A strip and the C partial separately
+        return staged_chunk_bytes(A, p_ac) + staged_row_bytes(c_rows, p_ac)
 
     if size_b <= big_portion * fast:
         # B resident; stream A, C through the leftover (paper: "Add left over from
@@ -106,7 +135,7 @@ def plan_chunks(A: CSR, B: CSR, c_row_bytes: np.ndarray, system: MemorySystem,
         plan = ChunkPlan("chunk2", p_ac, (0, B.n_rows),
                          copy_bytes=partition_cost(size_a, size_b, size_c,
                                                    len(p_ac) - 1, 1, "chunk2"),
-                         fast_bytes_needed=size_b + float(ac_rows.max(initial=0.0)))
+                         fast_bytes_needed=size_b + staged_ac(p_ac))
         return plan
 
     if size_a + size_c <= big_portion * fast:
@@ -115,7 +144,8 @@ def plan_chunks(A: CSR, B: CSR, c_row_bytes: np.ndarray, system: MemorySystem,
         return ChunkPlan("chunk1", (0, A.n_rows), p_b,
                          copy_bytes=partition_cost(size_a, size_b, size_c,
                                                    1, len(p_b) - 1, "chunk1"),
-                         fast_bytes_needed=size_a + size_c + float(b_rows.max(initial=0.0)))
+                         fast_bytes_needed=size_a + size_c
+                         + staged_chunk_bytes(B, p_b))
 
     # Neither fits: 2-D chunking. Give the big portion to the costlier operand set
     # (paper: "if size(A) + 2*size(C) > size(B)" -> A,C get the big portion).
@@ -129,9 +159,13 @@ def plan_chunks(A: CSR, B: CSR, c_row_bytes: np.ndarray, system: MemorySystem,
     cost1 = partition_cost(size_a, size_b, size_c, n_ac, n_b, "chunk1")
     cost2 = partition_cost(size_a, size_b, size_c, n_ac, n_b, "chunk2")
     algorithm = "chunk1" if cost1 <= cost2 else "chunk2"
+    # peak staged footprint is one padded A strip + C partial + one padded B
+    # chunk resident together, in either streaming order — the actual
+    # requirement, not the limit the partitions were searched against
     return ChunkPlan(algorithm, p_ac, p_b,
                      copy_bytes=min(cost1, cost2),
-                     fast_bytes_needed=fast)
+                     fast_bytes_needed=staged_ac(p_ac)
+                     + staged_chunk_bytes(B, p_b))
 
 
 def staged_chunk_bytes(m: CSR, bounds: tuple, value_bytes: int = 8,

@@ -1,9 +1,17 @@
 """jax version compat shims shared by the Pallas kernels.
 
 jax <= 0.4.x ships ``pltpu.TPUCompilerParams``; newer jax renamed it to
-``pltpu.CompilerParams``. Every kernel imports the resolved name from here.
+``pltpu.CompilerParams``. Similarly the untiled slow-memory space is
+``pltpu.TPUMemorySpace.ANY`` there and ``pltpu.MemorySpace.ANY`` (re-exported
+as ``pltpu.ANY``) in newer jax. Every kernel imports the resolved names from
+here.
 """
 
 from jax.experimental.pallas import tpu as pltpu
 
 CompilerParams = getattr(pltpu, "TPUCompilerParams", None) or pltpu.CompilerParams
+
+if hasattr(pltpu, "ANY"):
+    ANY = pltpu.ANY
+else:  # pragma: no cover - newer jax spells it via the MemorySpace enum
+    ANY = pltpu.MemorySpace.ANY

@@ -1,0 +1,212 @@
+"""Pallas ranged-SpGEMM with explicit double-buffered chunk prefetch.
+
+This is the paper's `copy2Fast` overlap made explicit: the chunked algorithms
+(Deveci et al. §3.2) stream one operand through fast memory while the other
+stays resident, and the central GPU result is that copying chunk j+1 *while*
+chunk j multiplies is what auto-caching cannot deliver. The scan executors
+(repro.core.chunk_stream) leave that overlap to XLA's scheduler; here it is a
+hand-written two-slot VMEM pipeline:
+
+  * the **stationary** operand (the A strip in the Chunk1 order, the B chunk
+    in the Chunk2 order) rides a normal blocked ``BlockSpec`` — Pallas stages
+    it into VMEM once per outer step;
+  * the **streamed** operand lives in slow memory (``pltpu.ANY``) and is
+    hand-DMA'd through a ``[2, ...]`` VMEM scratch buffer: at every grid step
+    the kernel starts the async copy of element j+1 into slot ``(j+1) % 2``,
+    then waits on slot ``j % 2`` and multiplies — compute and the next
+    transfer overlap by construction;
+  * the ranged product ``C = A[:, r0:r1] x B_chunk + C_prev`` uses the
+    paper's "skip columns of A outside the range" as a scalar-prefetched
+    ``r0`` table (SMEM) indexing a dynamic column slice of the resident strip.
+
+Like ``kernels/bsr_spgemm.py``, entry-level sparsity inside the staged pieces
+is traded for MXU-shaped dense tiles: the staged B chunk becomes a dense
+``[chunk_rows, n]`` slab (its padding rows are zero, so columns of A past the
+chunk's true range multiply into nothing), the A strip a dense
+``[strip_rows, k_pad]`` block. The accumulator is the output block itself,
+initialized from ``C_prev`` — the fused add of the paper's modified KKMEM
+sub-procedure — and flushed once per strip.
+
+``interpret`` follows the ``default_interpret()`` pattern of ``kernels/ops.py``:
+the same pallas_call validates on this CPU container (DMA semantics included)
+and compiles on real TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import ANY as _ANY
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _decompose(lin, outer: int, inner: int):
+    """(b, inner index) of linear grid step ``lin`` over (batch, outer, inner)."""
+    per_batch = outer * inner
+    return lin // per_batch, (lin % per_batch) % inner
+
+
+def _kernel(r0s_ref, stationary_ref, streamed_hbm, c0_ref, out_ref,
+            stream_buf, sems, *, order: str, batch: int, n_ac: int, n_b: int,
+            span: int):
+    """One grid step of the streaming multiply.
+
+    Grid is (batch, outer, inner); ``order`` fixes which operand streams:
+      chunk1: outer = strips, inner = chunks  -> B slabs stream through VMEM
+      chunk2: outer = chunks, inner = strips  -> A blocks stream through VMEM
+    """
+    b = pl.program_id(0)
+    outer_ix = pl.program_id(1)
+    inner_ix = pl.program_id(2)
+    outer, inner = (n_ac, n_b) if order == "chunk1" else (n_b, n_ac)
+    total = batch * outer * inner
+    lin = (b * outer + outer_ix) * inner + inner_ix
+
+    def dma(slot, step):
+        bb, ii = _decompose(step, outer, inner)
+        return pltpu.make_async_copy(
+            streamed_hbm.at[bb, ii], stream_buf.at[slot], sems.at[slot]
+        )
+
+    # warm-up: the very first streamed element has no previous step to
+    # prefetch it, so stage it synchronously before the overlap steady-state
+    @pl.when(lin == 0)
+    def _prime():
+        dma(0, 0).start()
+
+    # the explicit copy2Fast overlap: start element lin+1 into the other
+    # slot while this step's multiply consumes slot lin % 2
+    @pl.when(lin + 1 < total)
+    def _prefetch():
+        dma((lin + 1) % 2, lin + 1).start()
+
+    dma(lin % 2, lin).wait()
+    streamed = stream_buf[lin % 2]
+
+    if order == "chunk1":
+        j, i = inner_ix, outer_ix
+        r0 = r0s_ref[j]
+        a_blk = stationary_ref[0, 0, :, pl.ds(r0, span)]
+        b_slab = streamed
+    else:
+        j, i = outer_ix, inner_ix
+        r0 = r0s_ref[j]
+        a_blk = jax.lax.dynamic_slice_in_dim(streamed, r0, span, axis=1)
+        b_slab = stationary_ref[0, 0]
+
+    partial = jnp.dot(a_blk, b_slab, preferred_element_type=jnp.float32)
+
+    if order == "chunk1":
+        # out block = this strip; first chunk initializes from C_prev
+        @pl.when(j == 0)
+        def _init():
+            out_ref[0, 0] = c0_ref[0, 0] + partial
+
+        @pl.when(j > 0)
+        def _acc():
+            out_ref[0, 0] += partial
+    else:
+        # out block = the whole per-batch result; strips' partials persist in
+        # it across outer (chunk) steps — no fast<->slow partial bounce
+        @pl.when(j == 0)
+        def _init():
+            out_ref[0, i] = c0_ref[0, i] + partial
+
+        @pl.when(j > 0)
+        def _acc():
+            out_ref[0, i] += partial
+
+
+def ranged_spgemm_stream(a_dense: jax.Array, b_slabs: jax.Array,
+                         c0: jax.Array, r0s: jax.Array, *, order: str,
+                         interpret: bool | None = None) -> jax.Array:
+    """Fused streaming multiply ``C[b, i] = sum_j A[b, i][:, r0_j:r0_j+span] @
+    B_slab[b, j] + C_prev[b, i]`` with explicit double-buffered prefetch.
+
+    Args:
+      a_dense: f32[batch, n_ac, strip_rows, k_pad] — densified A strips, with
+        ``k_pad >= n_cols(A) + span`` so the ranged column slice of the last
+        chunk never reads out of bounds (the spill columns multiply the
+        slab's zero padding rows).
+      b_slabs: f32[batch, n_b, span, n] — densified staged B chunks; rows
+        past a chunk's true span are zero.
+      c0:      f32[batch, n_ac, strip_rows, n] — the fused ``C_prev``.
+      r0s:     i32[n_b] — global start row of each B chunk (scalar-prefetched).
+      order:   "chunk1" (strips outer, B slabs streamed) or "chunk2"
+               (chunks outer, A blocks streamed).
+
+    Returns f32[batch, n_ac, strip_rows, n].
+    """
+    if order not in ("chunk1", "chunk2"):
+        raise ValueError(f"unknown streaming order {order!r}")
+    batch, n_ac, strip_rows, k_pad = a_dense.shape
+    _, n_b, span, n = b_slabs.shape
+    if c0.shape != (batch, n_ac, strip_rows, n):
+        raise ValueError(f"c0 shape {c0.shape} != {(batch, n_ac, strip_rows, n)}")
+    if k_pad < span:
+        raise ValueError(f"k_pad={k_pad} < span={span}: A not column-padded")
+    interpret = default_interpret() if interpret is None else interpret
+
+    if order == "chunk1":
+        grid = (batch, n_ac, n_b)
+        stationary_spec = pl.BlockSpec(
+            (1, 1, strip_rows, k_pad), lambda b, i, j, r0s: (b, i, 0, 0)
+        )
+        streamed, stationary = b_slabs, a_dense
+        stream_buf = pltpu.VMEM((2, span, n), jnp.float32)
+        c0_spec = pl.BlockSpec(
+            (1, 1, strip_rows, n), lambda b, i, j, r0s: (b, i, 0, 0)
+        )
+        out_spec = pl.BlockSpec(
+            (1, 1, strip_rows, n), lambda b, i, j, r0s: (b, i, 0, 0)
+        )
+        out_shape = jax.ShapeDtypeStruct((batch, n_ac, strip_rows, n),
+                                         jnp.float32)
+    else:
+        grid = (batch, n_b, n_ac)
+        stationary_spec = pl.BlockSpec(
+            (1, 1, span, n), lambda b, j, i, r0s: (b, j, 0, 0)
+        )
+        streamed, stationary = a_dense, b_slabs
+        stream_buf = pltpu.VMEM((2, strip_rows, k_pad), jnp.float32)
+        # one whole-result c0 block per batch element (fetched once, read at
+        # j == 0), matching the out block it initializes
+        c0_spec = pl.BlockSpec(
+            (1, n_ac, strip_rows, n), lambda b, j, i, r0s: (b, 0, 0, 0)
+        )
+        out_spec = pl.BlockSpec(
+            (1, n_ac, strip_rows, n), lambda b, j, i, r0s: (b, 0, 0, 0)
+        )
+        out_shape = jax.ShapeDtypeStruct((batch, n_ac, strip_rows, n),
+                                         jnp.float32)
+
+    kernel = functools.partial(
+        _kernel, order=order, batch=batch, n_ac=n_ac, n_b=n_b, span=span
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                stationary_spec,
+                pl.BlockSpec(memory_space=_ANY),
+                c0_spec,
+            ],
+            out_specs=out_spec,
+            scratch_shapes=[
+                stream_buf,
+                pltpu.SemaphoreType.DMA((2,)),
+            ],
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(r0s, stationary, streamed, c0)

@@ -10,14 +10,22 @@ recompilation. ``SpGEMMService`` amortizes all three:
   * each request gets a per-instance :class:`GeometryEnvelope` for its plan,
     **quantized** (nnz caps rounded up to a quantum, row-nnz bounds to powers
     of two) so near-identical geometries collapse into one *bucket*;
-  * each bucket owns one ``(envelope, plan)`` executable — the repaired
-    ``chunked_spgemm_batched`` vmapped over a fixed microbatch width, so the
-    bucket compiles exactly once no matter how many flushes serve it;
-  * a **retrace budget** caps the number of distinct executables: once
+  * each bucket owns one ``(envelope, plan)`` executable per microbatch
+    width drawn from a bounded **power-of-two width ladder** ({1, 2, 4, ...,
+    ``max_batch``}): full flushes run at ``max_batch``, and a short flush
+    tail runs at the smallest ladder width that fits instead of re-executing
+    ``batch[0]`` up to ``max_batch`` times — at most ``log2(max_batch) + 1``
+    compiles per bucket, no retrace on repeat traffic at any seen width;
+  * a **retrace budget** caps the number of distinct buckets: once
     exhausted, new geometries fold into a compatible existing bucket (growing
     its envelope) instead of compiling program #budget+1;
-  * responses report per-request latency and the modeled fast<->slow
-    :class:`ChunkStats` copy traffic at the envelope-padded staged sizes.
+  * ``backend`` selects the bucket executable: the vmapped ``lax.scan``
+    cores (default) or the Pallas ranged-SpGEMM kernel with explicit
+    double-buffered chunk prefetch (``backend="pallas"``) — every bucket
+    picks up the prefetching kernel unchanged;
+  * responses report per-request latency, the executed (padded) microbatch
+    width, and the modeled fast<->slow :class:`ChunkStats` copy traffic at
+    the envelope-padded staged sizes.
 
 ``benchmarks/spgemm_serving.py`` measures the resulting throughput against
 naive per-instance dispatch.
@@ -57,6 +65,7 @@ class SpGEMMResponse:
     exec_s: float            # wall time of this request's bucket execution
     bucket_key: tuple        # (GeometryEnvelope, plan_key)
     batch_size: int          # true requests in the executed microbatch
+    padded_batch: int        # ladder width the microbatch was padded to
     stats: ChunkStats        # modeled copy traffic at envelope-padded sizes
 
 
@@ -68,6 +77,7 @@ class _Bucket:
     compiles: int = 0        # new traces of the batched core while executing
     executions: int = 0      # microbatches run
     served: int = 0          # requests completed
+    widths_used: set = dataclasses.field(default_factory=set)
 
     @property
     def key(self) -> tuple:
@@ -84,6 +94,7 @@ class ServiceStats:
     dominated_hits: int = 0    # requests absorbed by a larger existing bucket
     compiles: int = 0          # total batched-core traces across all buckets
     exec_s: float = 0.0        # total bucket execution wall time
+    padded_requests: int = 0   # padding slots executed (flush-tail waste)
 
 
 class SpGEMMService:
@@ -92,25 +103,35 @@ class SpGEMMService:
     ``plan`` pins one ChunkPlan for every request (all requests must share its
     row geometry); without it, each request is planned by ``plan_knl`` against
     ``fast_limit_bytes``. ``quantum`` controls envelope quantization (bigger =
-    fewer buckets, more padding waste), ``max_batch`` the fixed microbatch
-    width every execution is padded to (fixed so a bucket never retraces on
-    batch size), and ``retrace_budget`` the maximum number of distinct
-    compiled buckets.
+    fewer buckets, more padding waste), ``max_batch`` the largest microbatch
+    width (short flush tails drop to the smallest power-of-two ladder width
+    that fits, bounding both padding waste and per-bucket compiles),
+    ``retrace_budget`` the maximum number of distinct compiled buckets, and
+    ``backend`` the executor every bucket runs (``"scan"`` | ``"pallas"``).
     """
 
     def __init__(self, plan: ChunkPlan | None = None, *,
                  fast_limit_bytes: float | None = None,
                  quantum: int = 32, max_batch: int = 4,
-                 retrace_budget: int = 8):
+                 retrace_budget: int = 8, backend: str = "scan"):
         if plan is None and fast_limit_bytes is None:
             raise ValueError("need a fixed plan or fast_limit_bytes to plan by")
         if max_batch < 1 or quantum < 1 or retrace_budget < 1:
             raise ValueError("quantum, max_batch, retrace_budget must be >= 1")
+        if backend not in ("scan", "pallas"):
+            raise ValueError(f"unknown backend {backend!r}")
         self._plan = plan
         self._fast_limit = fast_limit_bytes
         self.quantum = quantum
         self.max_batch = max_batch
         self.retrace_budget = retrace_budget
+        self.backend = backend
+        # bounded microbatch width ladder: powers of two below max_batch plus
+        # max_batch itself ({1, 2, 4, ..., max_batch})
+        self.widths = sorted(
+            {1 << i for i in range(max_batch.bit_length())
+             if (1 << i) < max_batch} | {max_batch}
+        )
         self._buckets: dict = {}         # key -> _Bucket
         self._next_id = 0
         self.stats = ServiceStats()
@@ -188,30 +209,36 @@ class SpGEMMService:
         return len(self._buckets)
 
     def bucket_summaries(self) -> list:
-        """(envelope, algorithm, compiles, executions, served) per bucket."""
+        """(envelope, algorithm, compiles, executions, served, widths_used)
+        per bucket."""
         return [
-            (b.envelope, b.plan.algorithm, b.compiles, b.executions, b.served)
+            (b.envelope, b.plan.algorithm, b.compiles, b.executions, b.served,
+             frozenset(b.widths_used))
             for b in self._buckets.values()
         ]
 
     # -- execution path -----------------------------------------------------
 
     def _execute_bucket(self, bucket: _Bucket) -> list:
-        """Drain one bucket in fixed-width microbatches; returns responses."""
-        counter = f"{bucket.plan.algorithm}_batched"
+        """Drain one bucket in ladder-width microbatches; returns responses."""
+        suffix = "pallas_batched" if self.backend == "pallas" else "batched"
+        counter = f"{bucket.plan.algorithm}_{suffix}"
         responses = []
         while bucket.queue:
             batch = bucket.queue[: self.max_batch]
             del bucket.queue[: len(batch)]
-            # pad to the fixed microbatch width (repeating the first request)
-            # so the executable never retraces on batch size; padded slots'
-            # outputs are discarded
-            padded = batch + [batch[0]] * (self.max_batch - len(batch))
+            # pad to the smallest ladder width that fits (repeating the first
+            # request; padded slots' outputs are discarded): a 1-request flush
+            # tail executes 1 multiply, not max_batch, while the bounded
+            # ladder keeps the retrace count at O(log max_batch) per bucket
+            width = next(w for w in self.widths if w >= len(batch))
+            padded = batch + [batch[0]] * (width - len(batch))
+            bucket.widths_used.add(width)
             traces0 = TRACE_COUNTS[counter]
             t0 = time.perf_counter()
             Cs, stats = chunked_spgemm_batched(
                 [r.A for r in padded], [r.B for r in padded],
-                bucket.plan, envelope=bucket.envelope,
+                bucket.plan, envelope=bucket.envelope, backend=self.backend,
             )
             jax.block_until_ready([(C.indptr, C.indices, C.data) for C in Cs])
             t1 = time.perf_counter()
@@ -220,11 +247,13 @@ class SpGEMMService:
             bucket.executions += 1
             self.stats.compiles += new_traces
             self.stats.exec_s += t1 - t0
+            self.stats.padded_requests += width - len(batch)
             for req, C in zip(batch, Cs[: len(batch)]):
                 responses.append(SpGEMMResponse(
                     req_id=req.req_id, C=C,
                     latency_s=t1 - req.submit_s, exec_s=t1 - t0,
-                    bucket_key=bucket.key, batch_size=len(batch), stats=stats,
+                    bucket_key=bucket.key, batch_size=len(batch),
+                    padded_batch=width, stats=stats,
                 ))
             bucket.served += len(batch)
             self.stats.served += len(batch)

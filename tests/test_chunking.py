@@ -162,3 +162,66 @@ def test_plan_knl_models_padded_staged_footprint():
     )
     staged = max(c.nbytes() for c in b_chunks(B, plan.p_b))
     assert unpadded < staged
+
+
+def _skewed_csr(rng, n_rows, n_cols, density, dense_rows=1):
+    d = (rng.random((n_rows, n_cols)) < density) * rng.standard_normal(
+        (n_rows, n_cols))
+    d[:dense_rows] = rng.standard_normal((dense_rows, n_cols))
+    from repro.sparse.csr import csr_from_dense
+    return csr_from_dense(d.astype(np.float32))
+
+
+def test_plan_chunks_models_padded_staged_footprint():
+    """Regression for the Alg-4 planner's fast-memory model: all three
+    branches must report the *staged* peak footprint the executors allocate
+    (resident operands + padded streamed envelopes). The pre-fix model used
+    the densest single row for the streamed term (and, in the 2-D branch,
+    reported the limit itself), so skewed rows made plans "fit" while their
+    padded strips/chunks did not."""
+    from repro.core.chunking import a_strips, b_chunks
+
+    rng = np.random.default_rng(4)
+    n = 192
+    A = _skewed_csr(rng, n, n, 0.05)
+    B = _skewed_csr(rng, n, n, 0.15)
+    crb = np.full(n, 12.0)
+    a_rows, b_rows = row_bytes_csr(A), row_bytes_csr(B)
+    size_a, size_b, size_c = (float(a_rows.sum()), float(b_rows.sum()),
+                              float(crb.sum()))
+    ac_rows = a_rows + crb
+
+    def staged_ab(plan):
+        sa = max(s.nbytes() for s in a_strips(A, plan.p_ac))
+        sb = max(c.nbytes() for c in b_chunks(B, plan.p_b))
+        return sa, sb
+
+    # branch 1: B resident, stream A/C strips (chunk2, n_b == 1): a limit
+    # above size_b / 0.75 (B fits the big portion) but below the whole problem
+    fast = (size_b / 0.75 + (size_a + size_b + size_c)) / 2
+    plan = plan_chunks(A, B, crb, P100, fast_limit_bytes=fast)
+    assert plan.algorithm == "chunk2" and plan.n_b == 1
+    sa, sb = staged_ab(plan)
+    assert plan.fast_bytes_needed >= size_b + sa
+    # pre-fix model: resident B + densest single A/C row — undercounts the
+    # padded strip the executors actually stage, so it fails the bound above
+    assert size_b + float(ac_rows.max()) < size_b + sa
+
+    # branch 2: A,C resident, stream B chunks (chunk1)
+    fast = (size_a + size_c) / 0.7
+    assert size_b > 0.75 * fast       # B must not fit the big portion
+    plan = plan_chunks(A, B, crb, P100, fast_limit_bytes=fast)
+    assert plan.algorithm == "chunk1" and plan.n_ac == 1
+    sa, sb = staged_ab(plan)
+    assert plan.fast_bytes_needed >= size_a + size_c + sb
+    assert size_a + size_c + float(b_rows.max()) < size_a + size_c + sb
+
+    # branch 3: 2-D chunking — the pre-fix model reported the limit `fast`
+    # itself; the footprint must instead be the staged strip + chunk peak
+    fast = (size_a + size_b + size_c) / 6
+    plan = plan_chunks(A, B, crb, P100, fast_limit_bytes=fast)
+    assert plan.algorithm in ("chunk1", "chunk2")
+    assert plan.n_ac >= 2 and plan.n_b >= 2
+    sa, sb = staged_ab(plan)
+    assert plan.fast_bytes_needed >= sa + sb
+    assert plan.fast_bytes_needed != fast

@@ -1,9 +1,11 @@
 """SpGEMMService: bucketed batched serving over chunked_spgemm_batched.
 
 Contracts: correct results for mixed-structure workloads, at most one compile
-per geometry bucket (TRACE_COUNTS on the batched scan cores), zero retraces
-for repeat traffic, and a retrace budget that folds new geometries into
-existing buckets instead of compiling more programs.
+per (geometry bucket, microbatch ladder width) pair (TRACE_COUNTS on the
+batched cores), zero retraces for repeat traffic at already-seen widths, a
+retrace budget that folds new geometries into existing buckets instead of
+compiling more programs, and flush tails that execute at the smallest ladder
+width that fits instead of paying for max_batch multiplies.
 """
 
 import numpy as np
@@ -29,6 +31,7 @@ def test_service_mixed_structures_correct_and_one_compile_per_bucket():
     dim = 24
     plan = ChunkPlan("knl", (0, dim), (0, dim // 2, dim), 0.0, 0.0)
     svc = SpGEMMService(plan, quantum=32, max_batch=3, retrace_budget=8)
+    assert svc.widths == [1, 2, 3]
     reqs = _mixed_workload(rng, 7, dim, [0.08, 0.25])
     before = TRACE_COUNTS["knl_batched"]
     ids = [svc.submit(A, B) for A, B in reqs]
@@ -38,17 +41,22 @@ def test_service_mixed_structures_correct_and_one_compile_per_bucket():
         assert_close(csr_to_dense(resp.C), spgemm_dense_oracle(A, B), atol=1e-3)
         assert resp.latency_s >= resp.exec_s > 0.0
         assert resp.stats.copy_in_bytes > 0
-    # <= 1 compile per geometry bucket, and the service's own accounting agrees
+        # tails pad to the smallest ladder width that fits, never more
+        assert resp.padded_batch == min(
+            w for w in svc.widths if w >= resp.batch_size)
+    # <= 1 compile per (bucket, ladder width), and the accounting agrees
     new = TRACE_COUNTS["knl_batched"] - before
-    assert new == svc.stats.compiles <= svc.n_buckets
-    for _env, _alg, compiles, _execs, _served in svc.bucket_summaries():
-        assert compiles <= 1
-    # repeat traffic with the same structures: zero retraces
+    widths_total = sum(len(w) for *_rest, w in svc.bucket_summaries())
+    assert new == svc.stats.compiles <= widths_total
+    for *_rest, compiles, _execs, _served, widths in svc.bucket_summaries():
+        assert compiles <= len(widths)
+    # repeat traffic hitting the same structures *and* the same microbatch
+    # widths: zero retraces
     mid = TRACE_COUNTS["knl_batched"]
-    for A, B in _mixed_workload(rng, 4, dim, [0.08, 0.25]):
+    for A, B in _mixed_workload(rng, 7, dim, [0.08, 0.25]):
         svc.submit(A, B)
     out2 = svc.flush()
-    assert len(out2) == 4
+    assert len(out2) == 7
     assert TRACE_COUNTS["knl_batched"] == mid
     assert svc.pending == 0
 
@@ -68,6 +76,70 @@ def test_service_retrace_budget_folds_geometries():
     out = svc.flush()
     for (A, B), resp in zip(reqs, out):
         assert_close(csr_to_dense(resp.C), spgemm_dense_oracle(A, B), atol=1e-3)
+
+
+def test_service_flush_tail_uses_ladder_width():
+    """A short flush tail executes at the smallest ladder width that fits —
+    a 1-request flush runs 1 multiply, not max_batch — and the padded width
+    is visible in the response."""
+    rng = np.random.default_rng(1)
+    dim = 16
+    plan = ChunkPlan("knl", (0, dim), (0, dim // 2, dim), 0.0, 0.0)
+    svc = SpGEMMService(plan, quantum=32, max_batch=4, retrace_budget=4)
+    assert svc.widths == [1, 2, 4]
+    A, B = random_csr(rng, dim, dim, 0.2), random_csr(rng, dim, dim, 0.2)
+    svc.submit(A, B)
+    (resp,) = svc.flush()
+    assert resp.batch_size == 1 and resp.padded_batch == 1
+    assert svc.stats.padded_requests == 0
+    # 5 identical requests: one full microbatch + a width-1 tail, no padding
+    for _ in range(5):
+        svc.submit(A, B)
+    out = svc.flush()
+    assert sorted(r.padded_batch for r in out) == [1, 4, 4, 4, 4]
+    assert svc.stats.padded_requests == 0
+    # 3 requests land on ladder width 4 with exactly one padded slot
+    for _ in range(3):
+        svc.submit(A, B)
+    out = svc.flush()
+    assert all(r.padded_batch == 4 and r.batch_size == 3 for r in out)
+    assert svc.stats.padded_requests == 1
+    # trace bound: compiles <= (bucket, width) pairs seen
+    for *_rest, compiles, _execs, _served, widths in svc.bucket_summaries():
+        assert compiles <= len(widths)
+
+
+@pytest.mark.parametrize("algorithm", ["knl", "chunk1", "chunk2"])
+def test_service_pallas_backend(algorithm):
+    """backend="pallas": every bucket executable picks up the double-buffered
+    prefetching kernel unchanged — oracle-correct results, compile accounting
+    on the pallas batched trace keys, scan cores untouched."""
+    rng = np.random.default_rng(9)
+    dim = 20
+    p_ac = (0, dim) if algorithm == "knl" else (0, dim // 2, dim)
+    plan = ChunkPlan(algorithm, p_ac, (0, dim // 2, dim), 0.0, 0.0)
+    svc = SpGEMMService(plan, quantum=32, max_batch=2, retrace_budget=8,
+                        backend="pallas")
+    counter = f"{algorithm}_pallas_batched"
+    scan_counter = f"{algorithm}_batched"
+    before, scan_before = TRACE_COUNTS[counter], TRACE_COUNTS[scan_counter]
+    reqs = _mixed_workload(rng, 5, dim, [0.1, 0.3])
+    for A, B in reqs:
+        svc.submit(A, B)
+    out = svc.flush()
+    assert len(out) == 5
+    for (A, B), resp in zip(reqs, out):
+        assert_close(csr_to_dense(resp.C), spgemm_dense_oracle(A, B), atol=1e-3)
+    assert TRACE_COUNTS[counter] - before == svc.stats.compiles > 0
+    assert TRACE_COUNTS[scan_counter] == scan_before
+    for *_rest, compiles, _execs, _served, widths in svc.bucket_summaries():
+        assert compiles <= len(widths)
+
+
+def test_service_rejects_unknown_backend():
+    plan = ChunkPlan("knl", (0, 8), (0, 8), 0.0, 0.0)
+    with pytest.raises(ValueError, match="backend"):
+        SpGEMMService(plan, backend="nope")
 
 
 def test_service_requires_plan_or_limit_and_plans_itself():
@@ -98,23 +170,26 @@ def test_service_large_mixed_sweep(algorithm):
     svc = SpGEMMService(plan, quantum=64, max_batch=4, retrace_budget=6)
     counter = f"{algorithm}_batched"
     densities = [0.02, 0.08, 0.15, 0.25]
+    n_widths = len(svc.widths)
     for wave in range(3):
         reqs = _mixed_workload(rng, 10, dim, densities)
         traces0 = TRACE_COUNTS[counter]
-        created0 = svc.stats.buckets_created
         merges0 = svc.stats.budget_merges
+        pairs0 = sum(len(w) for *_r, w in svc.bucket_summaries())
         for A, B in reqs:
             svc.submit(A, B)
         out = svc.flush()
         for (A, B), resp in zip(reqs, out):
             assert_close(csr_to_dense(resp.C), spgemm_dense_oracle(A, B),
                          atol=1e-3)
-        # compiles this wave are bounded by the geometries that are genuinely
-        # new to it: freshly created buckets plus envelope-growing merges
+        # compiles this wave are bounded by the genuinely new (geometry,
+        # ladder width) pairs plus envelope-growing merges (which retrace
+        # already-seen widths once under the grown envelope)
         new_traces = TRACE_COUNTS[counter] - traces0
-        assert new_traces <= (svc.stats.buckets_created - created0
-                              + svc.stats.budget_merges - merges0)
-    # lifetime: every bucket compiled at most once per envelope it has had
-    assert svc.stats.compiles <= (svc.stats.buckets_created
-                                  + svc.stats.budget_merges)
+        pairs1 = sum(len(w) for *_r, w in svc.bucket_summaries())
+        assert new_traces <= max(pairs1 - pairs0, 0) + n_widths * (
+            svc.stats.budget_merges - merges0)
+    # lifetime: every bucket compiled at most once per (envelope epoch, width)
+    assert svc.stats.compiles <= n_widths * (svc.stats.buckets_created
+                                             + svc.stats.budget_merges)
     assert svc.stats.served == 30
