@@ -9,11 +9,14 @@ size) with the Alg-4 planner choosing the streaming order; derived speedup vs
 host-pinned — the paper reports 3.1x-14.7x.
 
 Executor lanes: ``run_loop_vs_scan`` (host loop vs device-resident lax.scan,
-CSV rows) and ``run_scan_vs_pallas`` (scan vs the explicitly double-buffered
-Pallas backend). The latter also powers ``python benchmarks/chunking_bench.py
-[--smoke]``, which prints one JSON document (the ``BENCH_chunking.json``
-schema: ``{"bench": ..., "rows": [...]}``) that CI smoke-parses like the
-serving bench.
+CSV rows), ``run_scan_vs_pallas`` (scan vs the explicitly double-buffered
+Pallas backend), and ``run_dense_vs_sparse_accum`` (the dense-slab Pallas
+accumulator vs the CSR-native sparse-output backend across an output-density
+sweep, with both planner fast-memory models). The JSON lanes power
+``python benchmarks/chunking_bench.py [--smoke] [--lane ...]``, which prints
+one JSON document (the ``BENCH_chunking.json`` schema:
+``{"bench": ..., "rows": [...]}``) that CI smoke-parses like the serving
+bench.
 """
 
 from __future__ import annotations
@@ -193,12 +196,116 @@ def run_csv_scan_vs_pallas():
              row["pallas_us"], f"{row['pallas_vs_scan']}x_vs_scan")
 
 
+def run_dense_vs_sparse_accum(smoke: bool = False) -> dict:
+    """Dense-slab Pallas accumulator vs the CSR-native sparse-output backend
+    across an output-density sweep, as a machine-checkable JSON report.
+
+    Fixed (A, plan, n_cols); B's density sweeps so nnz(C) / (m * n) sweeps.
+    Each row carries both measured runtimes *and* both planner fast-memory
+    models (``planned_stats_sparse`` vs ``planned_stats_dense_slab``): on CPU
+    interpret mode the runtimes only validate plumbing, but the byte models
+    are backend truth on any hardware — the report's ``crossover`` records
+    where each comparison flips in favor of the sparse accumulator, the
+    number ROADMAP tracks for strip sizing on real VMEM.
+    """
+    from repro.core.chunking import instance_envelope
+    from repro.core.planner import (
+        ChunkPlan, planned_stats_dense_slab, planned_stats_sparse,
+    )
+    from repro.core.symbolic import strip_output_caps
+    from repro.sparse.csr import csr_from_dense
+
+    rng = np.random.default_rng(17)
+    m, k, n = (40, 36, 96) if smoke else (96, 80, 256)
+    b_densities = (0.003, 0.01, 0.05, 0.25) if smoke else (
+        0.002, 0.005, 0.01, 0.03, 0.08, 0.25)
+    a = ((rng.random((m, k)) < 0.08) * rng.standard_normal((m, k)))
+    A = csr_from_dense(a.astype(np.float32))
+    p_ac = tuple(int(v) for v in np.linspace(0, m, 3))
+    p_b = tuple(int(v) for v in np.linspace(0, k, 4))
+    plan = ChunkPlan("chunk1", p_ac, p_b, 0.0, 0.0)
+
+    repeats = 2 if smoke else 3
+    rows = []
+    for db in b_densities:
+        b = ((rng.random((k, n)) < db) * rng.standard_normal((k, n)))
+        B = csr_from_dense(b.astype(np.float32))
+        # one symbolic expansion per row: caps feed c_pad, the envelope, and
+        # the exact output density (strips partition all rows, so their nnz
+        # sums to nnz(C))
+        caps = strip_output_caps(A, B, plan.p_ac)
+        c_pad = caps.c_pad
+        c_nnz = sum(caps.strip_nnz)
+        env = instance_envelope(A, B, plan, caps=caps)
+        sparse_model = planned_stats_sparse(plan, env)
+        dense_model = planned_stats_dense_slab(plan, env)
+        us_pallas = timeit(lambda: chunked_spgemm(A, B, plan, c_pad,
+                                                  backend="pallas"),
+                           repeats=repeats)
+        us_sparse = timeit(lambda: chunked_spgemm(A, B, plan, c_pad,
+                                                  backend="sparse"),
+                           repeats=repeats)
+        rows.append({
+            "case": f"synthetic/{m}x{k}x{n}/db={db}",
+            "c_density": round(c_nnz / float(m * n), 5),
+            "pallas_us": round(us_pallas, 1),
+            "sparse_us": round(us_sparse, 1),
+            "sparse_vs_pallas": round(us_pallas / us_sparse, 3)
+            if us_sparse else float("inf"),
+            "sparse_fast_bytes": sparse_model.fast_bytes_needed,
+            "dense_fast_bytes": dense_model.fast_bytes_needed,
+            "fast_bytes_ratio": round(
+                sparse_model.fast_bytes_needed
+                / dense_model.fast_bytes_needed, 3),
+        })
+    from repro.kernels.sparse_accum_spgemm import default_interpret
+
+    def crossover(sparse_wins):
+        """Largest swept C density at which the sparse backend still wins."""
+        winning = [r["c_density"] for r in rows if sparse_wins(r)]
+        return max(winning) if winning else None
+
+    return {
+        "bench": "chunking_dense_vs_sparse_accum",
+        "problem": f"synthetic/{m}x{k}x{n}",
+        "interpret_mode": default_interpret(),
+        "crossover": {
+            # sparse fast-memory model below the dense slab's
+            "fast_bytes_c_density": crossover(
+                lambda r: r["fast_bytes_ratio"] < 1.0),
+            # sparse measurably faster (CPU interpret: plumbing only)
+            "runtime_c_density": crossover(
+                lambda r: r["sparse_vs_pallas"] > 1.0),
+        },
+        "rows": rows,
+    }
+
+
+def run_csv_dense_vs_sparse_accum():
+    """The dense-vs-sparse-accum lane as driver CSV rows."""
+    report = run_dense_vs_sparse_accum()
+    for row in report["rows"]:
+        emit(f"dense_vs_sparse_accum/{row['case']}"
+             f"[c_density={row['c_density']}]",
+             row["sparse_us"],
+             f"{row['fast_bytes_ratio']}x_fast_bytes_vs_dense")
+
+
+JSON_LANES = {
+    "scan_vs_pallas": run_scan_vs_pallas,
+    "dense_vs_sparse_accum": run_dense_vs_sparse_accum,
+}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes for CI (seconds, still valid JSON)")
+    ap.add_argument("--lane", choices=sorted(JSON_LANES),
+                    default="scan_vs_pallas",
+                    help="which JSON lane to print")
     args = ap.parse_args()
-    print(json.dumps(run_scan_vs_pallas(smoke=args.smoke), indent=2))
+    print(json.dumps(JSON_LANES[args.lane](smoke=args.smoke), indent=2))
 
 
 if __name__ == "__main__":

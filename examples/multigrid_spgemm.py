@@ -5,7 +5,15 @@ placements x chunked variants — and prints the same comparisons the paper plot
 (Figs 3/4/6/7, Table 3, Figs 12/13), using the calibrated memory model for the
 machine-dependent numbers and real execution for all algorithmic results.
 
+The chunked section runs through the ``chunked_spgemm`` backend dispatch:
+every backend in ``--backends`` (comma-separated; ``all`` = loop, scan,
+pallas, sparse) executes the same plan and is checked against the dense
+oracle, so the example doubles as an end-to-end demo of the executor stack —
+host loop oracle, device-resident lax.scan, double-buffered Pallas, and the
+CSR-native sparse-output accumulator.
+
   PYTHONPATH=src python examples/multigrid_spgemm.py [--problem brick3d]
+      [--size 6] [--backends scan,sparse]
 """
 
 import argparse
@@ -23,8 +31,10 @@ from repro.core.planner import plan_chunks, row_bytes_csr
 from repro.sparse import multigrid
 from repro.sparse.csr import csr_to_dense
 
+ALL_BACKENDS = ("loop", "scan", "pallas", "sparse")
 
-def study(problem: str, n: int):
+
+def study(problem: str, n: int, backends=("scan",)):
     A, R, P = multigrid.problem(problem, n)
     print(f"\n=== {problem} (n={n}) — A {A.shape} nnz={int(A.nnz())} ===")
     for tag, (L, Rt) in {"AxP": (A, P), "RxA": (R, A)}.items():
@@ -45,29 +55,39 @@ def study(problem: str, n: int):
                 print(f"   {sys_name}/{mode:17s} {c.gflops(ws.flops):9.3f}")
         rec = dp_recommendation(P100, L.nbytes(), Rt.nbytes(), ws.c_nnz * 12.0)
         print(f"   DP recommendation: B -> {rec.B}")
-        # chunked under half/quarter fast budgets
+        # chunked under half/quarter fast budgets, through every backend
         crb = np.full(L.n_rows, max(ws.c_nnz / L.n_rows, 1) * 12.0)
         total = float(row_bytes_csr(L).sum() + row_bytes_csr(Rt).sum()
                       + crb.sum())
+        ref = np.asarray(spgemm_dense_oracle(L, Rt))
         for frac in (0.5, 0.25):
             plan = plan_chunks(L, Rt, crb, P100, fast_limit_bytes=total * frac)
-            C2, stats = chunked_spgemm(L, Rt, plan)
-            ok2 = np.allclose(np.asarray(csr_to_dense(C2)),
-                              np.asarray(spgemm_dense_oracle(L, Rt)), atol=1e-4)
-            print(f"   chunked@{frac:.2f}: {plan.algorithm} "
-                  f"[{plan.n_ac}x{plan.n_b}] correct={ok2} "
-                  f"staged={stats.copy_bytes/1e3:.0f}KB")
+            for backend in backends:
+                C2, stats = chunked_spgemm(L, Rt, plan, backend=backend)
+                ok2 = np.allclose(np.asarray(csr_to_dense(C2)), ref, atol=1e-4)
+                print(f"   chunked@{frac:.2f}/{backend:6s}: {plan.algorithm} "
+                      f"[{plan.n_ac}x{plan.n_b}] correct={ok2} "
+                      f"staged={stats.copy_bytes/1e3:.0f}KB")
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--problem", choices=list(multigrid.PROBLEMS) + ["all"],
                     default="all")
-    args = ap.parse_args()
+    ap.add_argument("--size", type=int, default=None,
+                    help="override the per-problem default size")
+    ap.add_argument("--backends", default="scan",
+                    help="comma-separated chunked_spgemm backends, or 'all'")
+    args = ap.parse_args(argv)
+    backends = (ALL_BACKENDS if args.backends == "all"
+                else tuple(args.backends.split(",")))
+    unknown = set(backends) - set(ALL_BACKENDS)
+    if unknown:
+        ap.error(f"unknown backends {sorted(unknown)}; have {ALL_BACKENDS}")
     sizes = {"laplace3d": 12, "bigstar2d": 40, "brick3d": 10, "elasticity": 6}
     probs = multigrid.PROBLEMS if args.problem == "all" else [args.problem]
     for p in probs:
-        study(p, sizes[p])
+        study(p, args.size or sizes[p], backends=backends)
 
 
 if __name__ == "__main__":

@@ -21,7 +21,14 @@ nothing forces the overlap. The third backend closes that gap: the
 ``repro.kernels.ranged_spgemm``, whose pallas_call hand-DMAs the streamed
 operand through a two-slot VMEM buffer (copy chunk j+1 while chunk j
 multiplies — the paper's `copy2Fast` overlap made explicit rather than hoped
-for).
+for). The fourth backend lifts that kernel's dense-C memory bound: the
+``chunk_*_sparse`` executors stream the same two-slot DMA schedule through
+``repro.kernels.sparse_accum_spgemm``, whose per-strip accumulator is a
+fixed-capacity **CSR triple in VMEM** sized by the symbolic phase
+(``repro.core.symbolic``) instead of a dense ``[strip_rows, n]`` slab — the
+first backend whose fast-memory footprint scales with ``nnz(C)`` rather than
+``strip_rows * n_cols`` (``repro.core.planner.planned_stats_sparse`` is the
+matching planner-side model).
 
 Because a traced scan (or Pallas grid) cannot mutate Python-side counters,
 ChunkStats for these backends is *computed from the plan*: the uniform padding
@@ -58,6 +65,7 @@ from repro.core.chunking import (
 from repro.core.kkmem import spgemm_ranged_impl
 from repro.core.planner import ChunkPlan
 from repro.kernels.ranged_spgemm import ranged_spgemm_stream
+from repro.kernels.sparse_accum_spgemm import sparse_accum_spgemm_stream
 from repro.sparse.csr import (
     CSR, GeometryEnvelope, csr_from_dense, csr_pad_to, csr_stack, csr_to_dense,
     csr_unstack,
@@ -450,6 +458,100 @@ def chunk_gpu2_pallas(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int):
 
 
 # ---------------------------------------------------------------------------
+# Sparse-output backend: CSR-native accumulator (kernels/sparse_accum_spgemm)
+# ---------------------------------------------------------------------------
+
+
+def _sparse_c0_stack(batch: int, n_ac: int, strip_rows: int, n_cols: int,
+                     c_cap: int, dtype) -> CSR:
+    """Empty stacked C_prev strips ([batch, n_ac] leading axes) at the CSR
+    scratch capacity ``c_cap`` (the symbolic phase's strip output bound)."""
+    return CSR(
+        indptr=jnp.zeros((batch, n_ac, strip_rows + 1), jnp.int32),
+        indices=jnp.zeros((batch, n_ac, c_cap), jnp.int32),
+        data=jnp.zeros((batch, n_ac, c_cap), dtype),
+        shape=(strip_rows, n_cols),
+        max_row_nnz=c_cap,
+    )
+
+
+def _make_sparse_core(key: str, order: str):
+    """One jitted launch core for the sparse-output kernel; the six variants
+    differ only in the streaming order and the trace-counter key (all staging
+    is host-side, so batched cores share the same body — the batch rides the
+    kernel's leading grid dimension)."""
+
+    @jax.jit
+    def core(Ast: CSR, Bst: CSR, C0st: CSR, r0s, r1s):
+        TRACE_COUNTS[key] += 1
+        return sparse_accum_spgemm_stream(Ast, Bst, C0st, r0s, r1s,
+                                          order=order)
+
+    return core
+
+
+_knl_sparse = _make_sparse_core("knl_sparse", "chunk1")
+_chunk1_sparse = _make_sparse_core("chunk1_sparse", "chunk1")
+_chunk2_sparse = _make_sparse_core("chunk2_sparse", "chunk2")
+_knl_sparse_batched = _make_sparse_core("knl_sparse_batched", "chunk1")
+_chunk1_sparse_batched = _make_sparse_core("chunk1_sparse_batched", "chunk1")
+_chunk2_sparse_batched = _make_sparse_core("chunk2_sparse_batched", "chunk2")
+
+_SPARSE_CORES = {"knl": _knl_sparse, "chunk1": _chunk1_sparse,
+                 "chunk2": _chunk2_sparse}
+_SPARSE_CORES_BATCHED = {"knl": _knl_sparse_batched,
+                         "chunk1": _chunk1_sparse_batched,
+                         "chunk2": _chunk2_sparse_batched}
+
+
+def _sparse_strip_csrs(ip, ix, d, strip_rows: int, n_cols: int,
+                       c_cap: int) -> list:
+    """Wrap one batch element's kernel outputs ([n_ac, ...]) as strip CSRs."""
+    return [
+        CSR(ip[i], ix[i], d[i], (strip_rows, n_cols), c_cap)
+        for i in range(ip.shape[0])
+    ]
+
+
+def _sparse_run(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int, core):
+    """Shared body of the three unbatched sparse executors: stage CSR strips
+    and chunks (knl is the 1-strip special case of the chunk1 order), launch,
+    and assemble the accumulated strip CSRs.
+
+    The per-copy event model is structurally the Pallas pipeline's
+    (:func:`planned_stats_pallas`: stationary operand staged once per outer
+    step, streamed triple DMA'd per grid step, C persists in VMEM with one
+    final writeback) — only the staged byte sizes differ: padded **CSR**
+    footprints instead of dense slabs.
+    """
+    strips = a_strips(A, plan.p_ac)
+    chunks = b_chunks(B, plan.p_b)
+    Ast = csr_stack([csr_stack(strips)])
+    Bst = csr_stack([csr_stack(chunks)])
+    r0s, r1s = plan.b_ranges()
+    strip_rows = strips[0].n_rows
+    C0 = _sparse_c0_stack(1, plan.n_ac, strip_rows, B.n_cols, c_pad, A.dtype)
+    ip, ix, d = core(Ast, Bst, C0, jnp.asarray(r0s), jnp.asarray(r1s))
+    stats = planned_stats_pallas(
+        plan, chunks[0].nbytes(), strips[0].nbytes(),
+        _c_strip_nbytes(strip_rows, c_pad, A.dtype))
+    out = _sparse_strip_csrs(ip[0], ix[0], d[0], strip_rows, B.n_cols, c_pad)
+    return _assemble(out, plan.p_ac, B.n_cols), stats
+
+
+def chunk_knl_sparse(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int):
+    return _sparse_run(A, B, plan, c_pad, _knl_sparse)
+
+
+def chunk_gpu1_sparse(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int):
+    return _sparse_run(A, B, plan, c_pad, _chunk1_sparse)
+
+
+def chunk_gpu2_sparse(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int):
+    return _sparse_run(A, B, plan, c_pad, _chunk2_sparse)
+
+
+# ---------------------------------------------------------------------------
 # batched entry point: many problem instances, one plan, one compilation
 # ---------------------------------------------------------------------------
 
@@ -472,7 +574,11 @@ def chunked_spgemm_batched(As, Bs, plan: ChunkPlan, c_pad: int | None = None,
     ``ranged_spgemm_stream`` launch whose leading grid dimension is the batch
     (explicit double-buffered chunk prefetch; allclose rather than bitwise
     against the loop oracle, with staging and accumulation in float32
-    regardless of the instances' dtype).
+    regardless of the instances' dtype); ``backend="sparse"`` runs one
+    ``sparse_accum_spgemm_stream`` launch — the same batch-on-the-grid DMA
+    schedule, but accumulating into fixed-capacity CSR scratch sized by the
+    envelope's ``c_pad`` (its fast-memory footprint scales with ``nnz(C)``,
+    not ``strip_rows * n_cols``).
 
     Returns ``(list_of_C, stats)`` where ``stats`` is the per-instance modeled
     copy accounting at the *envelope-padded* staged sizes (identical across the
@@ -483,7 +589,7 @@ def chunked_spgemm_batched(As, Bs, plan: ChunkPlan, c_pad: int | None = None,
         raise ValueError("need equal, nonzero numbers of A and B instances")
     if plan.algorithm not in ("knl", "chunk1", "chunk2"):
         raise ValueError(f"unsupported algorithm {plan.algorithm!r}")
-    if backend not in ("scan", "pallas"):
+    if backend not in ("scan", "pallas", "sparse"):
         raise ValueError(f"unknown backend {backend!r}")
     for A, B in zip(As, Bs):
         if A.shape != As[0].shape or B.shape != Bs[0].shape:
@@ -510,6 +616,27 @@ def chunked_spgemm_batched(As, Bs, plan: ChunkPlan, c_pad: int | None = None,
     chunk_lists = [b_chunks(B, plan.p_b, envelope=envelope) for B in Bs]
     Bst = csr_stack([csr_stack(cl) for cl in chunk_lists])   # [batch, n_b, ...]
     chunk_nbytes = chunk_lists[0][0].nbytes()
+
+    if backend == "sparse":
+        # uniform across all three algorithms: knl is the 1-strip special
+        # case (p_ac == (0, n_rows)), so every instance stages as strips
+        strip_lists = [a_strips(A, plan.p_ac, envelope=envelope) for A in As]
+        Ast = csr_stack([csr_stack(sl) for sl in strip_lists])
+        strip_rows = envelope.strip_rows
+        C0 = _sparse_c0_stack(len(As), plan.n_ac, strip_rows, n_cols, c_pad,
+                              dtype)
+        ip, ix, d = _SPARSE_CORES_BATCHED[plan.algorithm](
+            Ast, Bst, C0, r0s, r1s)
+        stats = planned_stats_pallas(
+            plan, chunk_nbytes, strip_lists[0][0].nbytes(),
+            _c_strip_nbytes(strip_rows, c_pad, dtype))
+        return [
+            _assemble(
+                _sparse_strip_csrs(ip[b], ix[b], d[b], strip_rows, n_cols,
+                                   c_pad),
+                plan.p_ac, n_cols)
+            for b in range(len(As))
+        ], stats
 
     if plan.algorithm == "knl":
         Ast = csr_stack([

@@ -25,8 +25,9 @@ import dataclasses
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.kkmem import spgemm, spgemm_ranged, spgemm_symbolic_host
+from repro.core.kkmem import spgemm, spgemm_ranged
 from repro.core.planner import ChunkPlan
+from repro.core.symbolic import strip_output_caps
 from repro.sparse.csr import (
     CSR, GeometryEnvelope, csr_pad_to, csr_select_rows_host,
 )
@@ -105,10 +106,23 @@ def a_strips(A: CSR, p_ac: tuple, envelope: GeometryEnvelope | None = None):
 
 
 def instance_envelope(A: CSR, B: CSR, plan: ChunkPlan,
-                      c_pad: int | None = None) -> GeometryEnvelope:
-    """The padded geometry one (A, B) instance needs under ``plan``."""
+                      c_pad: int | None = None,
+                      caps=None) -> GeometryEnvelope:
+    """The padded geometry one (A, B) instance needs under ``plan``.
+
+    The symbolic phase (repro.core.symbolic) runs once here: its output caps
+    (whole-C capacity, densest C row, largest-strip capacity) are folded into
+    the envelope so sparse-output executables are compile-keyed on the output
+    structure too. ``c_pad`` only overrides the *capacity* field; the
+    structural bounds stay exact. This is deliberate even when ``c_pad`` is
+    given (which used to skip the symbolic phase entirely): an envelope is a
+    compile key, and two instances must get equal envelopes regardless of
+    which caller built them — callers that already ran the symbolic phase
+    pass its ``StripOutputCaps`` as ``caps`` to avoid the repeat expansion."""
+    if caps is None:
+        caps = strip_output_caps(A, B, plan.p_ac)
     if c_pad is None:
-        c_pad = default_c_pad(A, B, plan)
+        c_pad = caps.c_pad
     chunk_cap, chunk_rows = _partition_caps(B, plan.p_b)
     strip_cap, strip_rows = _partition_caps(A, plan.p_ac)
     return GeometryEnvelope(
@@ -118,6 +132,7 @@ def instance_envelope(A: CSR, B: CSR, plan: ChunkPlan,
         chunk_rows=chunk_rows, chunk_nnz_cap=chunk_cap,
         strip_rows=strip_rows, strip_nnz_cap=strip_cap,
         c_pad=int(c_pad), dtype=str(A.dtype),
+        c_nnz_cap=caps.c_nnz_cap, c_max_row_nnz=caps.c_max_row_nnz,
     )
 
 
@@ -231,15 +246,9 @@ def chunk_gpu2(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int):
 
 def default_c_pad(A: CSR, B: CSR, plan: ChunkPlan) -> int:
     """Exact symbolic capacity of the largest row strip (whole C for 1-strip
-    plans)."""
-    if plan.n_ac == 1:
-        return spgemm_symbolic_host(A, B).c_pad
-    return max(
-        spgemm_symbolic_host(
-            csr_select_rows_host(A, s, e, pad_to=A.nnz_pad), B
-        ).c_pad
-        for s, e in zip(plan.p_ac[:-1], plan.p_ac[1:])
-    )
+    plans). One global symbolic expansion (repro.core.symbolic), numerically
+    identical to running the symbolic phase per strip."""
+    return strip_output_caps(A, B, plan.p_ac).c_pad
 
 
 def chunked_spgemm(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int | None = None,
@@ -252,8 +261,13 @@ def chunked_spgemm(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int | None = None,
     through the ranged-SpGEMM Pallas kernel with explicit double-buffered
     chunk prefetch (allclose to the oracle, not bitwise: dense accumulation
     reorders the float adds, and the kernel stages and accumulates in
-    float32 regardless of the input dtype); ``"loop"`` is the host-driven
-    Python loop, retained as the bitwise oracle for the scan path.
+    float32 regardless of the input dtype); ``"sparse"`` runs it through the
+    CSR-native sparse-output Pallas kernel (same two-slot DMA streaming, but
+    the per-strip accumulator is a fixed-capacity CSR scratch sized by the
+    symbolic phase — fast-memory footprint scales with ``nnz(C)``, and
+    ``c_pad`` must bound every strip's exact output nnz, which the default
+    symbolic ``c_pad`` does); ``"loop"`` is the host-driven Python loop,
+    retained as the bitwise oracle for the scan path.
     """
     if c_pad is None:
         c_pad = default_c_pad(A, B, plan)
@@ -276,6 +290,12 @@ def chunked_spgemm(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int | None = None,
         )
         table = {"knl": chunk_knl_pallas, "chunk1": chunk_gpu1_pallas,
                  "chunk2": chunk_gpu2_pallas}
+    elif backend == "sparse":
+        from repro.core.chunk_stream import (
+            chunk_knl_sparse, chunk_gpu1_sparse, chunk_gpu2_sparse,
+        )
+        table = {"knl": chunk_knl_sparse, "chunk1": chunk_gpu1_sparse,
+                 "chunk2": chunk_gpu2_sparse}
     elif backend == "loop":
         table = {"knl": chunk_knl, "chunk1": chunk_gpu1, "chunk2": chunk_gpu2}
     else:

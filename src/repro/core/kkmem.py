@@ -50,33 +50,19 @@ class SpGEMMWorkspace:
 
 
 def spgemm_symbolic_host(A: CSR, B: CSR, pad_multiple: int = 64) -> SpGEMMWorkspace:
-    """Exact structure of C = A x B on host: nnz, densest row, flops."""
-    a_ptr = np.asarray(A.indptr).astype(np.int64)
-    a_idx = np.asarray(A.indices).astype(np.int64)
-    b_ptr = np.asarray(B.indptr).astype(np.int64)
-    b_idx = np.asarray(B.indices).astype(np.int64)
-    nnz_a = int(a_ptr[-1])
-    a_rows = np.repeat(np.arange(A.n_rows, dtype=np.int64), a_ptr[1:] - a_ptr[:-1])
-    a_cols = a_idx[:nnz_a]
-    lens = b_ptr[a_cols + 1] - b_ptr[a_cols]
-    total = int(lens.sum())
-    # expand: product p belongs to A-entry t = searchsorted(cum_lens, p, 'right')
-    cum = np.concatenate([[0], np.cumsum(lens)])
-    p = np.arange(total, dtype=np.int64)
-    t = np.searchsorted(cum, p, side="right") - 1
-    prod_rows = a_rows[t]
-    prod_cols = b_idx[b_ptr[a_cols[t]] + (p - cum[t])]
-    keys = prod_rows * np.int64(B.n_cols) + prod_cols
-    uniq = np.unique(keys)
-    c_nnz = int(uniq.size)
-    urows = uniq // B.n_cols
-    per_row = np.bincount(urows, minlength=A.n_rows)
-    pad = -(-max(c_nnz, 1) // pad_multiple) * pad_multiple
+    """Exact structure of C = A x B on host: nnz, densest row, flops.
+
+    Thin wrapper over the one structural expansion
+    (``repro.core.symbolic.spgemm_structure_host``) so the symbolic phase has
+    a single implementation to fix/extend."""
+    from repro.core.symbolic import spgemm_structure_host
+
+    s = spgemm_structure_host(A, B)
     return SpGEMMWorkspace(
-        c_nnz=c_nnz,
-        c_pad=pad,
-        c_max_row_nnz=int(per_row.max()) if per_row.size else 0,
-        flops=2 * total,
+        c_nnz=s.c_nnz,
+        c_pad=-(-max(s.c_nnz, 1) // pad_multiple) * pad_multiple,
+        c_max_row_nnz=s.c_max_row_nnz,
+        flops=s.flops,
     )
 
 
@@ -126,11 +112,11 @@ def _accumulate(rows, cols, vals, m: int, n: int, c_pad: int):
     order_r = jnp.argsort(rows_c, stable=True)
     rows_s, cols_s, vals_s = rows_c[order_r], cols_c[order_r], vals_c[order_r]
     valid = rows_s < m
-    new_key = jnp.concatenate(
-        [
-            jnp.array([True]),
-            (rows_s[1:] != rows_s[:-1]) | (cols_s[1:] != cols_s[:-1]),
-        ]
+    # scalar-constant pad (not jnp.array([True])) so this body also traces
+    # inside Pallas kernels, which reject captured array constants
+    new_key = jnp.pad(
+        (rows_s[1:] != rows_s[:-1]) | (cols_s[1:] != cols_s[:-1]),
+        (1, 0), constant_values=True,
     ) & valid
     slot = jnp.cumsum(new_key) - 1                       # dense slot per product
     slot = jnp.where(valid, slot, c_pad)                 # invalid -> dropped bucket

@@ -184,6 +184,97 @@ def staged_chunk_bytes(m: CSR, bounds: tuple, value_bytes: int = 8,
                  + max(cap, 1) * (value_bytes + index_bytes))
 
 
+# ---------------------------------------------------------------------------
+# backend fast-memory models: what each executor actually keeps resident
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendFastModel:
+    """Peak resident fast-memory (VMEM) footprint of one streaming backend
+    under a plan + envelope: both double-buffer slots of the streamed
+    operand, the stationary operand's staged block, the persistent C
+    accumulator (all ``n_ac`` strips for the Chunk2 order, whose partials
+    never leave VMEM), and the backend's per-step compute workspace.
+
+    This is deliberately *not* :class:`ChunkPlan.fast_bytes_needed` (the
+    paper-level staged model the planner searches partitions against): it is
+    the backend-specific answer to "does this plan's strip sizing actually
+    fit the fast memory", which for the dense-slab Pallas backend is bounded
+    by ``strip_rows * n_cols`` and for the sparse-output backend by the
+    symbolic phase's ``nnz(C)`` caps — the reason plans can admit larger
+    strips when C is sparse.
+    """
+
+    backend: str                 # "pallas" (dense slab) | "sparse" (CSR)
+    fast_bytes_needed: float     # peak resident footprint, bytes
+    streamed_bytes: float        # one streamed element (held x2: double buffer)
+    stationary_bytes: float      # stationary operand's staged block
+    c_accum_bytes: float         # persistent accumulator block(s)
+    workspace_bytes: float       # per-step compute scratch (ESC expansion)
+
+
+def _csr_staged_bytes(rows: int, nnz_cap: int, itemsize: int) -> float:
+    """Padded CSR triple footprint: row pointers + (index, value) per slot."""
+    return float((rows + 1) * 4 + max(nnz_cap, 1) * (4 + itemsize))
+
+
+def planned_stats_dense_slab(plan: ChunkPlan, envelope) -> BackendFastModel:
+    """The dense-accumulator (``backend="pallas"``) resident footprint: the
+    streamed/stationary pieces are dense f32 slabs and the C accumulator is a
+    dense ``[strip_rows, n_cols]`` block per resident strip."""
+    k, n = envelope.a_shape[1], envelope.b_shape[1]
+    span, strip_rows = envelope.chunk_rows, envelope.strip_rows
+    slab = float(span * n * 4)                       # streamed B chunk
+    a_stage = float(strip_rows * (k + span) * 4)     # column-padded A strip
+    c_block = float(strip_rows * n * 4)
+    if plan.algorithm == "chunk2":
+        streamed, stationary = a_stage, slab
+        c_accum = plan.n_ac * c_block                # all partials persist
+    else:                                            # knl / chunk1
+        streamed, stationary = slab, a_stage
+        c_accum = c_block
+    return BackendFastModel(
+        backend="pallas",
+        fast_bytes_needed=2 * streamed + stationary + c_accum,
+        streamed_bytes=streamed, stationary_bytes=stationary,
+        c_accum_bytes=c_accum, workspace_bytes=0.0,
+    )
+
+
+def planned_stats_sparse(plan: ChunkPlan, envelope) -> BackendFastModel:
+    """The sparse-output (``backend="sparse"``) resident footprint: every
+    staged piece is a padded CSR triple and the C accumulator is the
+    fixed-capacity CSR scratch at the symbolic ``c_pad`` — so the model
+    scales with the envelope's nnz caps, never with ``n_cols``. The ESC
+    workspace term is the expand-sort-compress product buffer
+    (``strip_nnz_cap * b_max_row_nnz + c_pad`` slots of row, column, value),
+    the price of compressed accumulation that the crossover bench lane
+    (``benchmarks/chunking_bench.py dense_vs_sparse_accum``) measures against
+    the dense slab."""
+    itemsize = int(np.dtype(envelope.dtype).itemsize)
+    chunk_csr = _csr_staged_bytes(envelope.chunk_rows, envelope.chunk_nnz_cap,
+                                  itemsize)
+    strip_csr = _csr_staged_bytes(envelope.strip_rows, envelope.strip_nnz_cap,
+                                  itemsize)
+    c_csr = _csr_staged_bytes(envelope.strip_rows, envelope.c_pad, itemsize)
+    esc_slots = (max(envelope.strip_nnz_cap, 1)
+                 * max(envelope.b_max_row_nnz, 1) + envelope.c_pad)
+    workspace = float(esc_slots * (4 + 4 + itemsize))
+    if plan.algorithm == "chunk2":
+        streamed, stationary = strip_csr, chunk_csr
+        c_accum = plan.n_ac * c_csr
+    else:                                            # knl / chunk1
+        streamed, stationary = chunk_csr, strip_csr
+        c_accum = c_csr
+    return BackendFastModel(
+        backend="sparse",
+        fast_bytes_needed=2 * streamed + stationary + c_accum + workspace,
+        streamed_bytes=streamed, stationary_bytes=stationary,
+        c_accum_bytes=c_accum, workspace_bytes=workspace,
+    )
+
+
 def plan_knl(A: CSR, B: CSR, fast_limit_bytes: float,
              system: MemorySystem | None = None) -> ChunkPlan:
     """Algorithm 1 planning: np = ceil(size(B)/FastSize), equal-byte row partition of

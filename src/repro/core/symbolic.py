@@ -1,0 +1,119 @@
+"""Symbolic phase for sparse-output chunked SpGEMM: exact C structure on host.
+
+Two-phase (symbolic/numeric) SpGEMM is the standard scheme on manycore
+hardware — Deveci et al.'s KKMEM and the hash/ESC variants of Nagasaka & Azad
+both first compute the *structure* (or an upper bound) of C, then run the
+numeric phase into preallocated storage. In this codebase the split maps onto
+the JAX compilation model:
+
+  * the **symbolic phase** (this module) runs on host, in NumPy, *before*
+    tracing: it computes the exact per-row nonzero counts of C = A x B, and
+    from them the per-strip output capacities a chunk plan needs
+    (:func:`strip_output_caps`);
+  * the **numeric phase** (``repro.core.kkmem``, ``repro.core.chunk_stream``,
+    ``repro.kernels.sparse_accum_spgemm``) is traced/compiled with those
+    capacities baked in as *static* shapes.
+
+The capacities feed :class:`repro.sparse.csr.GeometryEnvelope` — the hashable
+compile key every batched/serving executable is specialized on — through
+``repro.core.chunking.instance_envelope``: ``c_pad`` (largest-strip output
+capacity), ``c_nnz_cap`` (whole-C capacity) and ``c_max_row_nnz`` (densest C
+row) become envelope fields, so two instances whose *output* structure differs
+land in different buckets exactly when the difference would force a retrace,
+and batches stay compile-stable under the envelope union/quantize algebra.
+This is what lets the sparse-output backend (``backend="sparse"``) size its
+fixed-capacity CSR accumulator scratch to ``nnz(C)`` instead of a dense
+``[strip_rows, n_cols]`` slab: the symbolic counts are exact upper bounds, so
+the numeric phase can never overflow the scratch.
+
+Everything here is exact (a full structural expansion, not a probabilistic
+estimate); at the matrix sizes where the host pass would dominate, the
+paper's answer — and ours — is to amortize it across the many numeric calls
+that reuse one plan/envelope.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.sparse.csr import CSR
+
+
+@dataclasses.dataclass(frozen=True)
+class SymbolicStructure:
+    """Exact structure of C = A x B (host-side, all concrete ints)."""
+
+    per_row_nnz: np.ndarray  # int64[n_rows(A)] — exact nnz of every C row
+    c_nnz: int               # exact total nnz of C
+    c_max_row_nnz: int       # densest C row
+    flops: int               # 2 * number of scalar products
+
+
+def spgemm_structure_host(A: CSR, B: CSR) -> SymbolicStructure:
+    """Exact per-row structure of C = A x B (the symbolic phase proper)."""
+    a_ptr = np.asarray(A.indptr).astype(np.int64)
+    a_idx = np.asarray(A.indices).astype(np.int64)
+    b_ptr = np.asarray(B.indptr).astype(np.int64)
+    b_idx = np.asarray(B.indices).astype(np.int64)
+    nnz_a = int(a_ptr[-1])
+    a_rows = np.repeat(np.arange(A.n_rows, dtype=np.int64),
+                       a_ptr[1:] - a_ptr[:-1])
+    a_cols = a_idx[:nnz_a]
+    lens = b_ptr[a_cols + 1] - b_ptr[a_cols]
+    total = int(lens.sum())
+    cum = np.concatenate([[0], np.cumsum(lens)])
+    p = np.arange(total, dtype=np.int64)
+    t = np.searchsorted(cum, p, side="right") - 1
+    prod_rows = a_rows[t]
+    prod_cols = b_idx[b_ptr[a_cols[t]] + (p - cum[t])]
+    keys = np.unique(prod_rows * np.int64(B.n_cols) + prod_cols)
+    per_row = np.bincount(keys // B.n_cols, minlength=A.n_rows)
+    return SymbolicStructure(
+        per_row_nnz=per_row,
+        c_nnz=int(keys.size),
+        c_max_row_nnz=int(per_row.max()) if per_row.size else 0,
+        flops=2 * total,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class StripOutputCaps:
+    """Per-strip output capacities of a chunk plan, from the symbolic phase.
+
+    ``c_pad`` is what every strip's CSR accumulator is allocated to (the
+    largest strip's exact nnz, rounded up); ``c_nnz_cap`` bounds the whole
+    assembled C; ``c_max_row_nnz`` bounds any single C row. All three fold
+    into :class:`repro.sparse.csr.GeometryEnvelope`.
+    """
+
+    c_pad: int             # capacity of the largest strip (rounded up)
+    c_nnz_cap: int         # whole-C capacity (rounded up)
+    c_max_row_nnz: int     # exact densest C row
+    strip_nnz: tuple       # exact nnz of each strip's C rows
+
+
+def _round_up(v: int, multiple: int) -> int:
+    return -(-max(int(v), 1) // multiple) * multiple
+
+
+def strip_output_caps(A: CSR, B: CSR, p_ac: tuple,
+                      pad_multiple: int = 64) -> StripOutputCaps:
+    """Output capacities for the A/C row partition ``p_ac`` of C = A x B.
+
+    One global symbolic expansion; per-strip capacities are partial sums of
+    the per-row counts — identical values to running the symbolic phase on
+    each row slice, without re-expanding per strip.
+    """
+    structure = spgemm_structure_host(A, B)
+    cum = np.concatenate([[0], np.cumsum(structure.per_row_nnz)])
+    strip_nnz = tuple(
+        int(cum[e] - cum[s]) for s, e in zip(p_ac[:-1], p_ac[1:])
+    )
+    return StripOutputCaps(
+        c_pad=_round_up(max(strip_nnz) if strip_nnz else 0, pad_multiple),
+        c_nnz_cap=_round_up(structure.c_nnz, pad_multiple),
+        c_max_row_nnz=structure.c_max_row_nnz,
+        strip_nnz=strip_nnz,
+    )

@@ -1,0 +1,251 @@
+"""Pallas CSR-native sparse-output SpGEMM: sorted-merge accumulation in VMEM.
+
+The ranged-SpGEMM kernel (``kernels/ranged_spgemm.py``) trades entry sparsity
+for MXU tiles: its accumulator is a dense ``[strip_rows, n_cols]`` slab, so
+VMEM — not the chunk plan — bounds strip sizing, and a very sparse C pays
+dense-C traffic. This kernel is the numeric phase of the two-phase
+symbolic/numeric scheme (``repro.core.symbolic`` is the symbolic phase): the
+per-strip accumulator is a **fixed-capacity CSR triple**
+(``indptr[strip_rows+1]``, ``indices[c_cap]``, ``data[c_cap]``) whose
+capacity ``c_cap`` comes from the symbolic phase's exact structure bound, so
+the fast-memory footprint scales with ``nnz(C)`` instead of
+``strip_rows * n_cols`` — the compressed-accumulator idea of Deveci et al.'s
+KKMEM and Nagasaka & Azad's ESC/hash variants, in the streaming-chunk setting.
+
+Per grid step the kernel runs one fused ranged multiply-add
+``C = A[:, r0:r1] x B_chunk + C_prev`` entirely against CSR operands: expand
+the in-range products, concatenate the previous accumulator entries, two-key
+sort, and compress duplicates back into the CSR scratch
+(``repro.core.kkmem.spgemm_ranged_impl`` — the same expand-sort-compress
+(ESC) accumulator the scan backend scans over, here executed inside the
+kernel so the accumulator never leaves VMEM). Because the symbolic caps are
+exact upper bounds and a partial C's structure is always a subset of the
+final strip structure, the scratch can never overflow mid-stream.
+
+The streaming schedule is the same explicit two-slot DMA pattern as
+``ranged_spgemm_stream``: the stationary operand (the A strip in the Chunk1
+order, the B chunk in Chunk2) rides a normal blocked ``BlockSpec``; the
+streamed operand's CSR triple lives in slow memory (``pltpu.ANY``) and is
+hand-DMA'd — three async copies per element, one per CSR field — through
+``[2, ...]`` VMEM scratch buffers, starting element j+1 while element j
+multiplies. Scalar-prefetched ``r0s``/``r1s`` realize the ranged column skip.
+
+``interpret=default_interpret()`` validates the whole pipeline (DMA semantics
+included) on CPU. On real TPU the ESC body leans on sort/scatter lowerings
+inside the kernel — the open item tracked in ROADMAP.md next to the existing
+"run the Pallas lanes on real TPU" note; the CSR-native *memory model* (what
+the planner sizes against) is backend-independent.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.kkmem import spgemm_ranged_impl
+from repro.kernels._compat import ANY as _ANY
+# shared with the dense-slab streaming kernel: same interpret heuristic, same
+# linear-grid decomposition (the two kernels are one DMA pattern, two
+# accumulators)
+from repro.kernels.ranged_spgemm import _decompose, default_interpret
+from repro.sparse.csr import CSR
+
+
+def _kernel(r0s_ref, r1s_ref, stat_ip, stat_ix, stat_d,
+            stream_ip_hbm, stream_ix_hbm, stream_d_hbm,
+            c0_ip, c0_ix, c0_d, out_ip, out_ix, out_d,
+            buf_ip, buf_ix, buf_d, sems, *, order: str, batch: int,
+            n_ac: int, n_b: int, strip_rows: int, chunk_rows: int,
+            k_cols: int, n_cols: int, a_mrn: int, b_mrn: int, c_cap: int):
+    """One grid step: DMA-stream a CSR triple, ESC-merge into the CSR scratch.
+
+    Grid is (batch, outer, inner); ``order`` fixes which operand streams:
+      chunk1: outer = strips, inner = chunks  -> B triples stream through VMEM
+      chunk2: outer = chunks, inner = strips  -> A triples stream through VMEM
+    """
+    b = pl.program_id(0)
+    outer_ix = pl.program_id(1)
+    inner_ix = pl.program_id(2)
+    outer, inner = (n_ac, n_b) if order == "chunk1" else (n_b, n_ac)
+    total = batch * outer * inner
+    lin = (b * outer + outer_ix) * inner + inner_ix
+
+    def dma(slot, step):
+        bb, ii = _decompose(step, outer, inner)
+        return [
+            pltpu.make_async_copy(stream_ip_hbm.at[bb, ii], buf_ip.at[slot],
+                                  sems.at[slot, 0]),
+            pltpu.make_async_copy(stream_ix_hbm.at[bb, ii], buf_ix.at[slot],
+                                  sems.at[slot, 1]),
+            pltpu.make_async_copy(stream_d_hbm.at[bb, ii], buf_d.at[slot],
+                                  sems.at[slot, 2]),
+        ]
+
+    # warm-up: the very first streamed element has no previous step to
+    # prefetch it, so stage it synchronously before the overlap steady-state
+    @pl.when(lin == 0)
+    def _prime():
+        for copy in dma(0, 0):
+            copy.start()
+
+    # the explicit copy2Fast overlap: start element lin+1 into the other
+    # slot while this step's merge consumes slot lin % 2
+    @pl.when(lin + 1 < total)
+    def _prefetch():
+        for copy in dma((lin + 1) % 2, lin + 1):
+            copy.start()
+
+    for copy in dma(lin % 2, lin):
+        copy.wait()
+    slot = lin % 2
+    s_ip, s_ix, s_d = buf_ip[slot], buf_ix[slot], buf_d[slot]
+
+    if order == "chunk1":
+        j, i = inner_ix, outer_ix
+        A = CSR(stat_ip[0, 0], stat_ix[0, 0], stat_d[0, 0],
+                (strip_rows, k_cols), a_mrn)
+        Bc = CSR(s_ip, s_ix, s_d, (chunk_rows, n_cols), b_mrn)
+        prev = (c0_ip[0, 0], c0_ix[0, 0], c0_d[0, 0],
+                out_ip[0, 0], out_ix[0, 0], out_d[0, 0])
+    else:
+        j, i = outer_ix, inner_ix
+        A = CSR(s_ip, s_ix, s_d, (strip_rows, k_cols), a_mrn)
+        Bc = CSR(stat_ip[0, 0], stat_ix[0, 0], stat_d[0, 0],
+                 (chunk_rows, n_cols), b_mrn)
+        prev = (c0_ip[0, i], c0_ix[0, i], c0_d[0, i],
+                out_ip[0, i], out_ix[0, i], out_d[0, i])
+
+    # the fused C_prev: the caller's c0 on the first chunk step, the
+    # persistent VMEM accumulator afterwards (out_ref is only ever read
+    # behind the j > 0 select, so the j == 0 read of the uninitialized
+    # block is discarded)
+    first = j == 0
+    c_prev = CSR(
+        jnp.where(first, prev[0], prev[3]),
+        jnp.where(first, prev[1], prev[4]),
+        jnp.where(first, prev[2], prev[5]),
+        (strip_rows, n_cols), c_cap,
+    )
+    merged = spgemm_ranged_impl(A, Bc, r0s_ref[j], r1s_ref[j], c_prev,
+                                c_pad=c_cap)
+    if order == "chunk1":
+        out_ip[0, 0] = merged.indptr
+        out_ix[0, 0] = merged.indices
+        out_d[0, 0] = merged.data
+    else:
+        out_ip[0, i] = merged.indptr
+        out_ix[0, i] = merged.indices
+        out_d[0, i] = merged.data
+
+
+def sparse_accum_spgemm_stream(Ast: CSR, Bst: CSR, C0st: CSR,
+                               r0s: jax.Array, r1s: jax.Array, *, order: str,
+                               interpret: bool | None = None):
+    """Streamed sparse-output multiply over stacked CSR strips and chunks.
+
+    Args:
+      Ast: doubly-stacked A strips — a :class:`CSR` whose array fields carry
+        leading ``[batch, n_ac]`` axes (``csr_stack`` of ``csr_stack``), with
+        per-element ``shape == (strip_rows, k_cols)``.
+      Bst: doubly-stacked B chunks, leading ``[batch, n_b]`` axes,
+        per-element ``shape == (chunk_rows, n_cols)``; ``max_row_nnz`` sizes
+        the product expansion.
+      C0st: the fused ``C_prev`` per strip, leading ``[batch, n_ac]`` axes;
+        its entry capacity is the CSR scratch capacity ``c_cap`` (from the
+        symbolic phase — must bound every strip's exact output nnz).
+      r0s, r1s: i32[n_b] global row range of each B chunk (scalar-prefetched).
+      order: "chunk1" (strips outer, B streamed) or "chunk2" (chunks outer,
+        A streamed; per-strip accumulators persist in the VMEM out block).
+
+    Returns ``(indptr, indices, data)`` with leading ``[batch, n_ac]`` axes —
+    the accumulated C strip CSRs at capacity ``c_cap``.
+    """
+    if order not in ("chunk1", "chunk2"):
+        raise ValueError(f"unknown streaming order {order!r}")
+    batch, n_ac = Ast.indptr.shape[0], Ast.indptr.shape[1]
+    n_b = Bst.indptr.shape[1]
+    strip_rows, k_cols = Ast.shape
+    chunk_rows, n_cols = Bst.shape
+    a_cap = Ast.indices.shape[-1]
+    chunk_cap = Bst.indices.shape[-1]
+    c_cap = C0st.indices.shape[-1]
+    dtype = C0st.data.dtype
+    if Bst.indptr.shape[0] != batch or C0st.indptr.shape[:2] != (batch, n_ac):
+        raise ValueError(
+            f"inconsistent stack axes: A[{Ast.indptr.shape[:2]}] "
+            f"B[{Bst.indptr.shape[:2]}] C0[{C0st.indptr.shape[:2]}]"
+        )
+    if C0st.shape != (strip_rows, n_cols):
+        raise ValueError(f"C0 shape {C0st.shape} != {(strip_rows, n_cols)}")
+    interpret = default_interpret() if interpret is None else interpret
+
+    def blocked(trail, index_map):
+        return pl.BlockSpec((1, 1) + trail, index_map)
+
+    any_spec = pl.BlockSpec(memory_space=_ANY)
+    if order == "chunk1":
+        grid = (batch, n_ac, n_b)
+        stat = Ast
+        streamed = Bst
+        stat_ix_map = lambda b, i, j, r0s, r1s: (b, i, 0)     # noqa: E731
+        stat_specs = [blocked((strip_rows + 1,), stat_ix_map),
+                      blocked((a_cap,), stat_ix_map),
+                      blocked((a_cap,), stat_ix_map)]
+        c_map = lambda b, i, j, r0s, r1s: (b, i, 0)           # noqa: E731
+        c0_specs = [blocked((strip_rows + 1,), c_map),
+                    blocked((c_cap,), c_map), blocked((c_cap,), c_map)]
+        out_specs = (blocked((strip_rows + 1,), c_map),
+                     blocked((c_cap,), c_map), blocked((c_cap,), c_map))
+        bufs = [pltpu.VMEM((2, chunk_rows + 1), jnp.int32),
+                pltpu.VMEM((2, chunk_cap), jnp.int32),
+                pltpu.VMEM((2, chunk_cap), dtype)]
+    else:
+        grid = (batch, n_b, n_ac)
+        stat = Bst
+        streamed = Ast
+        stat_ix_map = lambda b, j, i, r0s, r1s: (b, j, 0)     # noqa: E731
+        stat_specs = [blocked((chunk_rows + 1,), stat_ix_map),
+                      blocked((chunk_cap,), stat_ix_map),
+                      blocked((chunk_cap,), stat_ix_map)]
+        # whole-batch-element C blocks: every (j, i) step addresses the same
+        # persistent out block, strips' accumulators never leave VMEM
+        c_map = lambda b, j, i, r0s, r1s: (b, 0, 0)           # noqa: E731
+        c0_specs = [pl.BlockSpec((1, n_ac, strip_rows + 1), c_map),
+                    pl.BlockSpec((1, n_ac, c_cap), c_map),
+                    pl.BlockSpec((1, n_ac, c_cap), c_map)]
+        out_specs = (pl.BlockSpec((1, n_ac, strip_rows + 1), c_map),
+                     pl.BlockSpec((1, n_ac, c_cap), c_map),
+                     pl.BlockSpec((1, n_ac, c_cap), c_map))
+        bufs = [pltpu.VMEM((2, strip_rows + 1), jnp.int32),
+                pltpu.VMEM((2, a_cap), jnp.int32),
+                pltpu.VMEM((2, a_cap), dtype)]
+
+    kernel = functools.partial(
+        _kernel, order=order, batch=batch, n_ac=n_ac, n_b=n_b,
+        strip_rows=strip_rows, chunk_rows=chunk_rows, k_cols=k_cols,
+        n_cols=n_cols, a_mrn=Ast.max_row_nnz, b_mrn=Bst.max_row_nnz,
+        c_cap=c_cap,
+    )
+    out_shape = (
+        jax.ShapeDtypeStruct((batch, n_ac, strip_rows + 1), jnp.int32),
+        jax.ShapeDtypeStruct((batch, n_ac, c_cap), jnp.int32),
+        jax.ShapeDtypeStruct((batch, n_ac, c_cap), dtype),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[*stat_specs, any_spec, any_spec, any_spec, *c0_specs],
+            out_specs=out_specs,
+            scratch_shapes=[*bufs, pltpu.SemaphoreType.DMA((2, 3))],
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(r0s, r1s, stat.indptr, stat.indices, stat.data,
+      streamed.indptr, streamed.indices, streamed.data,
+      C0st.indptr, C0st.indices, C0st.data)

@@ -20,9 +20,10 @@ recompilation. ``SpGEMMService`` amortizes all three:
     exhausted, new geometries fold into a compatible existing bucket (growing
     its envelope) instead of compiling program #budget+1;
   * ``backend`` selects the bucket executable: the vmapped ``lax.scan``
-    cores (default) or the Pallas ranged-SpGEMM kernel with explicit
-    double-buffered chunk prefetch (``backend="pallas"``) — every bucket
-    picks up the prefetching kernel unchanged;
+    cores (default), the Pallas ranged-SpGEMM kernel with explicit
+    double-buffered chunk prefetch (``backend="pallas"``), or the CSR-native
+    sparse-output kernel (``backend="sparse"``, fast-memory footprint scaling
+    with ``nnz(C)``) — every bucket picks up the selected kernel unchanged;
   * responses report per-request latency, the executed (padded) microbatch
     width, and the modeled fast<->slow :class:`ChunkStats` copy traffic at
     the envelope-padded staged sizes.
@@ -107,7 +108,8 @@ class SpGEMMService:
     width (short flush tails drop to the smallest power-of-two ladder width
     that fits, bounding both padding waste and per-bucket compiles),
     ``retrace_budget`` the maximum number of distinct compiled buckets, and
-    ``backend`` the executor every bucket runs (``"scan"`` | ``"pallas"``).
+    ``backend`` the executor every bucket runs (``"scan"`` | ``"pallas"`` |
+    ``"sparse"``).
     """
 
     def __init__(self, plan: ChunkPlan | None = None, *,
@@ -118,7 +120,7 @@ class SpGEMMService:
             raise ValueError("need a fixed plan or fast_limit_bytes to plan by")
         if max_batch < 1 or quantum < 1 or retrace_budget < 1:
             raise ValueError("quantum, max_batch, retrace_budget must be >= 1")
-        if backend not in ("scan", "pallas"):
+        if backend not in ("scan", "pallas", "sparse"):
             raise ValueError(f"unknown backend {backend!r}")
         self._plan = plan
         self._fast_limit = fast_limit_bytes
@@ -221,7 +223,8 @@ class SpGEMMService:
 
     def _execute_bucket(self, bucket: _Bucket) -> list:
         """Drain one bucket in ladder-width microbatches; returns responses."""
-        suffix = "pallas_batched" if self.backend == "pallas" else "batched"
+        suffix = {"pallas": "pallas_batched",
+                  "sparse": "sparse_batched"}.get(self.backend, "batched")
         counter = f"{bucket.plan.algorithm}_{suffix}"
         responses = []
         while bucket.queue:

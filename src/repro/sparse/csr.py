@@ -182,6 +182,15 @@ class GeometryEnvelope:
     ``chunk_rows``/``strip_rows`` derive from the plan's row partitions (shared
     across a batch by construction); the nnz caps and ``max_row_nnz`` bounds
     are per-instance quantities that the envelope maxes over the batch.
+
+    The *output-cap* fields (``c_nnz_cap``, ``c_max_row_nnz``) come from the
+    symbolic phase (``repro.core.symbolic``): they bound the structure of C
+    itself, which is what the sparse-output backend sizes its fixed-capacity
+    CSR accumulator scratch with (``c_pad`` is the per-strip capacity that
+    scratch is allocated to). A value of 0 means "not computed" (envelopes
+    predating the symbolic fold-in); the algebra below absorbs 0 into any
+    computed value under union and preserves it under quantization, so legacy
+    envelopes stay valid compile keys.
     """
 
     a_shape: tuple      # (m, k) of every A instance
@@ -195,6 +204,8 @@ class GeometryEnvelope:
     strip_nnz_cap: int  # nnz capacity every staged A strip is padded to
     c_pad: int          # output capacity (>= exact symbolic nnz of any C strip)
     dtype: str          # value dtype name ("float32", ...)
+    c_nnz_cap: int = 0      # whole-C structure capacity (symbolic; 0 = unset)
+    c_max_row_nnz: int = 0  # densest C row bound (symbolic; 0 = unset)
 
     def _check_compatible(self, other: "GeometryEnvelope") -> None:
         if (self.a_shape != other.a_shape or self.b_shape != other.b_shape
@@ -219,6 +230,8 @@ class GeometryEnvelope:
             strip_nnz_cap=max(self.strip_nnz_cap, other.strip_nnz_cap),
             c_pad=max(self.c_pad, other.c_pad),
             dtype=self.dtype,
+            c_nnz_cap=max(self.c_nnz_cap, other.c_nnz_cap),
+            c_max_row_nnz=max(self.c_max_row_nnz, other.c_max_row_nnz),
         )
 
     def dominates(self, other: "GeometryEnvelope") -> bool:
@@ -234,7 +247,9 @@ class GeometryEnvelope:
                 and self.chunk_nnz_cap >= other.chunk_nnz_cap
                 and self.strip_rows >= other.strip_rows
                 and self.strip_nnz_cap >= other.strip_nnz_cap
-                and self.c_pad >= other.c_pad)
+                and self.c_pad >= other.c_pad
+                and self.c_nnz_cap >= other.c_nnz_cap
+                and self.c_max_row_nnz >= other.c_max_row_nnz)
 
     def quantized(self, quantum: int = 32) -> "GeometryEnvelope":
         """Round the nnz caps up to ``quantum`` multiples and the row-nnz
@@ -258,6 +273,9 @@ class GeometryEnvelope:
             strip_nnz_cap=up(self.strip_nnz_cap),
             c_pad=up(self.c_pad),
             dtype=self.dtype,
+            c_nnz_cap=up(self.c_nnz_cap) if self.c_nnz_cap else 0,
+            c_max_row_nnz=(up_pow2(self.c_max_row_nnz)
+                           if self.c_max_row_nnz else 0),
         )
 
     @classmethod

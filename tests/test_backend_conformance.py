@@ -1,0 +1,241 @@
+"""Cross-backend differential conformance suite.
+
+One seeded geometry matrix — empty rows, skewed rows, all-zero chunks,
+single-column B, all-zero B, wide-but-sparse outputs — runs through **every**
+``chunked_spgemm`` backend and is asserted allclose to the loop oracle at
+matched ``c_pad`` (scan additionally bitwise, which ``assert_close`` at tiny
+atol effectively witnesses via identical float schedules). New backends
+register in ``BACKENDS``/``BATCHED_BACKENDS`` and inherit the whole matrix:
+correctness guarantees come from this suite, not per-backend ad-hoc tests.
+
+The trace-count section pins the *exact* ``TRACE_COUNTS`` deltas of every
+backend across repeat / same-envelope / new-envelope calls, so a silent
+retrace regression (a geometry-dependent Python value smuggled into a jitted
+signature, a cache-busting non-hashable static) fails the fast lane instead
+of showing up as a serving-latency cliff.
+
+Determinism: every case is seeded and the matrix is pure-parametrize, so two
+runs of this file must produce identical reports — CI runs it twice and
+diffs (the determinism job in .github/workflows/ci.yml).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.chunk_stream import TRACE_COUNTS, chunked_spgemm_batched
+from repro.core.chunking import (
+    batch_envelope, chunked_spgemm, default_c_pad, instance_envelope,
+)
+from repro.core.kkmem import spgemm_dense_oracle
+from repro.core.planner import ChunkPlan
+from repro.sparse.csr import csr_from_dense, csr_to_dense
+from repro.serve.spgemm_service import SpGEMMService
+from conftest import assert_close, random_csr, random_dense
+
+# every chunked_spgemm backend; new backends register here (and in
+# BATCHED_BACKENDS below when they support chunked_spgemm_batched)
+BACKENDS = ["loop", "scan", "pallas", "sparse"]
+BATCHED_BACKENDS = ["scan", "pallas", "sparse"]
+ALGORITHMS = ["knl", "chunk1", "chunk2"]
+
+
+def _thirds(n: int) -> tuple:
+    if n < 3:
+        return (0, n)
+    return (0, n // 3, 2 * n // 3, n)
+
+
+def _case_empty_rows(rng):
+    """A with structurally empty rows at both ends and mid-strip."""
+    a = random_dense(rng, 14, 11, 0.4)
+    a[0] = a[5] = a[6] = a[13] = 0.0
+    return csr_from_dense(a), random_csr(rng, 11, 9, 0.3)
+
+
+def _case_skewed_rows(rng):
+    """One fully dense A row among near-empty ones (skewed staging caps)."""
+    a = random_dense(rng, 12, 16, 0.05)
+    a[7] = rng.standard_normal(16).astype(np.float32)
+    return csr_from_dense(a), random_csr(rng, 16, 10, 0.3)
+
+
+def _case_all_zero_chunk(rng):
+    """The middle B chunk of the thirds partition is structurally empty."""
+    b = random_dense(rng, 15, 8, 0.4)
+    b[5:10] = 0.0
+    return random_csr(rng, 10, 15, 0.3), csr_from_dense(b)
+
+
+def _case_single_col_b(rng):
+    return random_csr(rng, 9, 12, 0.4), random_csr(rng, 12, 1, 0.5)
+
+
+def _case_all_zero_b(rng):
+    """C is structurally empty (every backend must produce an all-zero C)."""
+    return random_csr(rng, 8, 10, 0.4), csr_from_dense(np.zeros((10, 6),
+                                                                np.float32))
+
+
+def _case_wide_sparse_output(rng):
+    """Wide C at low density — the sparse backend's home turf."""
+    return random_csr(rng, 10, 12, 0.12), random_csr(rng, 12, 48, 0.04)
+
+
+CASES = {
+    "empty_rows": (_case_empty_rows, 101),
+    "skewed_rows": (_case_skewed_rows, 102),
+    "all_zero_chunk": (_case_all_zero_chunk, 103),
+    "single_col_b": (_case_single_col_b, 104),
+    "all_zero_b": (_case_all_zero_b, 105),
+    "wide_sparse_output": (_case_wide_sparse_output, 106),
+}
+
+
+def _plan(algorithm: str, A, B) -> ChunkPlan:
+    p_ac = (0, A.n_rows) if algorithm == "knl" else _thirds(A.n_rows)
+    return ChunkPlan(algorithm, p_ac, _thirds(B.n_rows), 0.0, 0.0)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("algorithm", ALGORITHMS)
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_backend_matches_loop_oracle(case, algorithm, backend):
+    build, seed = CASES[case]
+    A, B = build(np.random.default_rng(seed))
+    plan = _plan(algorithm, A, B)
+    c_pad = default_c_pad(A, B, plan)
+    Cl, sl = chunked_spgemm(A, B, plan, c_pad, backend="loop")
+    Cb, sb = chunked_spgemm(A, B, plan, c_pad, backend=backend)
+    assert Cb.shape == (A.n_rows, B.n_cols)
+    assert_close(csr_to_dense(Cb), csr_to_dense(Cl), atol=1e-4,
+                 msg=f"{case}/{algorithm}/{backend} vs loop oracle")
+    assert_close(csr_to_dense(Cl), spgemm_dense_oracle(A, B), atol=1e-4)
+    # every backend runs the plan's exact multiply schedule
+    assert sb.kernel_calls == sl.kernel_calls
+    assert len(sb.per_copy_in) > 0 and sb.copy_in_bytes > 0
+
+
+@pytest.mark.parametrize("backend", BATCHED_BACKENDS)
+@pytest.mark.parametrize("algorithm", ALGORITHMS)
+def test_batched_hetero_conformance(algorithm, backend):
+    """Heterogeneous-structure batches (mixed densities plus one structurally
+    empty A instance) through every batched backend, against the
+    per-instance loop oracle at the batch envelope's c_pad."""
+    rng = np.random.default_rng(207)
+    As = [random_csr(rng, 18, 15, d) for d in (0.10, 0.30)]
+    As.append(csr_from_dense(np.zeros((18, 15), np.float32)))
+    Bs = [random_csr(rng, 15, 13, d) for d in (0.15, 0.25, 0.35)]
+    plan = _plan(algorithm, As[0], Bs[0])
+    env = batch_envelope(As, Bs, plan)
+    out, _ = chunked_spgemm_batched(As, Bs, plan, backend=backend)
+    assert len(out) == len(As)
+    for A, B, Cb in zip(As, Bs, out):
+        Cl, _ = chunked_spgemm(A, B, plan, c_pad=env.c_pad, backend="loop")
+        assert_close(csr_to_dense(Cb), csr_to_dense(Cl), atol=1e-4,
+                     msg=f"hetero/{algorithm}/{backend}")
+
+
+@pytest.mark.parametrize("backend", BATCHED_BACKENDS)
+def test_service_conformance(backend):
+    """The full serving path (bucketing, envelope quantization, microbatch
+    padding) stays oracle-correct for every backend."""
+    rng = np.random.default_rng(303)
+    As = [random_csr(rng, 12, 10, d) for d in (0.1, 0.2, 0.3, 0.15)]
+    Bs = [random_csr(rng, 10, 8, d) for d in (0.2, 0.3, 0.1, 0.25)]
+    svc = SpGEMMService(fast_limit_bytes=1500.0, backend=backend, max_batch=2)
+    ids = [svc.submit(A, B) for A, B in zip(As, Bs)]
+    responses = svc.flush()
+    assert [r.req_id for r in responses] == ids
+    for r, A, B in zip(responses, As, Bs):
+        assert_close(csr_to_dense(r.C), spgemm_dense_oracle(A, B), atol=1e-4,
+                     msg=f"service/{backend}")
+
+
+# ---------------------------------------------------------------------------
+# trace-count regression: exact deltas per backend
+# ---------------------------------------------------------------------------
+
+# TRACE_COUNTS key of each backend's unbatched jitted core ({alg} formats in)
+TRACE_KEYS = {"scan": "{alg}", "pallas": "{alg}_pallas",
+              "sparse": "{alg}_sparse"}
+TRACE_KEYS_BATCHED = {"scan": "{alg}_batched", "pallas": "{alg}_pallas_batched",
+                      "sparse": "{alg}_sparse_batched"}
+
+
+def _trace_geometry(rng, m=21, k=19, n=13, da=0.25, db=0.3):
+    """Sizes unique to this module so the session-global jit cache cannot
+    have seen the padded geometry before the first measured call."""
+    return random_csr(rng, m, k, da), random_csr(rng, k, n, db)
+
+
+@pytest.mark.parametrize("backend", ["scan", "pallas", "sparse"])
+@pytest.mark.parametrize("algorithm", ALGORITHMS)
+def test_trace_counts_exact(algorithm, backend):
+    """first call = exactly one trace of the backend core; repeat and
+    same-envelope (new values, same padded geometry) = exactly zero; a new
+    envelope = exactly one more."""
+    key = TRACE_KEYS[backend].format(alg=algorithm)
+    # deterministic per-combination seed (str hashing is process-salted)
+    seed = 1000 + 10 * ALGORITHMS.index(algorithm) + BACKENDS.index(backend)
+    rng = np.random.default_rng(seed)
+    A1, B1 = _trace_geometry(rng)
+    plan = _plan(algorithm, A1, B1)
+    c_pad = default_c_pad(A1, B1, plan)
+
+    before = TRACE_COUNTS[key]
+    chunked_spgemm(A1, B1, plan, c_pad, backend=backend)
+    assert TRACE_COUNTS[key] - before == 1, "first call must trace once"
+
+    mid = TRACE_COUNTS[key]
+    chunked_spgemm(A1, B1, plan, c_pad, backend=backend)     # repeat
+    assert TRACE_COUNTS[key] == mid, "repeat call must not retrace"
+
+    # same envelope, different values: rebuild with the same seed's structure
+    A1b = csr_from_dense(np.asarray(csr_to_dense(A1)) * 2.0)
+    B1b = csr_from_dense(np.asarray(csr_to_dense(B1)) * 0.5)
+    env1 = instance_envelope(A1, B1, plan, c_pad=c_pad)
+    assert instance_envelope(A1b, B1b, plan, c_pad=c_pad) == env1
+    chunked_spgemm(A1b, B1b, plan, c_pad, backend=backend)
+    assert TRACE_COUNTS[key] == mid, "same-envelope call must not retrace"
+
+    # a genuinely new padded geometry: exactly one more trace
+    A2, B2 = _trace_geometry(rng, m=23, k=20, n=11, da=0.4, db=0.35)
+    plan2 = _plan(algorithm, A2, B2)
+    chunked_spgemm(A2, B2, plan2, default_c_pad(A2, B2, plan2),
+                   backend=backend)
+    assert TRACE_COUNTS[key] == mid + 1, "new envelope must trace exactly once"
+
+
+@pytest.mark.parametrize("backend", BATCHED_BACKENDS)
+def test_trace_counts_exact_batched(backend):
+    """Batched cores: one trace per (envelope, batch width), zero on repeat
+    and on new same-envelope instances, one more when the envelope grows."""
+    algorithm = "chunk1"
+    key = TRACE_KEYS_BATCHED[backend].format(alg=algorithm)
+    rng = np.random.default_rng(2000 + BACKENDS.index(backend))
+    As = [random_csr(rng, 22, 17, 0.2) for _ in range(2)]
+    Bs = [random_csr(rng, 17, 12, 0.25) for _ in range(2)]
+    plan = _plan(algorithm, As[0], Bs[0])
+    env = batch_envelope(As, Bs, plan)
+
+    before = TRACE_COUNTS[key]
+    chunked_spgemm_batched(As, Bs, plan, envelope=env, backend=backend)
+    assert TRACE_COUNTS[key] - before == 1
+
+    mid = TRACE_COUNTS[key]
+    chunked_spgemm_batched(As, Bs, plan, envelope=env, backend=backend)
+    assert TRACE_COUNTS[key] == mid
+
+    # fresh instances, same bucket envelope: served by the compiled program
+    As2 = [random_csr(rng, 22, 17, 0.1) for _ in range(2)]
+    Bs2 = [random_csr(rng, 17, 12, 0.15) for _ in range(2)]
+    assert env.dominates(batch_envelope(As2, Bs2, plan))
+    chunked_spgemm_batched(As2, Bs2, plan, envelope=env, backend=backend)
+    assert TRACE_COUNTS[key] == mid
+
+    # grown envelope (denser batch): exactly one more compile
+    As3 = [random_csr(rng, 22, 17, 0.5) for _ in range(2)]
+    Bs3 = [random_csr(rng, 17, 12, 0.5) for _ in range(2)]
+    env3 = env.union(batch_envelope(As3, Bs3, plan))
+    chunked_spgemm_batched(As3, Bs3, plan, envelope=env3, backend=backend)
+    assert TRACE_COUNTS[key] == mid + 1

@@ -225,3 +225,46 @@ def test_plan_chunks_models_padded_staged_footprint():
     sa, sb = staged_ab(plan)
     assert plan.fast_bytes_needed >= sa + sb
     assert plan.fast_bytes_needed != fast
+
+
+def test_planned_stats_sparse_lifts_dense_slab_bound(rng):
+    """Acceptance: on a wide, sparse-output geometry the dense-slab backend
+    model blows a fast-memory limit the plan was meant for, while the
+    CSR-native sparse model — scaling with the symbolic nnz caps, not with
+    n_cols — fits under it. This is the planner-side statement of why
+    backend="sparse" admits larger strips when C is sparse."""
+    from conftest import random_dense
+    from repro.core.chunking import instance_envelope
+    from repro.core.planner import (
+        ChunkPlan, planned_stats_dense_slab, planned_stats_sparse,
+    )
+    from repro.sparse.csr import csr_from_dense
+
+    A = csr_from_dense(random_dense(rng, 64, 64, 0.05))
+    B = csr_from_dense(random_dense(rng, 64, 512, 0.01))   # wide, very sparse C
+    plan = ChunkPlan("chunk1", (0, 32, 64), (0, 22, 43, 64), 0.0, 0.0)
+    env = instance_envelope(A, B, plan)
+
+    dense = planned_stats_dense_slab(plan, env)
+    sparse = planned_stats_sparse(plan, env)
+    fast_limit = 48 * 1024
+    assert dense.fast_bytes_needed > fast_limit
+    assert sparse.fast_bytes_needed < dense.fast_bytes_needed
+    assert sparse.fast_bytes_needed < fast_limit
+    # both models are their components' sum (no hidden terms)
+    for model in (dense, sparse):
+        assert model.fast_bytes_needed == (
+            2 * model.streamed_bytes + model.stationary_bytes
+            + model.c_accum_bytes + model.workspace_bytes)
+    # chunk2 keeps every strip's accumulator resident: n_ac x the C block
+    plan2 = ChunkPlan("chunk2", plan.p_ac, plan.p_b, 0.0, 0.0)
+    assert (planned_stats_sparse(plan2, env).c_accum_bytes
+            == plan.n_ac * sparse.c_accum_bytes)
+    # the sparse model is n_cols-independent at fixed caps: widening B only
+    # moves the dense model
+    import dataclasses
+    wide = dataclasses.replace(env, b_shape=(env.b_shape[0], 4096))
+    assert (planned_stats_sparse(plan, wide).fast_bytes_needed
+            == sparse.fast_bytes_needed)
+    assert (planned_stats_dense_slab(plan, wide).fast_bytes_needed
+            > dense.fast_bytes_needed)
