@@ -10,9 +10,10 @@ host-pinned — the paper reports 3.1x-14.7x.
 
 Executor lanes: ``run_loop_vs_scan`` (host loop vs device-resident lax.scan,
 CSV rows), ``run_scan_vs_pallas`` (scan vs the explicitly double-buffered
-Pallas backend), and ``run_dense_vs_sparse_accum`` (the dense-slab Pallas
-accumulator vs the CSR-native sparse-output backend across an output-density
-sweep, with both planner fast-memory models). The JSON lanes power
+Pallas backend), and ``run_accumulator_shootout`` (the three-way dense-slab
+vs ESC-sparse vs hash-probe accumulator comparison across an output-density
+sweep, with all three planner fast-memory models and the ``backend="auto"``
+pick per row). The JSON lanes power
 ``python benchmarks/chunking_bench.py [--smoke] [--lane ...]``, which prints
 one JSON document (the ``BENCH_chunking.json`` schema:
 ``{"bench": ..., "rows": [...]}``) that CI smoke-parses like the serving
@@ -196,21 +197,26 @@ def run_csv_scan_vs_pallas():
              row["pallas_us"], f"{row['pallas_vs_scan']}x_vs_scan")
 
 
-def run_dense_vs_sparse_accum(smoke: bool = False) -> dict:
-    """Dense-slab Pallas accumulator vs the CSR-native sparse-output backend
-    across an output-density sweep, as a machine-checkable JSON report.
+def run_accumulator_shootout(smoke: bool = False) -> dict:
+    """Three-way accumulator comparison — dense-slab Pallas vs ESC
+    sparse-output vs hash-probe — across an output-density sweep, as a
+    machine-checkable JSON report (the PR-4 ``dense_vs_sparse_accum`` lane
+    grown a third column).
 
     Fixed (A, plan, n_cols); B's density sweeps so nnz(C) / (m * n) sweeps.
-    Each row carries both measured runtimes *and* both planner fast-memory
-    models (``planned_stats_sparse`` vs ``planned_stats_dense_slab``): on CPU
-    interpret mode the runtimes only validate plumbing, but the byte models
-    are backend truth on any hardware — the report's ``crossover`` records
-    where each comparison flips in favor of the sparse accumulator, the
-    number ROADMAP tracks for strip sizing on real VMEM.
+    Each row carries the three measured runtimes *and* the three planner
+    fast-memory models (``planned_stats_dense_slab`` / ``planned_stats_sparse``
+    / ``planned_stats_hash``): on CPU interpret mode the runtimes only
+    validate plumbing, but the byte models are backend truth on any hardware.
+    ``byte_winner`` is the per-row argmin — asserted identical to what
+    ``backend="auto"`` resolves (``select_accumulator_backend``), so the lane
+    continuously measures the crossover densities the auto dispatch is
+    trusted with; the ``crossover`` block reports the largest swept density
+    at which each pairwise comparison still favors the compressed side.
     """
     from repro.core.chunking import instance_envelope
     from repro.core.planner import (
-        ChunkPlan, planned_stats_dense_slab, planned_stats_sparse,
+        ChunkPlan, backend_fast_models, select_accumulator_backend,
     )
     from repro.core.symbolic import strip_output_caps
     from repro.sparse.csr import csr_from_dense
@@ -237,63 +243,74 @@ def run_dense_vs_sparse_accum(smoke: bool = False) -> dict:
         c_pad = caps.c_pad
         c_nnz = sum(caps.strip_nnz)
         env = instance_envelope(A, B, plan, caps=caps)
-        sparse_model = planned_stats_sparse(plan, env)
-        dense_model = planned_stats_dense_slab(plan, env)
-        us_pallas = timeit(lambda: chunked_spgemm(A, B, plan, c_pad,
-                                                  backend="pallas"),
-                           repeats=repeats)
-        us_sparse = timeit(lambda: chunked_spgemm(A, B, plan, c_pad,
-                                                  backend="sparse"),
-                           repeats=repeats)
-        rows.append({
+        models = backend_fast_models(plan, env)
+        auto_pick = select_accumulator_backend(plan, env)
+        row = {
             "case": f"synthetic/{m}x{k}x{n}/db={db}",
             "c_density": round(c_nnz / float(m * n), 5),
-            "pallas_us": round(us_pallas, 1),
-            "sparse_us": round(us_sparse, 1),
-            "sparse_vs_pallas": round(us_pallas / us_sparse, 3)
-            if us_sparse else float("inf"),
-            "sparse_fast_bytes": sparse_model.fast_bytes_needed,
-            "dense_fast_bytes": dense_model.fast_bytes_needed,
-            "fast_bytes_ratio": round(
-                sparse_model.fast_bytes_needed
-                / dense_model.fast_bytes_needed, 3),
-        })
+        }
+        for backend in ("pallas", "sparse", "hash"):
+            us = timeit(lambda be=backend: chunked_spgemm(A, B, plan, c_pad,
+                                                          backend=be),
+                        repeats=repeats)
+            row[f"{backend}_us"] = round(us, 1)
+            row[f"{backend}_fast_bytes"] = models[backend].fast_bytes_needed
+        row["byte_winner"] = min(
+            ("pallas", "sparse", "hash"),
+            key=lambda be: row[f"{be}_fast_bytes"])
+        row["auto_backend"] = auto_pick
+        assert auto_pick == row["byte_winner"], (
+            f"auto dispatch disagrees with the byte argmin at {row['case']}")
+        row["sparse_vs_dense_bytes"] = round(
+            row["sparse_fast_bytes"] / row["pallas_fast_bytes"], 3)
+        row["hash_vs_dense_bytes"] = round(
+            row["hash_fast_bytes"] / row["pallas_fast_bytes"], 3)
+        row["hash_vs_esc_bytes"] = round(
+            row["hash_fast_bytes"] / row["sparse_fast_bytes"], 3)
+        rows.append(row)
     from repro.kernels.sparse_accum_spgemm import default_interpret
 
-    def crossover(sparse_wins):
-        """Largest swept C density at which the sparse backend still wins."""
-        winning = [r["c_density"] for r in rows if sparse_wins(r)]
+    def crossover(wins):
+        """Largest swept C density at which ``wins(row)`` still holds."""
+        winning = [r["c_density"] for r in rows if wins(r)]
         return max(winning) if winning else None
 
     return {
-        "bench": "chunking_dense_vs_sparse_accum",
+        "bench": "chunking_accumulator_shootout",
         "problem": f"synthetic/{m}x{k}x{n}",
         "interpret_mode": default_interpret(),
         "crossover": {
-            # sparse fast-memory model below the dense slab's
-            "fast_bytes_c_density": crossover(
-                lambda r: r["fast_bytes_ratio"] < 1.0),
-            # sparse measurably faster (CPU interpret: plumbing only)
-            "runtime_c_density": crossover(
-                lambda r: r["sparse_vs_pallas"] > 1.0),
+            # ESC byte model below the dense slab's
+            "sparse_vs_dense_c_density": crossover(
+                lambda r: r["sparse_vs_dense_bytes"] < 1.0),
+            # hash byte model below the dense slab's
+            "hash_vs_dense_c_density": crossover(
+                lambda r: r["hash_vs_dense_bytes"] < 1.0),
+            # hash byte model below ESC's (the shrunken-workspace claim)
+            "hash_vs_esc_c_density": crossover(
+                lambda r: r["hash_vs_esc_bytes"] < 1.0),
+        },
+        "byte_winner_by_density": {
+            str(r["c_density"]): r["byte_winner"] for r in rows
         },
         "rows": rows,
     }
 
 
-def run_csv_dense_vs_sparse_accum():
-    """The dense-vs-sparse-accum lane as driver CSV rows."""
-    report = run_dense_vs_sparse_accum()
+def run_csv_accumulator_shootout():
+    """The accumulator-shootout lane as driver CSV rows."""
+    report = run_accumulator_shootout()
     for row in report["rows"]:
-        emit(f"dense_vs_sparse_accum/{row['case']}"
+        emit(f"accumulator_shootout/{row['case']}"
              f"[c_density={row['c_density']}]",
-             row["sparse_us"],
-             f"{row['fast_bytes_ratio']}x_fast_bytes_vs_dense")
+             row["hash_us"],
+             f"winner={row['byte_winner']};"
+             f"hash_vs_esc={row['hash_vs_esc_bytes']}x_bytes")
 
 
 JSON_LANES = {
     "scan_vs_pallas": run_scan_vs_pallas,
-    "dense_vs_sparse_accum": run_dense_vs_sparse_accum,
+    "accumulator_shootout": run_accumulator_shootout,
 }
 
 

@@ -25,8 +25,8 @@ SUITES = {
     "serving": "benchmarks.spgemm_serving:run_suite",   # SpGEMMService vs naive
     "scan_vs_loop": "benchmarks.chunking_bench:run_loop_vs_scan",
     "scan_vs_pallas": "benchmarks.chunking_bench:run_csv_scan_vs_pallas",
-    "dense_vs_sparse_accum":
-        "benchmarks.chunking_bench:run_csv_dense_vs_sparse_accum",
+    "accumulator_shootout":
+        "benchmarks.chunking_bench:run_csv_accumulator_shootout",
 }
 
 

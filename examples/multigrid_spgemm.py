@@ -7,13 +7,14 @@ machine-dependent numbers and real execution for all algorithmic results.
 
 The chunked section runs through the ``chunked_spgemm`` backend dispatch:
 every backend in ``--backends`` (comma-separated; ``all`` = loop, scan,
-pallas, sparse) executes the same plan and is checked against the dense
-oracle, so the example doubles as an end-to-end demo of the executor stack —
-host loop oracle, device-resident lax.scan, double-buffered Pallas, and the
-CSR-native sparse-output accumulator.
+pallas, sparse, hash, auto) executes the same plan and is checked against the
+dense oracle, so the example doubles as an end-to-end demo of the executor
+stack — host loop oracle, device-resident lax.scan, double-buffered Pallas,
+the CSR-native ESC sparse-output accumulator, its hash-probe variant, and the
+planner-driven ``auto`` dispatch over the three accumulators.
 
   PYTHONPATH=src python examples/multigrid_spgemm.py [--problem brick3d]
-      [--size 6] [--backends scan,sparse]
+      [--size 6] [--backends scan,hash]
 """
 
 import argparse
@@ -31,7 +32,7 @@ from repro.core.planner import plan_chunks, row_bytes_csr
 from repro.sparse import multigrid
 from repro.sparse.csr import csr_to_dense
 
-ALL_BACKENDS = ("loop", "scan", "pallas", "sparse")
+ALL_BACKENDS = ("loop", "scan", "pallas", "sparse", "hash", "auto")
 
 
 def study(problem: str, n: int, backends=("scan",)):

@@ -28,7 +28,23 @@ fixed-capacity **CSR triple in VMEM** sized by the symbolic phase
 (``repro.core.symbolic``) instead of a dense ``[strip_rows, n]`` slab — the
 first backend whose fast-memory footprint scales with ``nnz(C)`` rather than
 ``strip_rows * n_cols`` (``repro.core.planner.planned_stats_sparse`` is the
-matching planner-side model).
+matching planner-side model). The fifth backend shrinks that backend's
+workspace: the ``chunk_*_hash`` executors run the same streaming schedule
+through ``repro.kernels.hash_accum_spgemm``, whose merge body is a per-row
+linear-probing hash table sized by the symbolic ``c_max_row_nnz`` — the
+workspace scales with the densest output row, not with the
+``strip_nnz_cap * b_max_row_nnz`` ESC expand size
+(``planner.planned_stats_hash``).
+
+``backend="auto"`` is the planner-driven dispatch over the three
+accumulators: ``planner.select_accumulator_backend(plan, envelope)`` compares
+the dense-slab (``planned_stats_dense_slab``), ESC
+(``planned_stats_sparse``) and hash (``planned_stats_hash``) peak-resident
+byte models and runs the smallest — dense slabs when C densifies (MXU
+tiles beat any compressed accumulator's bookkeeping), ESC when the expand
+stream is small relative to the row count, hash when outputs are wide but
+rows stay sparse. Ties break toward the dense slab. The
+``accumulator_shootout`` bench lane measures where the three models cross.
 
 Because a traced scan (or Pallas grid) cannot mutate Python-side counters,
 ChunkStats for these backends is *computed from the plan*: the uniform padding
@@ -63,7 +79,12 @@ from repro.core.chunking import (
     ChunkStats, _assemble, a_strips, b_chunks, batch_envelope,
 )
 from repro.core.kkmem import spgemm_ranged_impl
-from repro.core.planner import ChunkPlan
+from repro.core.planner import (
+    ChunkPlan, check_output_caps, hash_table_slots,
+    select_accumulator_backend,
+)
+from repro.core.symbolic import strip_output_caps
+from repro.kernels.hash_accum_spgemm import hash_accum_spgemm_stream
 from repro.kernels.ranged_spgemm import ranged_spgemm_stream
 from repro.kernels.sparse_accum_spgemm import sparse_accum_spgemm_stream
 from repro.sparse.csr import (
@@ -504,6 +525,36 @@ _SPARSE_CORES_BATCHED = {"knl": _knl_sparse_batched,
                          "chunk2": _chunk2_sparse_batched}
 
 
+def _make_hash_core(key: str, order: str):
+    """Launch core for the hash-probe kernel; ``table_size`` (the per-row
+    hash-table slot count, from the envelope's ``c_max_row_nnz``) is a static
+    jit argument, so two geometries differing only in the densest-output-row
+    bound compile separate tables — exactly the retrace the envelope's
+    ``c_max_row_nnz`` field exists to key."""
+
+    @partial(jax.jit, static_argnames=("table_size",))
+    def core(Ast: CSR, Bst: CSR, C0st: CSR, r0s, r1s, table_size: int):
+        TRACE_COUNTS[key] += 1
+        return hash_accum_spgemm_stream(Ast, Bst, C0st, r0s, r1s,
+                                        order=order, table_size=table_size)
+
+    return core
+
+
+_knl_hash = _make_hash_core("knl_hash", "chunk1")
+_chunk1_hash = _make_hash_core("chunk1_hash", "chunk1")
+_chunk2_hash = _make_hash_core("chunk2_hash", "chunk2")
+_knl_hash_batched = _make_hash_core("knl_hash_batched", "chunk1")
+_chunk1_hash_batched = _make_hash_core("chunk1_hash_batched", "chunk1")
+_chunk2_hash_batched = _make_hash_core("chunk2_hash_batched", "chunk2")
+
+_HASH_CORES = {"knl": _knl_hash, "chunk1": _chunk1_hash,
+               "chunk2": _chunk2_hash}
+_HASH_CORES_BATCHED = {"knl": _knl_hash_batched,
+                       "chunk1": _chunk1_hash_batched,
+                       "chunk2": _chunk2_hash_batched}
+
+
 def _sparse_strip_csrs(ip, ix, d, strip_rows: int, n_cols: int,
                        c_cap: int) -> list:
     """Wrap one batch element's kernel outputs ([n_ac, ...]) as strip CSRs."""
@@ -513,10 +564,17 @@ def _sparse_strip_csrs(ip, ix, d, strip_rows: int, n_cols: int,
     ]
 
 
-def _sparse_run(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int, core):
-    """Shared body of the three unbatched sparse executors: stage CSR strips
-    and chunks (knl is the 1-strip special case of the chunk1 order), launch,
-    and assemble the accumulated strip CSRs.
+def _sparse_run(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int, backend: str,
+                caps=None):
+    """Shared body of the unbatched sparse-output executors (ESC and hash):
+    stage CSR strips and chunks (knl is the 1-strip special case of the
+    chunk1 order), validate the realized output structure against the
+    capacities, launch, and assemble the accumulated strip CSRs.
+
+    ``caps`` is the symbolic phase's :class:`StripOutputCaps` when the caller
+    (the ``chunked_spgemm`` dispatch) already ran the expansion — the
+    symbolic module's amortization contract; recomputed here only for direct
+    executor calls.
 
     The per-copy event model is structurally the Pallas pipeline's
     (:func:`planned_stats_pallas`: stationary operand staged once per outer
@@ -524,6 +582,12 @@ def _sparse_run(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int, core):
     final writeback) — only the staged byte sizes differ: padded **CSR**
     footprints instead of dense slabs.
     """
+    if caps is None:
+        caps = strip_output_caps(A, B, plan.p_ac)
+    table = (hash_table_slots(caps.c_max_row_nnz) if backend == "hash"
+             else None)
+    check_output_caps(caps.strip_nnz, caps.c_max_row_nnz, c_pad, table,
+                      backend=backend, a_shape=A.shape, b_shape=B.shape)
     strips = a_strips(A, plan.p_ac)
     chunks = b_chunks(B, plan.p_b)
     Ast = csr_stack([csr_stack(strips)])
@@ -531,7 +595,13 @@ def _sparse_run(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int, core):
     r0s, r1s = plan.b_ranges()
     strip_rows = strips[0].n_rows
     C0 = _sparse_c0_stack(1, plan.n_ac, strip_rows, B.n_cols, c_pad, A.dtype)
-    ip, ix, d = core(Ast, Bst, C0, jnp.asarray(r0s), jnp.asarray(r1s))
+    if backend == "hash":
+        ip, ix, d = _HASH_CORES[plan.algorithm](
+            Ast, Bst, C0, jnp.asarray(r0s), jnp.asarray(r1s),
+            table_size=table)
+    else:
+        ip, ix, d = _SPARSE_CORES[plan.algorithm](
+            Ast, Bst, C0, jnp.asarray(r0s), jnp.asarray(r1s))
     stats = planned_stats_pallas(
         plan, chunks[0].nbytes(), strips[0].nbytes(),
         _c_strip_nbytes(strip_rows, c_pad, A.dtype))
@@ -539,16 +609,16 @@ def _sparse_run(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int, core):
     return _assemble(out, plan.p_ac, B.n_cols), stats
 
 
-def chunk_knl_sparse(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int):
-    return _sparse_run(A, B, plan, c_pad, _knl_sparse)
+def chunk_sparse(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int, caps=None):
+    """ESC sparse-output executor for any plan algorithm (``_sparse_run``
+    dispatches the core on ``plan.algorithm``, so unlike the scan/pallas
+    backends there is no per-algorithm staging difference to name)."""
+    return _sparse_run(A, B, plan, c_pad, "sparse", caps=caps)
 
 
-def chunk_gpu1_sparse(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int):
-    return _sparse_run(A, B, plan, c_pad, _chunk1_sparse)
-
-
-def chunk_gpu2_sparse(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int):
-    return _sparse_run(A, B, plan, c_pad, _chunk2_sparse)
+def chunk_hash(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int, caps=None):
+    """Hash-probe executor for any plan algorithm (see :func:`chunk_sparse`)."""
+    return _sparse_run(A, B, plan, c_pad, "hash", caps=caps)
 
 
 # ---------------------------------------------------------------------------
@@ -558,7 +628,7 @@ def chunk_gpu2_sparse(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int):
 
 def chunked_spgemm_batched(As, Bs, plan: ChunkPlan, c_pad: int | None = None,
                            envelope: GeometryEnvelope | None = None,
-                           backend: str = "scan"):
+                           backend: str = "scan", validate_caps: bool = True):
     """Run the batched executor over stacked problem instances sharing one plan.
 
     Instances must share shapes and dtype but may differ in sparsity
@@ -578,7 +648,19 @@ def chunked_spgemm_batched(As, Bs, plan: ChunkPlan, c_pad: int | None = None,
     ``sparse_accum_spgemm_stream`` launch — the same batch-on-the-grid DMA
     schedule, but accumulating into fixed-capacity CSR scratch sized by the
     envelope's ``c_pad`` (its fast-memory footprint scales with ``nnz(C)``,
-    not ``strip_rows * n_cols``).
+    not ``strip_rows * n_cols``); ``backend="hash"`` swaps that kernel's ESC
+    merge for the per-row linear-probing hash tables sized by the envelope's
+    ``c_max_row_nnz``; ``backend="auto"`` resolves to the accumulator
+    (pallas/sparse/hash) whose ``planner`` byte model is smallest under the
+    batch envelope (``select_accumulator_backend``).
+
+    ``validate_caps`` (sparse/hash only) checks every instance's exact
+    realized output structure against the envelope capacities and raises a
+    loud ``ValueError`` on overflow. Callers whose envelopes dominate the
+    instances *by construction* — the serving layer, whose bucket envelopes
+    start from exact submit-time instance envelopes and only ever grow by
+    union/quantization — may pass ``False`` to skip the per-call host
+    symbolic expansion the check costs.
 
     Returns ``(list_of_C, stats)`` where ``stats`` is the per-instance modeled
     copy accounting at the *envelope-padded* staged sizes (identical across the
@@ -589,7 +671,7 @@ def chunked_spgemm_batched(As, Bs, plan: ChunkPlan, c_pad: int | None = None,
         raise ValueError("need equal, nonzero numbers of A and B instances")
     if plan.algorithm not in ("knl", "chunk1", "chunk2"):
         raise ValueError(f"unsupported algorithm {plan.algorithm!r}")
-    if backend not in ("scan", "pallas", "sparse"):
+    if backend not in ("scan", "pallas", "sparse", "hash", "auto"):
         raise ValueError(f"unknown backend {backend!r}")
     for A, B in zip(As, Bs):
         if A.shape != As[0].shape or B.shape != Bs[0].shape:
@@ -597,8 +679,14 @@ def chunked_spgemm_batched(As, Bs, plan: ChunkPlan, c_pad: int | None = None,
                 "batched instances must share shapes: "
                 f"{A.shape}x{B.shape} vs {As[0].shape}x{Bs[0].shape}"
             )
+    caps_list = None
     if envelope is None:
-        envelope = batch_envelope(As, Bs, plan, c_pad=c_pad)
+        # the per-instance symbolic expansions feeding the union envelope
+        # are exactly what cap validation needs — run them once
+        caps_list = [strip_output_caps(A, B, plan.p_ac)
+                     for A, B in zip(As, Bs)]
+        envelope = batch_envelope(As, Bs, plan, c_pad=c_pad,
+                                  caps_list=caps_list)
     elif c_pad is not None and c_pad != envelope.c_pad:
         raise ValueError(
             f"conflicting c_pad={c_pad} vs envelope.c_pad={envelope.c_pad}"
@@ -608,6 +696,8 @@ def chunked_spgemm_batched(As, Bs, plan: ChunkPlan, c_pad: int | None = None,
             f"envelope shapes {envelope.a_shape}x{envelope.b_shape} do not "
             f"match instances {As[0].shape}x{Bs[0].shape}"
         )
+    if backend == "auto":
+        backend = select_accumulator_backend(plan, envelope)
     c_pad = envelope.c_pad
     r0s, r1s = plan.b_ranges()
     r0s, r1s = jnp.asarray(r0s), jnp.asarray(r1s)
@@ -617,7 +707,25 @@ def chunked_spgemm_batched(As, Bs, plan: ChunkPlan, c_pad: int | None = None,
     Bst = csr_stack([csr_stack(cl) for cl in chunk_lists])   # [batch, n_b, ...]
     chunk_nbytes = chunk_lists[0][0].nbytes()
 
-    if backend == "sparse":
+    if backend in ("sparse", "hash"):
+        # the table size is a compile key, so it derives from the envelope
+        # alone, never from the per-call instances. A zero c_max_row_nnz is
+        # exact (empty output, 1-slot tables) when the symbolic phase ran —
+        # witnessed by c_nnz_cap, whose rounding floor makes it nonzero
+        # whenever computed; only a legacy both-zero envelope falls back to
+        # the always-valid n_cols bound.
+        table = None
+        if backend == "hash":
+            table = hash_table_slots(
+                envelope.c_max_row_nnz if envelope.c_nnz_cap else n_cols)
+        if validate_caps:
+            if caps_list is None:
+                caps_list = [strip_output_caps(A, B, plan.p_ac)
+                             for A, B in zip(As, Bs)]
+            for i, (A, caps) in enumerate(zip(As, caps_list)):
+                check_output_caps(caps.strip_nnz, caps.c_max_row_nnz, c_pad,
+                                  table, backend=backend, a_shape=A.shape,
+                                  b_shape=Bs[i].shape, instance=i)
         # uniform across all three algorithms: knl is the 1-strip special
         # case (p_ac == (0, n_rows)), so every instance stages as strips
         strip_lists = [a_strips(A, plan.p_ac, envelope=envelope) for A in As]
@@ -625,8 +733,12 @@ def chunked_spgemm_batched(As, Bs, plan: ChunkPlan, c_pad: int | None = None,
         strip_rows = envelope.strip_rows
         C0 = _sparse_c0_stack(len(As), plan.n_ac, strip_rows, n_cols, c_pad,
                               dtype)
-        ip, ix, d = _SPARSE_CORES_BATCHED[plan.algorithm](
-            Ast, Bst, C0, r0s, r1s)
+        if backend == "hash":
+            ip, ix, d = _HASH_CORES_BATCHED[plan.algorithm](
+                Ast, Bst, C0, r0s, r1s, table_size=table)
+        else:
+            ip, ix, d = _SPARSE_CORES_BATCHED[plan.algorithm](
+                Ast, Bst, C0, r0s, r1s)
         stats = planned_stats_pallas(
             plan, chunk_nbytes, strip_lists[0][0].nbytes(),
             _c_strip_nbytes(strip_rows, c_pad, dtype))

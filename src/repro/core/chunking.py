@@ -136,13 +136,19 @@ def instance_envelope(A: CSR, B: CSR, plan: ChunkPlan,
     )
 
 
-def batch_envelope(As, Bs, plan: ChunkPlan,
-                   c_pad: int | None = None) -> GeometryEnvelope:
+def batch_envelope(As, Bs, plan: ChunkPlan, c_pad: int | None = None,
+                   caps_list=None) -> GeometryEnvelope:
     """Union of per-instance envelopes: the smallest shared padded geometry a
     heterogeneous batch can be repadded to (``c_pad`` overrides the symbolic
-    default for every instance when given)."""
+    default for every instance when given). Callers that already ran the
+    symbolic phase per instance pass its ``StripOutputCaps`` as ``caps_list``
+    to avoid repeating the expansions."""
+    As, Bs = list(As), list(Bs)
+    if caps_list is None:
+        caps_list = [None] * len(As)
     return GeometryEnvelope.batch(
-        instance_envelope(A, B, plan, c_pad=c_pad) for A, B in zip(As, Bs)
+        instance_envelope(A, B, plan, c_pad=c_pad, caps=caps)
+        for (A, B), caps in zip(zip(As, Bs), caps_list)
     )
 
 
@@ -266,11 +272,24 @@ def chunked_spgemm(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int | None = None,
     the per-strip accumulator is a fixed-capacity CSR scratch sized by the
     symbolic phase — fast-memory footprint scales with ``nnz(C)``, and
     ``c_pad`` must bound every strip's exact output nnz, which the default
-    symbolic ``c_pad`` does); ``"loop"`` is the host-driven Python loop,
-    retained as the bitwise oracle for the scan path.
+    symbolic ``c_pad`` does — undersized caps raise a planner-level
+    ``ValueError`` instead of silently dropping entries); ``"hash"`` swaps
+    that kernel's ESC merge for per-row linear-probing hash tables sized by
+    the symbolic ``c_max_row_nnz`` (workspace scales with the densest output
+    row, not the expand size); ``"auto"`` lets the planner pick the
+    accumulator per geometry — the smallest of the three resident byte
+    models (``planner.select_accumulator_backend``); ``"loop"`` is the
+    host-driven Python loop, retained as the bitwise oracle for the scan
+    path.
     """
+    # one symbolic expansion serves the default c_pad, the auto resolve, and
+    # the sparse/hash executors' overflow check (the symbolic module's
+    # amortize-the-host-pass contract)
+    caps = None
+    if c_pad is None or backend in ("auto", "sparse", "hash"):
+        caps = strip_output_caps(A, B, plan.p_ac)
     if c_pad is None:
-        c_pad = default_c_pad(A, B, plan)
+        c_pad = caps.c_pad
     if plan.algorithm == "whole_fast":
         stats = ChunkStats("whole_fast", 1, 1)
         stats.add_in(A.nbytes() + B.nbytes())
@@ -278,6 +297,11 @@ def chunked_spgemm(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int | None = None,
         stats.add_out(C.nbytes())
         stats.kernel_calls = 1
         return C, stats
+    if backend == "auto":
+        from repro.core.planner import select_accumulator_backend
+
+        backend = select_accumulator_backend(
+            plan, instance_envelope(A, B, plan, c_pad=c_pad, caps=caps))
     if backend == "scan":
         from repro.core.chunk_stream import (
             chunk_knl_scan, chunk_gpu1_scan, chunk_gpu2_scan,
@@ -291,11 +315,13 @@ def chunked_spgemm(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int | None = None,
         table = {"knl": chunk_knl_pallas, "chunk1": chunk_gpu1_pallas,
                  "chunk2": chunk_gpu2_pallas}
     elif backend == "sparse":
-        from repro.core.chunk_stream import (
-            chunk_knl_sparse, chunk_gpu1_sparse, chunk_gpu2_sparse,
-        )
-        table = {"knl": chunk_knl_sparse, "chunk1": chunk_gpu1_sparse,
-                 "chunk2": chunk_gpu2_sparse}
+        from repro.core.chunk_stream import chunk_sparse
+
+        table = dict.fromkeys(("knl", "chunk1", "chunk2"), chunk_sparse)
+    elif backend == "hash":
+        from repro.core.chunk_stream import chunk_hash
+
+        table = dict.fromkeys(("knl", "chunk1", "chunk2"), chunk_hash)
     elif backend == "loop":
         table = {"knl": chunk_knl, "chunk1": chunk_gpu1, "chunk2": chunk_gpu2}
     else:
@@ -303,4 +329,6 @@ def chunked_spgemm(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int | None = None,
     fn = table.get(plan.algorithm)
     if fn is None:
         raise ValueError(f"unknown algorithm {plan.algorithm!r}")
+    if backend in ("sparse", "hash"):
+        return fn(A, B, plan, c_pad, caps=caps)
     return fn(A, B, plan, c_pad)

@@ -242,6 +242,34 @@ def planned_stats_dense_slab(plan: ChunkPlan, envelope) -> BackendFastModel:
     )
 
 
+def _csr_accum_model(plan: ChunkPlan, envelope, backend: str,
+                     workspace: float) -> BackendFastModel:
+    """Shared resident-footprint shape of the CSR-scratch accumulators (ESC
+    and hash): staged pieces are padded CSR triples, the C accumulator is
+    the fixed-capacity scratch at the symbolic ``c_pad`` (all ``n_ac``
+    strips resident in the Chunk2 order), and only the per-step
+    ``workspace`` term differs between the backends. One definition, so the
+    models ``select_accumulator_backend`` compares cannot drift apart."""
+    itemsize = int(np.dtype(envelope.dtype).itemsize)
+    chunk_csr = _csr_staged_bytes(envelope.chunk_rows, envelope.chunk_nnz_cap,
+                                  itemsize)
+    strip_csr = _csr_staged_bytes(envelope.strip_rows, envelope.strip_nnz_cap,
+                                  itemsize)
+    c_csr = _csr_staged_bytes(envelope.strip_rows, envelope.c_pad, itemsize)
+    if plan.algorithm == "chunk2":
+        streamed, stationary = strip_csr, chunk_csr
+        c_accum = plan.n_ac * c_csr
+    else:                                            # knl / chunk1
+        streamed, stationary = chunk_csr, strip_csr
+        c_accum = c_csr
+    return BackendFastModel(
+        backend=backend,
+        fast_bytes_needed=2 * streamed + stationary + c_accum + workspace,
+        streamed_bytes=streamed, stationary_bytes=stationary,
+        c_accum_bytes=c_accum, workspace_bytes=workspace,
+    )
+
+
 def planned_stats_sparse(plan: ChunkPlan, envelope) -> BackendFastModel:
     """The sparse-output (``backend="sparse"``) resident footprint: every
     staged piece is a padded CSR triple and the C accumulator is the
@@ -250,29 +278,110 @@ def planned_stats_sparse(plan: ChunkPlan, envelope) -> BackendFastModel:
     workspace term is the expand-sort-compress product buffer
     (``strip_nnz_cap * b_max_row_nnz + c_pad`` slots of row, column, value),
     the price of compressed accumulation that the crossover bench lane
-    (``benchmarks/chunking_bench.py dense_vs_sparse_accum``) measures against
-    the dense slab."""
+    (``benchmarks/chunking_bench.py --lane accumulator_shootout``) measures
+    against the dense slab and the hash tables."""
     itemsize = int(np.dtype(envelope.dtype).itemsize)
-    chunk_csr = _csr_staged_bytes(envelope.chunk_rows, envelope.chunk_nnz_cap,
-                                  itemsize)
-    strip_csr = _csr_staged_bytes(envelope.strip_rows, envelope.strip_nnz_cap,
-                                  itemsize)
-    c_csr = _csr_staged_bytes(envelope.strip_rows, envelope.c_pad, itemsize)
     esc_slots = (max(envelope.strip_nnz_cap, 1)
                  * max(envelope.b_max_row_nnz, 1) + envelope.c_pad)
     workspace = float(esc_slots * (4 + 4 + itemsize))
-    if plan.algorithm == "chunk2":
-        streamed, stationary = strip_csr, chunk_csr
-        c_accum = plan.n_ac * c_csr
-    else:                                            # knl / chunk1
-        streamed, stationary = chunk_csr, strip_csr
-        c_accum = c_csr
-    return BackendFastModel(
-        backend="sparse",
-        fast_bytes_needed=2 * streamed + stationary + c_accum + workspace,
-        streamed_bytes=streamed, stationary_bytes=stationary,
-        c_accum_bytes=c_accum, workspace_bytes=workspace,
-    )
+    return _csr_accum_model(plan, envelope, "sparse", workspace)
+
+
+def hash_table_slots(c_max_row_nnz: int) -> int:
+    """Per-row hash-table capacity of the hash-probe backend: the smallest
+    power of two holding the densest C row. Power-of-two so the probe wrap is
+    a mask (``slot & (T - 1)``); >= ``c_max_row_nnz`` so — the symbolic bound
+    being exact — insertion can never fail to find its key or a free slot.
+
+    The single source of truth: the kernel (``kernels/hash_accum_spgemm``),
+    the byte model (:func:`planned_stats_hash`) and the executors all size
+    the table through this function, so the planner's workspace term is the
+    table the kernel actually allocates."""
+    v = max(int(c_max_row_nnz), 1)
+    return 1 << (v - 1).bit_length()
+
+
+def planned_stats_hash(plan: ChunkPlan, envelope) -> BackendFastModel:
+    """The hash-probe (``backend="hash"``) resident footprint: staged CSR
+    triples and the CSR accumulator scratch exactly as in
+    :func:`planned_stats_sparse` — the two backends share the streaming
+    schedule — but the per-step workspace is the per-row hash table
+    (``strip_rows x hash_table_slots(c_max_row_nnz)`` key/value pairs,
+    Nagasaka & Azad's compressed accumulator) instead of the ESC
+    expand-sort-compress buffer. The workspace therefore scales with the
+    densest *output* row, not with ``strip_nnz_cap * b_max_row_nnz`` — the
+    term that erodes the ESC backend's VMEM win as outputs densify."""
+    itemsize = int(np.dtype(envelope.dtype).itemsize)
+    # c_max_row_nnz == 0 is *exact* (empty output, 1-slot tables) whenever
+    # the symbolic phase ran, which c_nnz_cap witnesses (its rounding floor
+    # makes it nonzero when computed); only a legacy both-zero envelope
+    # falls back to the always-valid n_cols bound — keeping this model equal
+    # to the table the executors actually allocate
+    slots = hash_table_slots(
+        envelope.c_max_row_nnz if envelope.c_nnz_cap else envelope.b_shape[1])
+    workspace = float(envelope.strip_rows * slots * (4 + itemsize))
+    return _csr_accum_model(plan, envelope, "hash", workspace)
+
+
+# deterministic evaluation (and tie-break) order of the auto dispatch
+ACCUMULATOR_BACKENDS = ("pallas", "sparse", "hash")
+
+_BACKEND_MODELS = {
+    "pallas": planned_stats_dense_slab,
+    "sparse": planned_stats_sparse,
+    "hash": planned_stats_hash,
+}
+
+
+def backend_fast_models(plan: ChunkPlan, envelope) -> dict:
+    """All three accumulator byte models under one plan + envelope."""
+    return {b: _BACKEND_MODELS[b](plan, envelope)
+            for b in ACCUMULATOR_BACKENDS}
+
+
+def select_accumulator_backend(plan: ChunkPlan, envelope) -> str:
+    """The ``backend="auto"`` rule: run the accumulator whose modeled peak
+    resident fast-memory footprint is smallest under this plan + envelope —
+    dense slab (``pallas``) vs ESC CSR scratch (``sparse``) vs hash probe
+    (``hash``). Ties break toward the earlier entry of
+    ``ACCUMULATOR_BACKENDS`` (dense slab first: on real hardware it is the
+    MXU-shaped one). This is the per-geometry accumulator choice ROADMAP
+    asked the planner to make instead of picking one unconditionally."""
+    models = backend_fast_models(plan, envelope)
+    return min(ACCUMULATOR_BACKENDS,
+               key=lambda b: models[b].fast_bytes_needed)
+
+
+def check_output_caps(strip_nnz, c_max_row_nnz: int, c_pad: int,
+                      row_cap: int | None, *, backend: str, a_shape: tuple,
+                      b_shape: tuple, instance: int | None = None) -> None:
+    """Fail loudly when a realized output structure exceeds the capacities a
+    sparse-output kernel was sized with.
+
+    The ESC and hash kernels silently *drop or misplace* entries past their
+    fixed capacities (the scatter's overflow bucket, a full hash table), so
+    an under-capped launch must be a planner-level :class:`ValueError` naming
+    the offending geometry, not wrong values. ``strip_nnz``/``c_max_row_nnz``
+    are the exact realized structure (symbolic phase); ``c_pad`` is the CSR
+    scratch capacity and ``row_cap`` (hash only, ``None`` otherwise) the
+    per-row hash-table slot count."""
+    where = (f"batch instance {instance} of " if instance is not None else "")
+    geom = f"{where}A{a_shape} x B{b_shape}"
+    worst = max(strip_nnz) if strip_nnz else 0
+    if worst > c_pad:
+        raise ValueError(
+            f"backend={backend!r}: realized strip output nnz {worst} exceeds "
+            f"the accumulator capacity c_pad={c_pad} for {geom}; the kernel "
+            f"would silently drop entries — raise c_pad (the symbolic default "
+            f"from strip_output_caps is always sufficient)"
+        )
+    if row_cap is not None and c_max_row_nnz > row_cap:
+        raise ValueError(
+            f"backend={backend!r}: densest realized C row "
+            f"({c_max_row_nnz} nnz) exceeds the hash-table capacity "
+            f"{row_cap} slots for {geom}; insertion would overflow — size "
+            f"the table from the exact symbolic c_max_row_nnz"
+        )
 
 
 def plan_knl(A: CSR, B: CSR, fast_limit_bytes: float,

@@ -60,8 +60,15 @@ def _kernel(r0s_ref, r1s_ref, stat_ip, stat_ix, stat_d,
             c0_ip, c0_ix, c0_d, out_ip, out_ix, out_d,
             buf_ip, buf_ix, buf_d, sems, *, order: str, batch: int,
             n_ac: int, n_b: int, strip_rows: int, chunk_rows: int,
-            k_cols: int, n_cols: int, a_mrn: int, b_mrn: int, c_cap: int):
-    """One grid step: DMA-stream a CSR triple, ESC-merge into the CSR scratch.
+            k_cols: int, n_cols: int, a_mrn: int, b_mrn: int, c_cap: int,
+            merge_fn):
+    """One grid step: DMA-stream a CSR triple, merge into the CSR scratch.
+
+    ``merge_fn(A, B_chunk, r0, r1, C_prev, c_cap) -> CSR`` is the pluggable
+    accumulator body: the ESC sorted merge (``spgemm_ranged_impl``, the
+    default) or the linear-probing hash merge
+    (``repro.kernels.hash_accum_spgemm.hash_merge_impl``). The streaming
+    schedule around it is identical.
 
     Grid is (batch, outer, inner); ``order`` fixes which operand streams:
       chunk1: outer = strips, inner = chunks  -> B triples stream through VMEM
@@ -130,8 +137,7 @@ def _kernel(r0s_ref, r1s_ref, stat_ip, stat_ix, stat_d,
         jnp.where(first, prev[2], prev[5]),
         (strip_rows, n_cols), c_cap,
     )
-    merged = spgemm_ranged_impl(A, Bc, r0s_ref[j], r1s_ref[j], c_prev,
-                                c_pad=c_cap)
+    merged = merge_fn(A, Bc, r0s_ref[j], r1s_ref[j], c_prev, c_cap)
     if order == "chunk1":
         out_ip[0, 0] = merged.indptr
         out_ix[0, 0] = merged.indices
@@ -144,7 +150,8 @@ def _kernel(r0s_ref, r1s_ref, stat_ip, stat_ix, stat_d,
 
 def sparse_accum_spgemm_stream(Ast: CSR, Bst: CSR, C0st: CSR,
                                r0s: jax.Array, r1s: jax.Array, *, order: str,
-                               interpret: bool | None = None):
+                               interpret: bool | None = None,
+                               merge_fn=None):
     """Streamed sparse-output multiply over stacked CSR strips and chunks.
 
     Args:
@@ -160,10 +167,17 @@ def sparse_accum_spgemm_stream(Ast: CSR, Bst: CSR, C0st: CSR,
       r0s, r1s: i32[n_b] global row range of each B chunk (scalar-prefetched).
       order: "chunk1" (strips outer, B streamed) or "chunk2" (chunks outer,
         A streamed; per-strip accumulators persist in the VMEM out block).
+      merge_fn: per-step accumulator body ``(A, B_chunk, r0, r1, C_prev,
+        c_cap) -> CSR``; defaults to the ESC sorted merge
+        (``spgemm_ranged_impl``). ``repro.kernels.hash_accum_spgemm`` passes
+        its linear-probing hash merge through here, reusing this exact
+        streaming schedule.
 
     Returns ``(indptr, indices, data)`` with leading ``[batch, n_ac]`` axes —
     the accumulated C strip CSRs at capacity ``c_cap``.
     """
+    if merge_fn is None:
+        merge_fn = spgemm_ranged_impl
     if order not in ("chunk1", "chunk2"):
         raise ValueError(f"unknown streaming order {order!r}")
     batch, n_ac = Ast.indptr.shape[0], Ast.indptr.shape[1]
@@ -228,7 +242,7 @@ def sparse_accum_spgemm_stream(Ast: CSR, Bst: CSR, C0st: CSR,
         _kernel, order=order, batch=batch, n_ac=n_ac, n_b=n_b,
         strip_rows=strip_rows, chunk_rows=chunk_rows, k_cols=k_cols,
         n_cols=n_cols, a_mrn=Ast.max_row_nnz, b_mrn=Bst.max_row_nnz,
-        c_cap=c_cap,
+        c_cap=c_cap, merge_fn=merge_fn,
     )
     out_shape = (
         jax.ShapeDtypeStruct((batch, n_ac, strip_rows + 1), jnp.int32),

@@ -21,9 +21,13 @@ recompilation. ``SpGEMMService`` amortizes all three:
     its envelope) instead of compiling program #budget+1;
   * ``backend`` selects the bucket executable: the vmapped ``lax.scan``
     cores (default), the Pallas ranged-SpGEMM kernel with explicit
-    double-buffered chunk prefetch (``backend="pallas"``), or the CSR-native
+    double-buffered chunk prefetch (``backend="pallas"``), the CSR-native
     sparse-output kernel (``backend="sparse"``, fast-memory footprint scaling
-    with ``nnz(C)``) — every bucket picks up the selected kernel unchanged;
+    with ``nnz(C)``), its hash-probe variant (``backend="hash"``, workspace
+    scaling with the densest output row), or ``backend="auto"`` — each
+    bucket resolves to the accumulator whose planner byte model is smallest
+    under *that bucket's* envelope, so one service can serve dense-output
+    buckets on the slab kernel and wide-sparse buckets on hash;
   * responses report per-request latency, the executed (padded) microbatch
     width, and the modeled fast<->slow :class:`ChunkStats` copy traffic at
     the envelope-padded staged sizes.
@@ -109,7 +113,8 @@ class SpGEMMService:
     that fits, bounding both padding waste and per-bucket compiles),
     ``retrace_budget`` the maximum number of distinct compiled buckets, and
     ``backend`` the executor every bucket runs (``"scan"`` | ``"pallas"`` |
-    ``"sparse"``).
+    ``"sparse"`` | ``"hash"`` | ``"auto"``; auto resolves per bucket from
+    the planner byte models).
     """
 
     def __init__(self, plan: ChunkPlan | None = None, *,
@@ -120,7 +125,7 @@ class SpGEMMService:
             raise ValueError("need a fixed plan or fast_limit_bytes to plan by")
         if max_batch < 1 or quantum < 1 or retrace_budget < 1:
             raise ValueError("quantum, max_batch, retrace_budget must be >= 1")
-        if backend not in ("scan", "pallas", "sparse"):
+        if backend not in ("scan", "pallas", "sparse", "hash", "auto"):
             raise ValueError(f"unknown backend {backend!r}")
         self._plan = plan
         self._fast_limit = fast_limit_bytes
@@ -223,8 +228,16 @@ class SpGEMMService:
 
     def _execute_bucket(self, bucket: _Bucket) -> list:
         """Drain one bucket in ladder-width microbatches; returns responses."""
-        suffix = {"pallas": "pallas_batched",
-                  "sparse": "sparse_batched"}.get(self.backend, "batched")
+        backend = self.backend
+        if backend == "auto":
+            # per-bucket resolution: the envelope is the geometry, so the
+            # accumulator choice is stable across the bucket's lifetime
+            # (until a budget merge grows the envelope — then it re-resolves)
+            from repro.core.planner import select_accumulator_backend
+
+            backend = select_accumulator_backend(bucket.plan, bucket.envelope)
+        suffix = {"pallas": "pallas_batched", "sparse": "sparse_batched",
+                  "hash": "hash_batched"}.get(backend, "batched")
         counter = f"{bucket.plan.algorithm}_{suffix}"
         responses = []
         while bucket.queue:
@@ -239,9 +252,15 @@ class SpGEMMService:
             bucket.widths_used.add(width)
             traces0 = TRACE_COUNTS[counter]
             t0 = time.perf_counter()
+            # validate_caps=False: every request's exact instance envelope
+            # was computed at submit time and its bucket envelope dominates
+            # it by construction (domination check, union growth, quantize-
+            # only-up), so the batched path's per-instance symbolic re-
+            # expansion would be pure overhead on the hot path
             Cs, stats = chunked_spgemm_batched(
                 [r.A for r in padded], [r.B for r in padded],
-                bucket.plan, envelope=bucket.envelope, backend=self.backend,
+                bucket.plan, envelope=bucket.envelope, backend=backend,
+                validate_caps=False,
             )
             jax.block_until_ready([(C.indptr, C.indices, C.data) for C in Cs])
             t1 = time.perf_counter()

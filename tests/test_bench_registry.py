@@ -1,0 +1,35 @@
+"""Bench-driver registry hygiene: every lane listed exactly once, JSON lanes
+wired through the driver, and the CI-parsed lanes present under the names the
+workflow invokes — the drift this guards against is a renamed lane leaving a
+stale SUITES entry (double-run) or none (silently dropped from full runs).
+"""
+
+import collections
+
+from benchmarks.chunking_bench import JSON_LANES
+from benchmarks.run import SUITES, _resolve
+
+
+def test_suites_list_every_lane_exactly_once():
+    """Lane names are unique by dict construction; the drift that can happen
+    is two names pointing at the same module:function (one lane run twice
+    per full sweep)."""
+    specs = collections.Counter(SUITES.values())
+    dupes = {spec: n for spec, n in specs.items() if n > 1}
+    assert not dupes, f"lanes registered more than once: {dupes}"
+
+
+def test_every_suite_spec_resolves():
+    for name, spec in SUITES.items():
+        fn = _resolve(spec)
+        assert callable(fn), f"{name}: {spec} did not resolve to a callable"
+
+
+def test_json_lanes_have_driver_entries():
+    """Each chunking JSON lane (what `--lane` and the CI smoke parse run)
+    also runs under a full `python -m benchmarks.run` via a CSV wrapper."""
+    for lane in JSON_LANES:
+        assert lane in SUITES, f"JSON lane {lane!r} missing from run.SUITES"
+    assert "accumulator_shootout" in JSON_LANES
+    assert "dense_vs_sparse_accum" not in SUITES, \
+        "stale pre-shootout lane name still registered"

@@ -1,0 +1,88 @@
+"""Property tests: the symbolic phase's output caps are *exact*.
+
+Both sparse-output backends (ESC and hash) size fixed-capacity VMEM scratch —
+the CSR accumulator at ``c_pad``/``c_nnz_cap``, the per-row hash tables at
+``hash_table_slots(c_max_row_nnz)`` — from ``repro.core.symbolic``. Their
+no-overflow guarantee is exactly the claim tested here: the symbolic counts
+equal the **realized** output structure of the loop oracle (and of an
+independent boolean-pattern product, which is immune to numeric
+cancellation), across random ``csr_pair`` draws. Follows the
+``tests/conftest.py`` hypothesis-optional pattern: with hypothesis absent the
+``@given(csr_pair())`` tests run over the seeded parametrize fallback.
+"""
+
+import numpy as np
+
+from repro.core.chunking import chunked_spgemm, default_c_pad
+from repro.core.planner import ChunkPlan, hash_table_slots
+from repro.core.symbolic import (
+    _round_up, spgemm_structure_host, strip_output_caps,
+)
+from repro.sparse.csr import csr_to_dense
+from conftest import csr_pair, given, settings
+
+
+def _pattern_structure(A, B):
+    """Independent structural oracle: boolean pattern product (cancellation-
+    proof, unlike a value product)."""
+    pa = np.asarray(csr_to_dense(A)) != 0
+    pb = np.asarray(csr_to_dense(B)) != 0
+    pc = pa.astype(np.int64) @ pb.astype(np.int64) > 0
+    return pc.sum(axis=1)
+
+
+def _thirds(n):
+    return (0, n) if n < 3 else (0, n // 3, 2 * n // 3, n)
+
+
+@settings(deadline=None, max_examples=20)
+@given(csr_pair())
+def test_symbolic_structure_matches_pattern_product(pair):
+    """per_row_nnz / c_nnz / c_max_row_nnz are exactly the boolean-pattern
+    product's realized structure — no over- or under-estimate."""
+    A, B = pair
+    s = spgemm_structure_host(A, B)
+    per_row = _pattern_structure(A, B)
+    np.testing.assert_array_equal(np.asarray(s.per_row_nnz), per_row)
+    assert s.c_nnz == int(per_row.sum())
+    assert s.c_max_row_nnz == (int(per_row.max()) if per_row.size else 0)
+
+
+@settings(deadline=None, max_examples=10)
+@given(csr_pair(max_dim=16))
+def test_symbolic_structure_matches_loop_oracle(pair):
+    """The loop executor's realized output structure (its CSR keeps every
+    structural entry, even value-cancelled ones) equals the symbolic counts
+    row for row — the invariant that makes the fixed-capacity accumulators
+    overflow-free."""
+    A, B = pair
+    plan = ChunkPlan("chunk1", _thirds(A.n_rows), _thirds(B.n_rows), 0.0, 0.0)
+    C, _ = chunked_spgemm(A, B, plan, default_c_pad(A, B, plan),
+                          backend="loop")
+    realized = np.asarray(C.indptr[1:]) - np.asarray(C.indptr[:-1])
+    s = spgemm_structure_host(A, B)
+    np.testing.assert_array_equal(realized, np.asarray(s.per_row_nnz))
+
+
+@settings(deadline=None, max_examples=20)
+@given(csr_pair())
+def test_strip_output_caps_exact_partial_sums(pair):
+    """strip_output_caps is the symbolic structure re-expressed per strip:
+    strip nnz are exact partial sums (so they total c_nnz), c_pad is the
+    rounded largest strip, c_nnz_cap the rounded total, and the hash-table
+    sizing from c_max_row_nnz always covers the densest realized row."""
+    A, B = pair
+    p_ac = _thirds(A.n_rows)
+    caps = strip_output_caps(A, B, p_ac)
+    s = spgemm_structure_host(A, B)
+    per_row = np.asarray(s.per_row_nnz)
+    expected = tuple(int(per_row[lo:hi].sum())
+                     for lo, hi in zip(p_ac[:-1], p_ac[1:]))
+    assert caps.strip_nnz == expected
+    assert sum(caps.strip_nnz) == s.c_nnz
+    assert caps.c_pad == _round_up(max(caps.strip_nnz), 64)
+    assert caps.c_nnz_cap == _round_up(s.c_nnz, 64)
+    assert caps.c_max_row_nnz == s.c_max_row_nnz
+    slots = hash_table_slots(caps.c_max_row_nnz)
+    assert slots >= max(caps.c_max_row_nnz, 1)
+    assert slots & (slots - 1) == 0
