@@ -10,10 +10,12 @@ host-pinned — the paper reports 3.1x-14.7x.
 
 Executor lanes: ``run_loop_vs_scan`` (host loop vs device-resident lax.scan,
 CSV rows), ``run_scan_vs_pallas`` (scan vs the explicitly double-buffered
-Pallas backend), and ``run_accumulator_shootout`` (the three-way dense-slab
+Pallas backend), ``run_accumulator_shootout`` (the three-way dense-slab
 vs ESC-sparse vs hash-probe accumulator comparison across an output-density
 sweep, with all three planner fast-memory models and the ``backend="auto"``
-pick per row). The JSON lanes power
+pick per row), and ``run_bsr_blocking`` (the blocked MXU-tile accumulator vs
+the entry-level ones across a blockiness sweep — where the auto dispatch
+starts and stops selecting ``backend="bsr"``). The JSON lanes power
 ``python benchmarks/chunking_bench.py [--smoke] [--lane ...]``, which prints
 one JSON document (the ``BENCH_chunking.json`` schema:
 ``{"bench": ..., "rows": [...]}``) that CI smoke-parses like the serving
@@ -308,9 +310,109 @@ def run_csv_accumulator_shootout():
              f"hash_vs_esc={row['hash_vs_esc_bytes']}x_bytes")
 
 
+def run_bsr_blocking(smoke: bool = False) -> dict:
+    """Blocked (BSR/MXU-tile) vs entry-level accumulators across a
+    *blockiness* sweep, as a machine-checkable JSON report.
+
+    Fixed shape and roughly fixed nnz; what sweeps is how that nnz is
+    organized — from dense block-diagonal 8x8 tiles (blockiness 1.0, every
+    staged piece a handful of MXU tiles) to fully scattered singles
+    (blockiness 0.0, every entry its own mostly-empty tile). Each row
+    carries the measured runtimes, every registered accumulator's planner
+    fast-memory model under the block-capped envelope, and the
+    ``backend="auto"`` pick — asserted equal to the byte argmin, and pinned
+    to ``bsr`` on the blockiest row / to an entry-level backend on the
+    fully scattered row. That crossover is the lane's product: the planner
+    prices the zero-padding waste of blocked staging honestly, so auto only
+    selects the MXU-shaped backend where block structure amortizes it.
+    """
+    from repro.core.chunking import instance_envelope
+    from repro.core.kkmem import spgemm_dense_oracle
+    from repro.core.planner import (
+        ChunkPlan, backend_fast_models, select_accumulator_backend,
+    )
+    from repro.sparse.csr import csr_from_dense, csr_to_dense
+
+    bs = 8
+    m = 64 if smoke else 128
+    budget = (m // bs) // 2        # nnz budget in dense-block units: half the
+    rng = np.random.default_rng(23)  # diagonal, so scatter stays truly sparse
+
+    def blocky(frac: float):
+        """Block-diagonal dense tiles for ``frac`` of the nnz budget, the
+        remainder scattered as entry-level singles."""
+        n_blocks = round(frac * budget)
+        d = np.zeros((m, m), np.float32)
+        for i in range(n_blocks):
+            s = i * bs
+            d[s:s + bs, s:s + bs] = rng.standard_normal((bs, bs))
+        scatter = (budget - n_blocks) * bs * bs
+        if scatter:
+            idx = rng.choice(m * m, size=scatter, replace=False)
+            d.flat[idx] = rng.standard_normal(scatter)
+        return csr_from_dense(d)
+
+    plan = ChunkPlan("knl", (0, m), (0, m // 2, m), 0.0, 0.0)
+    repeats = 2 if smoke else 3
+    rows = []
+    for frac in (1.0, 0.5, 0.0):
+        A, B = blocky(frac), blocky(frac)
+        env = instance_envelope(A, B, plan, block_size=bs)
+        models = backend_fast_models(plan, env)
+        auto_pick = select_accumulator_backend(plan, env)
+        row = {"case": f"synthetic/{m}x{m}x{m}/blockiness={frac}",
+               "blockiness": frac,
+               "nnz_a": int(np.asarray(A.indptr)[-1])}
+        for backend, model in models.items():
+            row[f"{backend}_fast_bytes"] = model.fast_bytes_needed
+        for backend in ("pallas", "hash", "bsr"):
+            kw = {"block_size": bs} if backend == "bsr" else {}
+            C, _ = chunked_spgemm(A, B, plan, backend=backend, **kw)
+            us = timeit(lambda be=backend, k=kw: chunked_spgemm(
+                A, B, plan, backend=be, **k), repeats=repeats)
+            row[f"{backend}_us"] = round(us, 1)
+        # the blocked backend must stay correct at every blockiness
+        assert np.allclose(np.asarray(csr_to_dense(C)),
+                           np.asarray(spgemm_dense_oracle(A, B)), atol=1e-4)
+        row["byte_winner"] = min(models, key=lambda be:
+                                 models[be].fast_bytes_needed)
+        row["auto_backend"] = auto_pick
+        assert auto_pick == row["byte_winner"], (
+            f"auto dispatch disagrees with the byte argmin at {row['case']}")
+        rows.append(row)
+    assert rows[0]["byte_winner"] == "bsr", \
+        "block-diagonal tiles must price the blocked backend cheapest"
+    assert rows[-1]["byte_winner"] != "bsr", \
+        "scattered singles must price the blocked backend out"
+    from repro.kernels.ranged_spgemm import default_interpret
+
+    return {
+        "bench": "chunking_bsr_blocking",
+        "problem": f"synthetic/{m}x{m}x{m}",
+        "block_size": bs,
+        "interpret_mode": default_interpret(),
+        "byte_winner_by_blockiness": {
+            str(r["blockiness"]): r["byte_winner"] for r in rows
+        },
+        "rows": rows,
+    }
+
+
+def run_csv_bsr_blocking():
+    """The BSR blocking lane as driver CSV rows."""
+    report = run_bsr_blocking()
+    for row in report["rows"]:
+        emit(f"bsr_blocking/{row['case']}[nnz_a={row['nnz_a']}]",
+             row["bsr_us"],
+             f"winner={row['byte_winner']};"
+             f"bsr_vs_pallas_bytes="
+             f"{round(row['bsr_fast_bytes'] / row['pallas_fast_bytes'], 3)}x")
+
+
 JSON_LANES = {
     "scan_vs_pallas": run_scan_vs_pallas,
     "accumulator_shootout": run_accumulator_shootout,
+    "bsr_blocking": run_bsr_blocking,
 }
 
 

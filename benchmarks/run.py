@@ -27,6 +27,7 @@ SUITES = {
     "scan_vs_pallas": "benchmarks.chunking_bench:run_csv_scan_vs_pallas",
     "accumulator_shootout":
         "benchmarks.chunking_bench:run_csv_accumulator_shootout",
+    "bsr_blocking": "benchmarks.chunking_bench:run_csv_bsr_blocking",
 }
 
 

@@ -6,12 +6,15 @@ placements x chunked variants — and prints the same comparisons the paper plot
 machine-dependent numbers and real execution for all algorithmic results.
 
 The chunked section runs through the ``chunked_spgemm`` backend dispatch:
-every backend in ``--backends`` (comma-separated; ``all`` = loop, scan,
-pallas, sparse, hash, auto) executes the same plan and is checked against the
+every backend in ``--backends`` (comma-separated; ``all`` = every registered
+backend plus ``auto``) executes the same plan and is checked against the
 dense oracle, so the example doubles as an end-to-end demo of the executor
 stack — host loop oracle, device-resident lax.scan, double-buffered Pallas,
-the CSR-native ESC sparse-output accumulator, its hash-probe variant, and the
-planner-driven ``auto`` dispatch over the three accumulators.
+the CSR-native ESC sparse-output accumulator, its hash-probe variant, the
+BSR/MXU-blocked backend, and the planner-driven ``auto`` dispatch over the
+registered accumulators. The roster comes from
+``repro.core.backend_registry``: a newly registered backend appears here
+(and in the example's test) without editing this file.
 
   PYTHONPATH=src python examples/multigrid_spgemm.py [--problem brick3d]
       [--size 6] [--backends scan,hash]
@@ -21,6 +24,7 @@ import argparse
 
 import numpy as np
 
+from repro.core import backend_registry
 from repro.core.chunking import chunked_spgemm
 from repro.core.kkmem import spgemm, spgemm_symbolic_host, spgemm_dense_oracle
 from repro.core.locality import analyze, miss_table
@@ -32,7 +36,7 @@ from repro.core.planner import plan_chunks, row_bytes_csr
 from repro.sparse import multigrid
 from repro.sparse.csr import csr_to_dense
 
-ALL_BACKENDS = ("loop", "scan", "pallas", "sparse", "hash", "auto")
+ALL_BACKENDS = (*backend_registry.all_backends(), "auto")
 
 
 def study(problem: str, n: int, backends=("scan",)):

@@ -1,0 +1,132 @@
+"""Backend registry: one `BackendSpec` per chunked-SpGEMM backend.
+
+Before this module, adding a backend meant a wiring pass across the whole
+stack: an `if/elif` arm in ``chunked_spgemm``, another in
+``chunked_spgemm_batched``, a hand-built ``_*_CORES_BATCHED`` dict, a
+trace-suffix entry in ``SpGEMMService``, a byte model hooked into the
+planner's accumulator tuple, and hand-maintained backend lists in the
+conformance suite and CI smoke lanes. The registry collapses all of that
+into **one registration call**: a backend ships its kernel module plus a
+:class:`BackendSpec`, and the dispatchers (``chunked_spgemm``,
+``chunked_spgemm_batched``, ``SpGEMMService``), the planner's ``auto``
+resolve, the conformance matrix, and the bench/CI lane lists all derive
+from ``specs()`` / ``all_backends()``.
+
+The spec is deliberately thin — callables, templates, and capability
+flags — so the registry stays import-light: this module imports nothing
+from the rest of the package at module scope. Registrations live at the
+bottom of ``repro.core.chunk_stream`` (the module that owns the executor
+cores); :func:`ensure_registered` imports it on first use, which keeps
+``import repro.core.backend_registry`` free of JAX work.
+
+Contracts a spec must honor (enforced by the conformance suite's
+registry-completeness test):
+
+* ``executors`` maps every plan algorithm (``knl``/``chunk1``/``chunk2``)
+  to an unbatched executor ``fn(A, B, plan, c_pad, ...) -> (C, ChunkStats)``.
+  Executors with ``needs_output_caps`` additionally receive the symbolic
+  phase's ``StripOutputCaps`` as ``caps=`` (the dispatcher amortizes the
+  host expansion).
+* ``run_batched(As, Bs, plan, envelope, *, caps_list, validate_caps)``
+  runs the whole microbatch under a shared
+  :class:`~repro.sparse.csr.GeometryEnvelope`; ``None`` means the backend
+  is unbatched-only (the host-loop oracle).
+* ``trace_key`` / ``trace_key_batched`` are ``"{alg}"``-templates naming
+  the backend's ``TRACE_COUNTS`` keys — the compile-accounting contract
+  the serving layer and the exact trace-count tests pin.
+* ``byte_model(plan, envelope) -> BackendFastModel`` is the planner-side
+  peak-resident model ``backend="auto"`` argmins over; accumulator
+  backends (``is_accumulator``) must provide one. A model may return an
+  infinite ``fast_bytes_needed`` when the envelope lacks the fields it
+  prices (the BSR model without block caps), which excludes the backend
+  from that resolve without special-casing the planner.
+* ``needs_block_caps`` marks backends whose compile geometry is the
+  envelope's ``bsr_caps`` block bounds; the dispatchers build/require
+  block-capped envelopes for them, using ``block_size`` as the default
+  block edge.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping
+
+ALGORITHMS = ("knl", "chunk1", "chunk2")
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """Everything the dispatch/planning/serving layers need to run a backend."""
+
+    name: str
+    executors: Mapping[str, Callable]           # algorithm -> unbatched executor
+    run_batched: Callable | None = None         # batched entry; None = unbatched-only
+    byte_model: Callable | None = None          # (plan, envelope) -> BackendFastModel
+    trace_key: str | None = None                # "{alg}"-template, unbatched cores
+    trace_key_batched: str | None = None        # "{alg}"-template, batched cores
+    needs_output_caps: bool = False             # executor takes caps=StripOutputCaps
+    needs_block_caps: bool = False              # envelope must carry bsr_caps
+    is_accumulator: bool = False                # participates in backend="auto"
+    block_size: int | None = None               # default block edge (block backends)
+
+    @property
+    def supports_batched(self) -> bool:
+        return self.run_batched is not None
+
+
+_REGISTRY: dict[str, BackendSpec] = {}
+
+
+def register(spec: BackendSpec) -> BackendSpec:
+    """Register a backend. Name collisions fail loudly — a duplicate
+    registration is always a wiring bug (double import paths)."""
+    if spec.name in _REGISTRY:
+        raise ValueError(f"backend {spec.name!r} already registered")
+    if spec.name == "auto":
+        raise ValueError("'auto' is the dispatch mode, not a registrable backend")
+    missing = [alg for alg in ALGORITHMS if alg not in spec.executors]
+    if missing:
+        raise ValueError(f"backend {spec.name!r} missing executors for {missing}")
+    if spec.is_accumulator and spec.byte_model is None:
+        raise ValueError(
+            f"accumulator backend {spec.name!r} needs a planner byte model")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def ensure_registered() -> None:
+    """Import the module that owns the executor cores (and therefore the
+    registrations). Idempotent: module bodies run once."""
+    import repro.core.chunk_stream  # noqa: F401  (registrations at module bottom)
+
+
+def get(name: str) -> BackendSpec:
+    """Resolve a backend name; unknown names raise the dispatcher's
+    canonical error."""
+    ensure_registered()
+    spec = _REGISTRY.get(name)
+    if spec is None:
+        raise ValueError(f"unknown backend {name!r}")
+    return spec
+
+
+def specs() -> tuple:
+    """All registered specs, in registration order (the order is the
+    planner's tie-break priority for accumulators)."""
+    ensure_registered()
+    return tuple(_REGISTRY.values())
+
+
+def all_backends() -> tuple:
+    """Registered backend names, registration order (excludes ``auto``)."""
+    return tuple(s.name for s in specs())
+
+
+def batched_backends() -> tuple:
+    """Names of backends with a batched entry point."""
+    return tuple(s.name for s in specs() if s.supports_batched)
+
+
+def accumulator_specs() -> tuple:
+    """Specs participating in the planner's ``auto`` resolve, priority order."""
+    return tuple(s for s in specs() if s.is_accumulator)

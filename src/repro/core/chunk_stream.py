@@ -1,50 +1,55 @@
-"""Device-resident streaming chunk executors: the scan backend.
+"""Streaming chunk executors behind the backend registry.
 
-The loop executors in repro.core.chunking drive the paper's chunk streams from
-host Python — every chunk boundary is a device->host->device round-trip, which
-forfeits exactly the copy/compute overlap the paper identifies as the point of
-multi-memory-aware chunking. Here the same three algorithms (KNL / Chunk1 /
-Chunk2) run as **one jitted program each**:
+The paper's three chunk orders (KNL / Chunk1 / Chunk2) admit many numeric
+backends — host loop, device scan, hand-DMA'd Pallas pipelines, compressed
+accumulators, MXU-blocked tiles. This module implements the executor
+*cores* and registers each backend with
+``repro.core.backend_registry`` (registrations at the bottom of the file);
+every dispatch layer — ``chunked_spgemm``, :func:`chunked_spgemm_batched`,
+``SpGEMMService``, the planner's ``backend="auto"`` resolve, the
+conformance matrix, the bench lanes — derives its backend set from the
+registry rather than naming backends by hand. Adding a backend is a kernel
+module plus one ``BackendSpec`` registration (see ``docs/backends.md``).
 
-  * the uniformly-padded B chunks and A/C strips are stacked host-side into
-    batched CSRs (``csr_stack`` — a plain CSR whose array fields carry a
-    leading ``[n_chunks]`` axis, sliced back into per-chunk CSRs by scan),
-  * the chunk loop is a ``jax.lax.scan`` (nested scans for the 2-D Chunk1 /
-    Chunk2 orders) over the stacked chunks with the fused ``spgemm_ranged``
-    body inlined,
+The registered backends, in registry (= auto tie-break) order:
 
-so the whole multi-chunk multiply compiles once and never leaves the device
-between chunks. The scan backend leaves the slow->fast chunk transfers to
-XLA's scheduler — it is *free* to double-buffer them behind the kernel, but
-nothing forces the overlap. The third backend closes that gap: the
-``chunk_*_pallas`` executors run the same three streaming orders through
-``repro.kernels.ranged_spgemm``, whose pallas_call hand-DMAs the streamed
-operand through a two-slot VMEM buffer (copy chunk j+1 while chunk j
-multiplies — the paper's `copy2Fast` overlap made explicit rather than hoped
-for). The fourth backend lifts that kernel's dense-C memory bound: the
-``chunk_*_sparse`` executors stream the same two-slot DMA schedule through
-``repro.kernels.sparse_accum_spgemm``, whose per-strip accumulator is a
-fixed-capacity **CSR triple in VMEM** sized by the symbolic phase
-(``repro.core.symbolic``) instead of a dense ``[strip_rows, n]`` slab — the
-first backend whose fast-memory footprint scales with ``nnz(C)`` rather than
-``strip_rows * n_cols`` (``repro.core.planner.planned_stats_sparse`` is the
-matching planner-side model). The fifth backend shrinks that backend's
-workspace: the ``chunk_*_hash`` executors run the same streaming schedule
-through ``repro.kernels.hash_accum_spgemm``, whose merge body is a per-row
-linear-probing hash table sized by the symbolic ``c_max_row_nnz`` — the
-workspace scales with the densest output row, not with the
-``strip_nnz_cap * b_max_row_nnz`` ESC expand size
-(``planner.planned_stats_hash``).
+* ``loop`` — host-driven Python loop (``repro.core.chunking``); every chunk
+  boundary is a device round-trip. Retained as the bitwise oracle.
+* ``scan`` — the same three algorithms as **one jitted program each**: the
+  uniformly-padded B chunks and A/C strips stack host-side into batched
+  CSRs (``csr_stack``) and the chunk loop is a ``lax.scan`` with the fused
+  ``spgemm_ranged`` body inlined, so the multiply never leaves the device.
+  XLA is *free* to double-buffer the slow->fast transfers, but nothing
+  forces the overlap.
+* ``pallas`` — forces it: ``repro.kernels.ranged_spgemm``'s pallas_call
+  hand-DMAs the streamed operand through a two-slot VMEM buffer (copy
+  chunk j+1 while chunk j multiplies — the paper's ``copy2Fast`` overlap
+  made explicit), accumulating into dense per-strip slabs.
+* ``sparse`` — lifts the dense-C memory bound: the same two-slot DMA
+  schedule through ``repro.kernels.sparse_accum_spgemm``, accumulating
+  into a fixed-capacity **CSR triple in VMEM** sized by the symbolic phase
+  (``repro.core.symbolic``) — footprint scales with ``nnz(C)``, not
+  ``strip_rows * n_cols``.
+* ``hash`` — shrinks the ESC workspace: ``repro.kernels.hash_accum_spgemm``
+  merges through per-row linear-probing hash tables sized by the symbolic
+  ``c_max_row_nnz`` (densest output row, not the expand size).
+* ``bsr`` — trades entry-level sparsity for MXU-shaped tiles: each
+  (strip, chunk) pair stages as BSR (``repro.sparse.bsr``) and runs the
+  blocked kernel ``repro.kernels.bsr_spgemm``, whose scalar-prefetched
+  slot tables schedule one dense ``bs x bs`` MAC per contributing block
+  pair (padding slots point at an appended zero-sentinel block). Its
+  compile geometry is the envelope's ``bsr_caps`` block bounds
+  (``symbolic.bsr_plan_caps``), so the whole *envelope* is the jit key.
 
-``backend="auto"`` is the planner-driven dispatch over the three
-accumulators: ``planner.select_accumulator_backend(plan, envelope)`` compares
-the dense-slab (``planned_stats_dense_slab``), ESC
-(``planned_stats_sparse``) and hash (``planned_stats_hash``) peak-resident
-byte models and runs the smallest — dense slabs when C densifies (MXU
-tiles beat any compressed accumulator's bookkeeping), ESC when the expand
-stream is small relative to the row count, hash when outputs are wide but
-rows stay sparse. Ties break toward the dense slab. The
-``accumulator_shootout`` bench lane measures where the three models cross.
+``backend="auto"`` is the planner-driven dispatch over the registered
+accumulator backends: ``planner.select_accumulator_backend`` argmins their
+``BackendFastModel`` peak-resident byte models — dense slabs when C
+densifies, ESC when the expand stream is small, hash when outputs are wide
+but rows stay sparse, BSR when the operands are block-structured (its
+model prices the ``bs^2``-per-entry padding waste honestly, and an
+envelope without block caps prices it at infinity, keeping block analysis
+opt-in). The ``accumulator_shootout`` and ``bsr_blocking`` bench lanes
+measure where the models cross.
 
 Because a traced scan (or Pallas grid) cannot mutate Python-side counters,
 ChunkStats for these backends is *computed from the plan*: the uniform padding
@@ -55,13 +60,17 @@ executors' CSR-staging events (asserted identical in tests);
 which differ structurally (dense staged sizes; Chunk2's C partials persist in
 VMEM instead of bouncing to slow memory).
 
-``chunked_spgemm_batched`` runs the scan executors vmapped — or the Pallas
-kernel with a leading batch grid dimension — over stacked problem instances
-sharing one plan: the many-small-matrices serving scenario. Batches may mix
-sparsity structures: every instance is repadded to a shared
-``GeometryEnvelope`` (the batch union, or a caller-provided bucket envelope)
-before stacking. ``repro.serve.spgemm_service`` builds the request-bucketing
-service on top.
+Each backend's compile accounting is observable through ``TRACE_COUNTS``
+under the spec's ``trace_key``/``trace_key_batched`` templates
+(``"{alg}"``, ``"{alg}_pallas_batched"``, ...): one bump per (re)trace of
+the backend's jitted core, pinned exactly by the conformance suite.
+
+``chunked_spgemm_batched`` runs a backend's batched entry over stacked
+problem instances sharing one plan: the many-small-matrices serving
+scenario. Batches may mix sparsity structures: every instance is repadded
+to a shared ``GeometryEnvelope`` (the batch union, or a caller-provided
+bucket envelope) before stacking. ``repro.serve.spgemm_service`` builds
+the request-bucketing service on top.
 """
 
 from __future__ import annotations
@@ -75,18 +84,23 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import backend_registry
 from repro.core.chunking import (
     ChunkStats, _assemble, a_strips, b_chunks, batch_envelope,
+    chunk_gpu1, chunk_gpu2, chunk_knl, instance_envelope,
 )
 from repro.core.kkmem import spgemm_ranged_impl
 from repro.core.planner import (
     ChunkPlan, check_output_caps, hash_table_slots,
-    select_accumulator_backend,
+    planned_stats_bsr, planned_stats_dense_slab, planned_stats_hash,
+    planned_stats_sparse, select_accumulator_backend,
 )
 from repro.core.symbolic import strip_output_caps
+from repro.kernels.bsr_spgemm import bsr_spgemm_blocks, bsr_spgemm_symbolic
 from repro.kernels.hash_accum_spgemm import hash_accum_spgemm_stream
-from repro.kernels.ranged_spgemm import ranged_spgemm_stream
+from repro.kernels.ranged_spgemm import default_interpret, ranged_spgemm_stream
 from repro.kernels.sparse_accum_spgemm import sparse_accum_spgemm_stream
+from repro.sparse.bsr import bsr_blocks_with_sentinel, bsr_from_dense
 from repro.sparse.csr import (
     CSR, GeometryEnvelope, csr_from_dense, csr_pad_to, csr_stack, csr_to_dense,
     csr_unstack,
@@ -622,14 +636,340 @@ def chunk_hash(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int, caps=None):
 
 
 # ---------------------------------------------------------------------------
+# BSR backend: MXU-blocked tiles (kernels/bsr_spgemm), envelope-keyed cores
+# ---------------------------------------------------------------------------
+
+_BSR_DEFAULT_BLOCK = 8
+
+
+def _make_bsr_core(key: str, *, batched: bool):
+    """One jitted launch core for the blocked kernel. The whole
+    :class:`GeometryEnvelope` is the *static* jit key: the kernel geometry
+    (``nc_pad``, ``u_max``, ``bs``) comes from its ``bsr_caps``, and keying
+    on the envelope — not just the caps — gives the backend the same
+    retrace-per-envelope semantics as every other backend (two geometries
+    whose block caps happen to quantize equal still account separately).
+
+    Batched cores take width-stacked operands (leading axis) and unroll the
+    width inside the jit, so the serving layer's width-ladder compile
+    accounting sees one (re)trace per (envelope, width)."""
+
+    @partial(jax.jit, static_argnames=("envelope",))
+    def core(a_blocks, b_blocks, a_slots, b_slots,
+             envelope: GeometryEnvelope):
+        TRACE_COUNTS[key] += 1
+        bs, _, _, nc_pad, u_max = envelope.bsr_caps
+        interpret = default_interpret()
+
+        def one(ab, bb, asl, bsl):
+            return bsr_spgemm_blocks(ab, bb, asl, bsl, nc_pad=nc_pad,
+                                     u_max=u_max, bs=bs, interpret=interpret)
+
+        if batched:
+            return jnp.stack([
+                one(a_blocks[w], b_blocks[w], a_slots[w], b_slots[w])
+                for w in range(a_blocks.shape[0])
+            ])
+        return one(a_blocks, b_blocks, a_slots, b_slots)
+
+    return core
+
+
+_BSR_CORES = {alg: _make_bsr_core(f"{alg}_bsr", batched=False)
+              for alg in ("knl", "chunk1", "chunk2")}
+_BSR_CORES_BATCHED = {alg: _make_bsr_core(f"{alg}_bsr_batched", batched=True)
+                      for alg in ("knl", "chunk1", "chunk2")}
+
+
+def _bsr_execute(As, Bs, plan: ChunkPlan, envelope: GeometryEnvelope, *,
+                 batched: bool):
+    """Shared body of the BSR executors: stage every (strip, chunk) pair as
+    BSR at the envelope's block caps, launch the blocked kernel per pair
+    (Chunk2 streams strips under a stationary chunk, the other orders stream
+    chunks under a stationary strip), and accumulate the per-pair outputs
+    into per-strip dense C.
+
+    Staging is host-side (like the symbolic phase): the pair's A piece is
+    the strip's rows with columns outside the chunk zeroed, at full
+    contraction width, and the B piece is the chunk's rows at full output
+    width — so summing pair products over chunks is exactly the strip
+    product. The per-pair block symbolic runs at the envelope's ``nc``/``u``
+    floors, which makes every pair one kernel geometry (and fails loudly if
+    the envelope does not dominate an instance). Accumulation and staging
+    are f32, so comparisons against the loop oracle are allclose on values,
+    like the Pallas dense-slab backend."""
+    bs, nbl_a_cap, nbl_b_cap, nc_cap, u_cap = envelope.bsr_caps
+    width = len(As)
+    k, n = Bs[0].shape
+    kpad = -(-k // bs) * bs
+    npad = -(-n // bs) * bs
+    srpad = -(-envelope.strip_rows // bs) * bs
+    mbs, nbp = srpad // bs, npad // bs
+    np_dtype = np.dtype(As[0].dtype)
+    Ads = [np.asarray(csr_to_dense(A), np.float32) for A in As]
+    Bds = [np.asarray(csr_to_dense(B), np.float32) for B in Bs]
+    strips = list(zip(plan.p_ac[:-1], plan.p_ac[1:]))
+    chunks = list(zip(plan.p_b[:-1], plan.p_b[1:]))
+    core = (_BSR_CORES_BATCHED if batched else _BSR_CORES)[plan.algorithm]
+    accs = np.zeros((width, len(strips), mbs, nbp, bs, bs), np.float32)
+    pairs = ([(ia, jb) for jb in range(len(chunks))
+              for ia in range(len(strips))]
+             if plan.algorithm == "chunk2" else
+             [(ia, jb) for ia in range(len(strips))
+              for jb in range(len(chunks))])
+    for ia, jb in pairs:
+        s, e = strips[ia]
+        r0, r1 = chunks[jb]
+        a_bl, b_bl, a_sl, b_sl, metas = [], [], [], [], []
+        for w in range(width):
+            Am = np.zeros((srpad, kpad), np.float32)
+            Am[: e - s, r0:r1] = Ads[w][s:e, r0:r1]
+            Bm = np.zeros((kpad, npad), np.float32)
+            Bm[r0:r1, :n] = Bds[w][r0:r1, :]
+            Ab = bsr_from_dense(Am, bs, pad_to=nbl_a_cap)
+            Bb = bsr_from_dense(Bm, bs, pad_to=nbl_b_cap)
+            meta = bsr_spgemm_symbolic(Ab, Bb, nc_pad=nc_cap, u_max=u_cap)
+            metas.append(meta)
+            a_bl.append(bsr_blocks_with_sentinel(Ab))
+            b_bl.append(bsr_blocks_with_sentinel(Bb))
+            a_sl.append(jnp.asarray(meta.a_slots))
+            b_sl.append(jnp.asarray(meta.b_slots))
+        if batched:
+            out = core(jnp.stack(a_bl), jnp.stack(b_bl), jnp.stack(a_sl),
+                       jnp.stack(b_sl), envelope=envelope)
+        else:
+            out = core(a_bl[0], b_bl[0], a_sl[0], b_sl[0],
+                       envelope=envelope)[None]
+        out_np = np.asarray(out)
+        for w, meta in enumerate(metas):
+            n_c = meta.n_c_blocks
+            if not n_c:
+                continue
+            # crop to the real blocks: padded rows carry c_indices == 0 and
+            # would alias block column 0 of every strip if scattered
+            brows = np.repeat(np.arange(mbs),
+                              np.diff(np.asarray(meta.c_indptr, np.int64)))
+            np.add.at(accs[w, ia], (brows, meta.c_indices[:n_c]),
+                      out_np[w, :n_c])
+    block_bytes = bs * bs * 4
+    slab = (kpad // bs + 1) * 4 + nbl_b_cap * (4 + block_bytes) + block_bytes
+    a_stage = (mbs + 1) * 4 + nbl_a_cap * (4 + block_bytes) + block_bytes
+    c_stage = (mbs + 1) * 4 + nc_cap * (4 + block_bytes)
+    stats = planned_stats_pallas(plan, slab, a_stage, c_stage)
+    out_csrs = []
+    for w in range(width):
+        dense = accs[w].transpose(0, 1, 3, 2, 4).reshape(len(strips), srpad,
+                                                         npad)
+        whole = np.concatenate([
+            dense[i][: e - s, :n] for i, (s, e) in enumerate(strips)
+        ])
+        out_csrs.append(csr_from_dense(whole.astype(np_dtype)))
+    return out_csrs, stats
+
+
+def chunk_bsr(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int, caps=None,
+              block_size: int | None = None):
+    """Blocked-tile executor for any plan algorithm (``_bsr_execute``
+    orders the pair loop by ``plan.algorithm``). Builds the block-capped
+    instance envelope itself when called directly; the dispatch passes
+    ``caps`` to amortize the element-level symbolic phase and
+    ``block_size`` to override the registered default block edge."""
+    env = instance_envelope(A, B, plan, c_pad=c_pad, caps=caps,
+                            block_size=block_size or _BSR_DEFAULT_BLOCK)
+    out, stats = _bsr_execute([A], [B], plan, env, batched=False)
+    return out[0], stats
+
+
+# ---------------------------------------------------------------------------
 # batched entry point: many problem instances, one plan, one compilation
 # ---------------------------------------------------------------------------
+
+
+def _stage_chunks_batched(Bs, plan: ChunkPlan, envelope: GeometryEnvelope):
+    """Every instance's B chunks repadded to the envelope and doubly stacked
+    ([batch, n_b, ...]); returns the stack and one staged chunk's bytes."""
+    chunk_lists = [b_chunks(B, plan.p_b, envelope=envelope) for B in Bs]
+    return (csr_stack([csr_stack(cl) for cl in chunk_lists]),
+            chunk_lists[0][0].nbytes())
+
+
+def _stage_strips_batched(As, plan: ChunkPlan, envelope: GeometryEnvelope):
+    """Every instance's A strips repadded to the envelope and doubly stacked
+    ([batch, n_ac, ...]); returns the stack and one staged strip's bytes."""
+    strip_lists = [a_strips(A, plan.p_ac, envelope=envelope) for A in As]
+    return (csr_stack([csr_stack(sl) for sl in strip_lists]),
+            strip_lists[0][0].nbytes())
+
+
+def _scan_run_batched(As, Bs, plan: ChunkPlan, envelope: GeometryEnvelope, *,
+                      caps_list=None, validate_caps: bool = True):
+    """Batched entry of the scan backend: vmapped lax.scan cores, bitwise-
+    identical to the unbatched executors for same-structure batches."""
+    del caps_list, validate_caps  # the ranged merge cannot overflow c_pad
+    c_pad = envelope.c_pad
+    r0s, r1s = plan.b_ranges()
+    r0s, r1s = jnp.asarray(r0s), jnp.asarray(r1s)
+    n_cols = Bs[0].n_cols
+    dtype = As[0].dtype
+    Bst, chunk_nbytes = _stage_chunks_batched(Bs, plan, envelope)
+    if plan.algorithm == "knl":
+        Ast = csr_stack([
+            csr_pad_to(A, nnz_cap=envelope.a_nnz_cap,
+                       max_row_nnz=envelope.a_max_row_nnz)
+            for A in As
+        ])
+        C0s = _empty_c_stack(len(As), envelope.a_shape[0], n_cols, c_pad,
+                             dtype)
+        Cb = _knl_scan_batched(Ast, Bst, r0s, r1s, C0s, c_pad=c_pad)
+        return csr_unstack(Cb), planned_stats(plan, chunk_nbytes, 0, 0)
+    Ast, strip_nbytes = _stage_strips_batched(As, plan, envelope)
+    strip_rows = envelope.strip_rows
+    stats = planned_stats(plan, chunk_nbytes, strip_nbytes,
+                          _c_strip_nbytes(strip_rows, c_pad, dtype))
+    if plan.algorithm == "chunk1":
+        C0 = _empty_c(strip_rows, n_cols, c_pad, dtype)
+        Cb = _chunk1_scan_batched(Ast, Bst, r0s, r1s, C0, c_pad=c_pad)
+    else:
+        C0s = _empty_c_stack(plan.n_ac, strip_rows, n_cols, c_pad, dtype)
+        Cb = _chunk2_scan_batched(Ast, Bst, r0s, r1s, C0s, c_pad=c_pad)
+    return [
+        _assemble(csr_unstack(Ci), plan.p_ac, n_cols)
+        for Ci in csr_unstack(Cb)
+    ], stats
+
+
+def _pallas_run_batched(As, Bs, plan: ChunkPlan, envelope: GeometryEnvelope, *,
+                        caps_list=None, validate_caps: bool = True):
+    """Batched entry of the Pallas backend: the whole microbatch through one
+    ``ranged_spgemm_stream`` launch whose leading grid dimension is the
+    batch (staging and accumulation in f32 — allclose, not bitwise, against
+    the loop oracle)."""
+    del caps_list, validate_caps  # dense accumulators cannot overflow
+    r0s = jnp.asarray(plan.b_ranges()[0])
+    n_cols = Bs[0].n_cols
+    np_dtype = np.dtype(As[0].dtype)
+    Bst, _ = _stage_chunks_batched(Bs, plan, envelope)
+    if plan.algorithm == "knl":
+        Ast = csr_stack([
+            csr_pad_to(A, nnz_cap=envelope.a_nnz_cap,
+                       max_row_nnz=envelope.a_max_row_nnz)
+            for A in As
+        ])
+        dense = _knl_pallas_batched(Ast, Bst, r0s)
+        stats = planned_stats_pallas(plan, *_pallas_stage_nbytes(
+            envelope.a_shape[0], envelope.a_shape[1], envelope.chunk_rows,
+            n_cols))
+        return [
+            csr_from_dense(np.asarray(d).astype(np_dtype)) for d in dense
+        ], stats
+    Ast, _ = _stage_strips_batched(As, plan, envelope)
+    core = (_chunk1_pallas_batched if plan.algorithm == "chunk1"
+            else _chunk2_pallas_batched)
+    dense = core(Ast, Bst, r0s)
+    stats = planned_stats_pallas(plan, *_pallas_stage_nbytes(
+        envelope.strip_rows, envelope.a_shape[1], envelope.chunk_rows,
+        n_cols))
+    return [_pallas_assemble(d, plan.p_ac, np_dtype) for d in dense], stats
+
+
+def _csr_accum_run_batched(As, Bs, plan: ChunkPlan,
+                           envelope: GeometryEnvelope, kind: str, *,
+                           caps_list=None, validate_caps: bool = True):
+    """Shared batched entry of the CSR-scratch accumulators (ESC and hash):
+    one batch-on-the-grid kernel launch into fixed-capacity CSR scratch
+    sized by the envelope.
+
+    ``validate_caps`` checks every instance's exact realized output
+    structure against the envelope capacities and raises a loud
+    ``ValueError`` on overflow (the kernels silently drop entries past
+    capacity). Callers whose envelopes dominate the instances *by
+    construction* — the serving layer, whose bucket envelopes start from
+    exact submit-time instance envelopes and only ever grow by
+    union/quantization — pass ``False`` to skip the per-call host symbolic
+    expansion the check costs; callers that already ran the expansions pass
+    them as ``caps_list``."""
+    c_pad = envelope.c_pad
+    n_cols = Bs[0].n_cols
+    dtype = As[0].dtype
+    # the table size is a compile key, so it derives from the envelope
+    # alone, never from the per-call instances. A zero c_max_row_nnz is
+    # exact (empty output, 1-slot tables) when the symbolic phase ran —
+    # witnessed by c_nnz_cap, whose rounding floor makes it nonzero
+    # whenever computed; only a legacy both-zero envelope falls back to
+    # the always-valid n_cols bound.
+    table = None
+    if kind == "hash":
+        table = hash_table_slots(
+            envelope.c_max_row_nnz if envelope.c_nnz_cap else n_cols)
+    if validate_caps:
+        if caps_list is None:
+            caps_list = [strip_output_caps(A, B, plan.p_ac)
+                         for A, B in zip(As, Bs)]
+        for i, (A, caps) in enumerate(zip(As, caps_list)):
+            check_output_caps(caps.strip_nnz, caps.c_max_row_nnz, c_pad,
+                              table, backend=kind, a_shape=A.shape,
+                              b_shape=Bs[i].shape, instance=i)
+    r0s, r1s = plan.b_ranges()
+    r0s, r1s = jnp.asarray(r0s), jnp.asarray(r1s)
+    Bst, chunk_nbytes = _stage_chunks_batched(Bs, plan, envelope)
+    # uniform across all three algorithms: knl is the 1-strip special
+    # case (p_ac == (0, n_rows)), so every instance stages as strips
+    Ast, strip_nbytes = _stage_strips_batched(As, plan, envelope)
+    strip_rows = envelope.strip_rows
+    C0 = _sparse_c0_stack(len(As), plan.n_ac, strip_rows, n_cols, c_pad,
+                          dtype)
+    if kind == "hash":
+        ip, ix, d = _HASH_CORES_BATCHED[plan.algorithm](
+            Ast, Bst, C0, r0s, r1s, table_size=table)
+    else:
+        ip, ix, d = _SPARSE_CORES_BATCHED[plan.algorithm](
+            Ast, Bst, C0, r0s, r1s)
+    stats = planned_stats_pallas(
+        plan, chunk_nbytes, strip_nbytes,
+        _c_strip_nbytes(strip_rows, c_pad, dtype))
+    return [
+        _assemble(
+            _sparse_strip_csrs(ip[b], ix[b], d[b], strip_rows, n_cols,
+                               c_pad),
+            plan.p_ac, n_cols)
+        for b in range(len(As))
+    ], stats
+
+
+def _sparse_run_batched(As, Bs, plan, envelope, *, caps_list=None,
+                        validate_caps=True):
+    return _csr_accum_run_batched(As, Bs, plan, envelope, "sparse",
+                                  caps_list=caps_list,
+                                  validate_caps=validate_caps)
+
+
+def _hash_run_batched(As, Bs, plan, envelope, *, caps_list=None,
+                      validate_caps=True):
+    return _csr_accum_run_batched(As, Bs, plan, envelope, "hash",
+                                  caps_list=caps_list,
+                                  validate_caps=validate_caps)
+
+
+def _bsr_run_batched(As, Bs, plan, envelope, *, caps_list=None,
+                     validate_caps=True):
+    """Batched entry of the BSR backend. Cap overflow is caught by the
+    per-pair block symbolic itself (``bsr_spgemm_symbolic`` raises when the
+    envelope's floors do not dominate an instance), so there is no separate
+    validation pass to skip."""
+    del caps_list, validate_caps
+    if not envelope.bsr_caps:
+        raise ValueError(
+            "backend 'bsr' needs a block-capped envelope; rebuild it with "
+            "batch_envelope(..., block_size=...)"
+        )
+    return _bsr_execute(As, Bs, plan, envelope, batched=True)
 
 
 def chunked_spgemm_batched(As, Bs, plan: ChunkPlan, c_pad: int | None = None,
                            envelope: GeometryEnvelope | None = None,
                            backend: str = "scan", validate_caps: bool = True):
-    """Run the batched executor over stacked problem instances sharing one plan.
+    """Run a backend's batched entry over stacked problem instances sharing
+    one plan.
 
     Instances must share shapes and dtype but may differ in sparsity
     *structure* (nnz, nnz capacities, ``max_row_nnz``): every instance's chunks
@@ -637,30 +977,18 @@ def chunked_spgemm_batched(As, Bs, plan: ChunkPlan, c_pad: int | None = None,
     the batch's union envelope, or a caller-provided (e.g. bucket-quantized)
     one — before stacking, so one compiled program serves the whole batch.
     Same-structure batches repad to their own geometry (a no-op), keeping the
-    results bitwise-identical to the unbatched scan executors.
+    scan backend's results bitwise-identical to the unbatched executors.
 
-    ``backend="scan"`` (default) vmaps the jitted lax.scan executors;
-    ``backend="pallas"`` runs the whole microbatch through one
-    ``ranged_spgemm_stream`` launch whose leading grid dimension is the batch
-    (explicit double-buffered chunk prefetch; allclose rather than bitwise
-    against the loop oracle, with staging and accumulation in float32
-    regardless of the instances' dtype); ``backend="sparse"`` runs one
-    ``sparse_accum_spgemm_stream`` launch — the same batch-on-the-grid DMA
-    schedule, but accumulating into fixed-capacity CSR scratch sized by the
-    envelope's ``c_pad`` (its fast-memory footprint scales with ``nnz(C)``,
-    not ``strip_rows * n_cols``); ``backend="hash"`` swaps that kernel's ESC
-    merge for the per-row linear-probing hash tables sized by the envelope's
-    ``c_max_row_nnz``; ``backend="auto"`` resolves to the accumulator
-    (pallas/sparse/hash) whose ``planner`` byte model is smallest under the
-    batch envelope (``select_accumulator_backend``).
-
-    ``validate_caps`` (sparse/hash only) checks every instance's exact
-    realized output structure against the envelope capacities and raises a
-    loud ``ValueError`` on overflow. Callers whose envelopes dominate the
-    instances *by construction* — the serving layer, whose bucket envelopes
-    start from exact submit-time instance envelopes and only ever grow by
-    union/quantization — may pass ``False`` to skip the per-call host
-    symbolic expansion the check costs.
+    ``backend`` names any registered spec with a batched entry
+    (``backend_registry.batched_backends()``) or ``"auto"``, which resolves
+    to the accumulator whose planner byte model is smallest under the batch
+    envelope (``select_accumulator_backend``); the dispatch hands the whole
+    batch to the spec's ``run_batched``. Backends with ``needs_block_caps``
+    (``"bsr"``) get a block-capped default envelope built at the spec's
+    registered ``block_size``; a caller-provided envelope must already carry
+    block caps for them. ``validate_caps`` is forwarded to the spec (the
+    CSR-scratch accumulators use it to check realized output structure
+    against the envelope capacities; see ``_csr_accum_run_batched``).
 
     Returns ``(list_of_C, stats)`` where ``stats`` is the per-instance modeled
     copy accounting at the *envelope-padded* staged sizes (identical across the
@@ -669,10 +997,12 @@ def chunked_spgemm_batched(As, Bs, plan: ChunkPlan, c_pad: int | None = None,
     As, Bs = list(As), list(Bs)
     if len(As) != len(Bs) or not As:
         raise ValueError("need equal, nonzero numbers of A and B instances")
-    if plan.algorithm not in ("knl", "chunk1", "chunk2"):
+    if plan.algorithm not in backend_registry.ALGORITHMS:
         raise ValueError(f"unsupported algorithm {plan.algorithm!r}")
-    if backend not in ("scan", "pallas", "sparse", "hash", "auto"):
-        raise ValueError(f"unknown backend {backend!r}")
+    spec = None if backend == "auto" else backend_registry.get(backend)
+    if spec is not None and not spec.supports_batched:
+        raise ValueError(
+            f"backend {backend!r} does not support batched execution")
     for A, B in zip(As, Bs):
         if A.shape != As[0].shape or B.shape != Bs[0].shape:
             raise ValueError(
@@ -685,8 +1015,10 @@ def chunked_spgemm_batched(As, Bs, plan: ChunkPlan, c_pad: int | None = None,
         # are exactly what cap validation needs — run them once
         caps_list = [strip_output_caps(A, B, plan.p_ac)
                      for A, B in zip(As, Bs)]
+        block = (spec.block_size
+                 if spec is not None and spec.needs_block_caps else None)
         envelope = batch_envelope(As, Bs, plan, c_pad=c_pad,
-                                  caps_list=caps_list)
+                                  caps_list=caps_list, block_size=block)
     elif c_pad is not None and c_pad != envelope.c_pad:
         raise ValueError(
             f"conflicting c_pad={c_pad} vs envelope.c_pad={envelope.c_pad}"
@@ -696,103 +1028,83 @@ def chunked_spgemm_batched(As, Bs, plan: ChunkPlan, c_pad: int | None = None,
             f"envelope shapes {envelope.a_shape}x{envelope.b_shape} do not "
             f"match instances {As[0].shape}x{Bs[0].shape}"
         )
-    if backend == "auto":
-        backend = select_accumulator_backend(plan, envelope)
-    c_pad = envelope.c_pad
-    r0s, r1s = plan.b_ranges()
-    r0s, r1s = jnp.asarray(r0s), jnp.asarray(r1s)
-    n_cols = Bs[0].n_cols
-    dtype = As[0].dtype
-    chunk_lists = [b_chunks(B, plan.p_b, envelope=envelope) for B in Bs]
-    Bst = csr_stack([csr_stack(cl) for cl in chunk_lists])   # [batch, n_b, ...]
-    chunk_nbytes = chunk_lists[0][0].nbytes()
+    if spec is None:
+        spec = backend_registry.get(
+            select_accumulator_backend(plan, envelope))
+    if spec.needs_block_caps and not envelope.bsr_caps:
+        raise ValueError(
+            f"backend {spec.name!r} needs a block-capped envelope; rebuild "
+            "it with batch_envelope(..., block_size=...)"
+        )
+    return spec.run_batched(As, Bs, plan, envelope, caps_list=caps_list,
+                            validate_caps=validate_caps)
 
-    if backend in ("sparse", "hash"):
-        # the table size is a compile key, so it derives from the envelope
-        # alone, never from the per-call instances. A zero c_max_row_nnz is
-        # exact (empty output, 1-slot tables) when the symbolic phase ran —
-        # witnessed by c_nnz_cap, whose rounding floor makes it nonzero
-        # whenever computed; only a legacy both-zero envelope falls back to
-        # the always-valid n_cols bound.
-        table = None
-        if backend == "hash":
-            table = hash_table_slots(
-                envelope.c_max_row_nnz if envelope.c_nnz_cap else n_cols)
-        if validate_caps:
-            if caps_list is None:
-                caps_list = [strip_output_caps(A, B, plan.p_ac)
-                             for A, B in zip(As, Bs)]
-            for i, (A, caps) in enumerate(zip(As, caps_list)):
-                check_output_caps(caps.strip_nnz, caps.c_max_row_nnz, c_pad,
-                                  table, backend=backend, a_shape=A.shape,
-                                  b_shape=Bs[i].shape, instance=i)
-        # uniform across all three algorithms: knl is the 1-strip special
-        # case (p_ac == (0, n_rows)), so every instance stages as strips
-        strip_lists = [a_strips(A, plan.p_ac, envelope=envelope) for A in As]
-        Ast = csr_stack([csr_stack(sl) for sl in strip_lists])
-        strip_rows = envelope.strip_rows
-        C0 = _sparse_c0_stack(len(As), plan.n_ac, strip_rows, n_cols, c_pad,
-                              dtype)
-        if backend == "hash":
-            ip, ix, d = _HASH_CORES_BATCHED[plan.algorithm](
-                Ast, Bst, C0, r0s, r1s, table_size=table)
-        else:
-            ip, ix, d = _SPARSE_CORES_BATCHED[plan.algorithm](
-                Ast, Bst, C0, r0s, r1s)
-        stats = planned_stats_pallas(
-            plan, chunk_nbytes, strip_lists[0][0].nbytes(),
-            _c_strip_nbytes(strip_rows, c_pad, dtype))
-        return [
-            _assemble(
-                _sparse_strip_csrs(ip[b], ix[b], d[b], strip_rows, n_cols,
-                                   c_pad),
-                plan.p_ac, n_cols)
-            for b in range(len(As))
-        ], stats
 
-    if plan.algorithm == "knl":
-        Ast = csr_stack([
-            csr_pad_to(A, nnz_cap=envelope.a_nnz_cap,
-                       max_row_nnz=envelope.a_max_row_nnz)
-            for A in As
-        ])
-        n_rows = envelope.a_shape[0]
-        if backend == "pallas":
-            dense = _knl_pallas_batched(Ast, Bst, r0s)
-            stats = planned_stats_pallas(plan, *_pallas_stage_nbytes(
-                n_rows, envelope.a_shape[1], envelope.chunk_rows, n_cols))
-            np_dtype = np.dtype(dtype)
-            return [
-                csr_from_dense(np.asarray(d).astype(np_dtype)) for d in dense
-            ], stats
-        C0s = _empty_c_stack(len(As), n_rows, n_cols, c_pad, dtype)
-        Cb = _knl_scan_batched(Ast, Bst, r0s, r1s, C0s, c_pad=c_pad)
-        stats = planned_stats(plan, chunk_nbytes, 0, 0)
-        return csr_unstack(Cb), stats
+# ---------------------------------------------------------------------------
+# registrations: the one place each backend is wired into the stack
+# ---------------------------------------------------------------------------
 
-    strip_lists = [a_strips(A, plan.p_ac, envelope=envelope) for A in As]
-    Ast = csr_stack([csr_stack(sl) for sl in strip_lists])   # [batch, n_ac, ...]
-    strip_rows = envelope.strip_rows
-    if backend == "pallas":
-        core = (_chunk1_pallas_batched if plan.algorithm == "chunk1"
-                else _chunk2_pallas_batched)
-        dense = core(Ast, Bst, r0s)
-        stats = planned_stats_pallas(plan, *_pallas_stage_nbytes(
-            strip_rows, envelope.a_shape[1], envelope.chunk_rows, n_cols))
-        np_dtype = np.dtype(dtype)
-        return [
-            _pallas_assemble(d, plan.p_ac, np_dtype) for d in dense
-        ], stats
-    stats = planned_stats(plan, chunk_nbytes, strip_lists[0][0].nbytes(),
-                          _c_strip_nbytes(strip_rows, c_pad, dtype))
-    if plan.algorithm == "chunk1":
-        C0 = _empty_c(strip_rows, n_cols, c_pad, dtype)
-        Cb = _chunk1_scan_batched(Ast, Bst, r0s, r1s, C0, c_pad=c_pad)
-    else:
-        C0s = _empty_c_stack(plan.n_ac, strip_rows, n_cols, c_pad, dtype)
-        Cb = _chunk2_scan_batched(Ast, Bst, r0s, r1s, C0s, c_pad=c_pad)
-    out = [
-        _assemble(csr_unstack(Ci), plan.p_ac, n_cols)
-        for Ci in csr_unstack(Cb)
-    ]
-    return out, stats
+
+def _register_all() -> None:
+    if "scan" in backend_registry._REGISTRY:   # tolerate importlib.reload
+        return
+    register, Spec = backend_registry.register, backend_registry.BackendSpec
+    algs = backend_registry.ALGORITHMS
+    register(Spec(
+        name="loop",
+        executors={"knl": chunk_knl, "chunk1": chunk_gpu1,
+                   "chunk2": chunk_gpu2},
+    ))
+    register(Spec(
+        name="scan",
+        executors={"knl": chunk_knl_scan, "chunk1": chunk_gpu1_scan,
+                   "chunk2": chunk_gpu2_scan},
+        run_batched=_scan_run_batched,
+        trace_key="{alg}",
+        trace_key_batched="{alg}_batched",
+    ))
+    register(Spec(
+        name="pallas",
+        executors={"knl": chunk_knl_pallas, "chunk1": chunk_gpu1_pallas,
+                   "chunk2": chunk_gpu2_pallas},
+        run_batched=_pallas_run_batched,
+        byte_model=planned_stats_dense_slab,
+        trace_key="{alg}_pallas",
+        trace_key_batched="{alg}_pallas_batched",
+        is_accumulator=True,
+    ))
+    register(Spec(
+        name="sparse",
+        executors=dict.fromkeys(algs, chunk_sparse),
+        run_batched=_sparse_run_batched,
+        byte_model=planned_stats_sparse,
+        trace_key="{alg}_sparse",
+        trace_key_batched="{alg}_sparse_batched",
+        needs_output_caps=True,
+        is_accumulator=True,
+    ))
+    register(Spec(
+        name="hash",
+        executors=dict.fromkeys(algs, chunk_hash),
+        run_batched=_hash_run_batched,
+        byte_model=planned_stats_hash,
+        trace_key="{alg}_hash",
+        trace_key_batched="{alg}_hash_batched",
+        needs_output_caps=True,
+        is_accumulator=True,
+    ))
+    register(Spec(
+        name="bsr",
+        executors=dict.fromkeys(algs, chunk_bsr),
+        run_batched=_bsr_run_batched,
+        byte_model=planned_stats_bsr,
+        trace_key="{alg}_bsr",
+        trace_key_batched="{alg}_bsr_batched",
+        needs_output_caps=True,
+        needs_block_caps=True,
+        is_accumulator=True,
+        block_size=_BSR_DEFAULT_BLOCK,
+    ))
+
+
+_register_all()

@@ -107,7 +107,7 @@ def a_strips(A: CSR, p_ac: tuple, envelope: GeometryEnvelope | None = None):
 
 def instance_envelope(A: CSR, B: CSR, plan: ChunkPlan,
                       c_pad: int | None = None,
-                      caps=None) -> GeometryEnvelope:
+                      caps=None, block_size: int | None = None) -> GeometryEnvelope:
     """The padded geometry one (A, B) instance needs under ``plan``.
 
     The symbolic phase (repro.core.symbolic) runs once here: its output caps
@@ -118,11 +118,23 @@ def instance_envelope(A: CSR, B: CSR, plan: ChunkPlan,
     given (which used to skip the symbolic phase entirely): an envelope is a
     compile key, and two instances must get equal envelopes regardless of
     which caller built them — callers that already ran the symbolic phase
-    pass its ``StripOutputCaps`` as ``caps`` to avoid the repeat expansion."""
+    pass its ``StripOutputCaps`` as ``caps`` to avoid the repeat expansion.
+
+    ``block_size`` opts into the *block*-level symbolic phase
+    (``repro.core.symbolic.bsr_plan_caps``): the envelope additionally
+    carries ``bsr_caps``, making block-structured backends (``"bsr"``)
+    dispatchable and priceable by the planner under this envelope. It is
+    opt-in because the block analysis is another host pass and block
+    backends only ever win on block-structured operands."""
     if caps is None:
         caps = strip_output_caps(A, B, plan.p_ac)
     if c_pad is None:
         c_pad = caps.c_pad
+    bsr_caps = ()
+    if block_size is not None:
+        from repro.core.symbolic import bsr_plan_caps
+
+        bsr_caps = bsr_plan_caps(A, B, plan, block_size).as_tuple()
     chunk_cap, chunk_rows = _partition_caps(B, plan.p_b)
     strip_cap, strip_rows = _partition_caps(A, plan.p_ac)
     return GeometryEnvelope(
@@ -133,21 +145,25 @@ def instance_envelope(A: CSR, B: CSR, plan: ChunkPlan,
         strip_rows=strip_rows, strip_nnz_cap=strip_cap,
         c_pad=int(c_pad), dtype=str(A.dtype),
         c_nnz_cap=caps.c_nnz_cap, c_max_row_nnz=caps.c_max_row_nnz,
+        bsr_caps=bsr_caps,
     )
 
 
 def batch_envelope(As, Bs, plan: ChunkPlan, c_pad: int | None = None,
-                   caps_list=None) -> GeometryEnvelope:
+                   caps_list=None, block_size: int | None = None) -> GeometryEnvelope:
     """Union of per-instance envelopes: the smallest shared padded geometry a
     heterogeneous batch can be repadded to (``c_pad`` overrides the symbolic
     default for every instance when given). Callers that already ran the
     symbolic phase per instance pass its ``StripOutputCaps`` as ``caps_list``
-    to avoid repeating the expansions."""
+    to avoid repeating the expansions; ``block_size`` folds block caps into
+    every instance envelope (see :func:`instance_envelope`) so the union is
+    block-capped too."""
     As, Bs = list(As), list(Bs)
     if caps_list is None:
         caps_list = [None] * len(As)
     return GeometryEnvelope.batch(
-        instance_envelope(A, B, plan, c_pad=c_pad, caps=caps)
+        instance_envelope(A, B, plan, c_pad=c_pad, caps=caps,
+                          block_size=block_size)
         for (A, B), caps in zip(zip(As, Bs), caps_list)
     )
 
@@ -258,35 +274,35 @@ def default_c_pad(A: CSR, B: CSR, plan: ChunkPlan) -> int:
 
 
 def chunked_spgemm(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int | None = None,
-                   backend: str = "scan"):
+                   backend: str = "scan", block_size: int | None = None):
     """Execute a ChunkPlan. ``c_pad`` defaults to the exact symbolic capacity of the
     largest row strip (whole C for 1-strip plans).
 
-    ``backend`` selects the executor: ``"scan"`` (default) runs the whole chunk
-    loop device-resident inside one jitted ``lax.scan``; ``"pallas"`` runs it
-    through the ranged-SpGEMM Pallas kernel with explicit double-buffered
-    chunk prefetch (allclose to the oracle, not bitwise: dense accumulation
-    reorders the float adds, and the kernel stages and accumulates in
-    float32 regardless of the input dtype); ``"sparse"`` runs it through the
-    CSR-native sparse-output Pallas kernel (same two-slot DMA streaming, but
-    the per-strip accumulator is a fixed-capacity CSR scratch sized by the
-    symbolic phase — fast-memory footprint scales with ``nnz(C)``, and
-    ``c_pad`` must bound every strip's exact output nnz, which the default
-    symbolic ``c_pad`` does — undersized caps raise a planner-level
-    ``ValueError`` instead of silently dropping entries); ``"hash"`` swaps
-    that kernel's ESC merge for per-row linear-probing hash tables sized by
-    the symbolic ``c_max_row_nnz`` (workspace scales with the densest output
-    row, not the expand size); ``"auto"`` lets the planner pick the
-    accumulator per geometry — the smallest of the three resident byte
-    models (``planner.select_accumulator_backend``); ``"loop"`` is the
-    host-driven Python loop, retained as the bitwise oracle for the scan
-    path.
+    ``backend`` names a registered :class:`repro.core.backend_registry.
+    BackendSpec` (``"loop"``, ``"scan"``, ``"pallas"``, ``"sparse"``,
+    ``"hash"``, ``"bsr"``, ...) or ``"auto"``, which lets the planner pick
+    the accumulator backend whose peak-resident byte model is smallest under
+    this instance's envelope (``planner.select_accumulator_backend``). The
+    dispatch is entirely registry-driven: the spec supplies the
+    per-algorithm executor, and its capability flags decide what the
+    dispatcher stages — ``needs_output_caps`` backends receive the symbolic
+    phase's ``StripOutputCaps`` (one expansion amortized across the default
+    ``c_pad``, the auto resolve, and the executor's overflow check).
+
+    ``block_size`` opts the *block* symbolic phase into the envelope: under
+    ``backend="auto"`` the planner can then price (and select) block
+    backends like ``"bsr"``; under an explicit block backend it overrides
+    that backend's default block edge. See ``docs/backends.md``.
     """
+    from repro.core import backend_registry
+
+    spec = None if backend == "auto" else backend_registry.get(backend)
     # one symbolic expansion serves the default c_pad, the auto resolve, and
-    # the sparse/hash executors' overflow check (the symbolic module's
+    # the caps-consuming executors' overflow checks (the symbolic module's
     # amortize-the-host-pass contract)
     caps = None
-    if c_pad is None or backend in ("auto", "sparse", "hash"):
+    if c_pad is None or backend == "auto" or (spec is not None
+                                              and spec.needs_output_caps):
         caps = strip_output_caps(A, B, plan.p_ac)
     if c_pad is None:
         c_pad = caps.c_pad
@@ -300,35 +316,15 @@ def chunked_spgemm(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int | None = None,
     if backend == "auto":
         from repro.core.planner import select_accumulator_backend
 
-        backend = select_accumulator_backend(
-            plan, instance_envelope(A, B, plan, c_pad=c_pad, caps=caps))
-    if backend == "scan":
-        from repro.core.chunk_stream import (
-            chunk_knl_scan, chunk_gpu1_scan, chunk_gpu2_scan,
-        )
-        table = {"knl": chunk_knl_scan, "chunk1": chunk_gpu1_scan,
-                 "chunk2": chunk_gpu2_scan}
-    elif backend == "pallas":
-        from repro.core.chunk_stream import (
-            chunk_knl_pallas, chunk_gpu1_pallas, chunk_gpu2_pallas,
-        )
-        table = {"knl": chunk_knl_pallas, "chunk1": chunk_gpu1_pallas,
-                 "chunk2": chunk_gpu2_pallas}
-    elif backend == "sparse":
-        from repro.core.chunk_stream import chunk_sparse
-
-        table = dict.fromkeys(("knl", "chunk1", "chunk2"), chunk_sparse)
-    elif backend == "hash":
-        from repro.core.chunk_stream import chunk_hash
-
-        table = dict.fromkeys(("knl", "chunk1", "chunk2"), chunk_hash)
-    elif backend == "loop":
-        table = {"knl": chunk_knl, "chunk1": chunk_gpu1, "chunk2": chunk_gpu2}
-    else:
-        raise ValueError(f"unknown backend {backend!r}")
-    fn = table.get(plan.algorithm)
+        env = instance_envelope(A, B, plan, c_pad=c_pad, caps=caps,
+                                block_size=block_size)
+        spec = backend_registry.get(select_accumulator_backend(plan, env))
+    fn = spec.executors.get(plan.algorithm)
     if fn is None:
         raise ValueError(f"unknown algorithm {plan.algorithm!r}")
-    if backend in ("sparse", "hash"):
-        return fn(A, B, plan, c_pad, caps=caps)
-    return fn(A, B, plan, c_pad)
+    kwargs = {}
+    if spec.needs_output_caps:
+        kwargs["caps"] = caps
+    if block_size is not None and spec.needs_block_caps:
+        kwargs["block_size"] = block_size
+    return fn(A, B, plan, c_pad, **kwargs)

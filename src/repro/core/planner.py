@@ -323,33 +323,80 @@ def planned_stats_hash(plan: ChunkPlan, envelope) -> BackendFastModel:
     return _csr_accum_model(plan, envelope, "hash", workspace)
 
 
-# deterministic evaluation (and tie-break) order of the auto dispatch
-ACCUMULATOR_BACKENDS = ("pallas", "sparse", "hash")
+def planned_stats_bsr(plan: ChunkPlan, envelope) -> BackendFastModel:
+    """The BSR (``backend="bsr"``) resident footprint: every staged piece is
+    a padded BSR triple — block pointers + block-column indices + dense
+    ``bs x bs`` f32 tiles, plus the appended zero-sentinel block — sized by
+    the envelope's block caps (``repro.core.symbolic.bsr_plan_caps``), and
+    the C accumulator holds ``nc_cap`` output tiles. The workspace term is
+    the kernel's scalar-prefetched slot tables (``2 x nc x u`` int32 in
+    SMEM) plus the per-step ``bs x bs`` f32 accumulator tile.
 
-_BACKEND_MODELS = {
-    "pallas": planned_stats_dense_slab,
-    "sparse": planned_stats_sparse,
-    "hash": planned_stats_hash,
-}
+    The block caps are *quantized* bounds, so the model honestly prices the
+    zero-sentinel/padding waste: a scattered-sparsity instance whose every
+    entry lands in its own block pays ``bs^2`` floats per entry and loses to
+    the CSR accumulators, while a block-structured instance amortizes each
+    tile across up to ``bs^2`` entries and wins. An envelope without block
+    caps (the default — block analysis is opt-in) prices at infinity, which
+    removes ``bsr`` from that ``auto`` resolve without special-casing the
+    dispatch."""
+    if not envelope.bsr_caps:
+        inf = float("inf")
+        return BackendFastModel(backend="bsr", fast_bytes_needed=inf,
+                                streamed_bytes=inf, stationary_bytes=inf,
+                                c_accum_bytes=inf, workspace_bytes=inf)
+    bs, nbl_a, nbl_b, nc, u = envelope.bsr_caps
+    block_bytes = bs * bs * 4                        # staged tiles are f32
+    k = envelope.a_shape[1]
+    srb = -(-envelope.strip_rows // bs)              # strip block rows
+    kb = -(-k // bs)                                 # contraction block rows
+    # BSR triple + appended zero-sentinel block (the slot tables' padding target)
+    slab = float((kb + 1) * 4 + nbl_b * (4 + block_bytes) + block_bytes)
+    a_stage = float((srb + 1) * 4 + nbl_a * (4 + block_bytes) + block_bytes)
+    c_block = float(nc * block_bytes)
+    if plan.algorithm == "chunk2":
+        streamed, stationary = a_stage, slab
+        c_accum = plan.n_ac * c_block
+    else:                                            # knl / chunk1
+        streamed, stationary = slab, a_stage
+        c_accum = c_block
+    workspace = float(2 * nc * u * 4 + block_bytes)
+    return BackendFastModel(
+        backend="bsr",
+        fast_bytes_needed=2 * streamed + stationary + c_accum + workspace,
+        streamed_bytes=streamed, stationary_bytes=stationary,
+        c_accum_bytes=c_accum, workspace_bytes=workspace,
+    )
+
+
+def accumulator_backends() -> tuple:
+    """Deterministic evaluation (and tie-break) order of the auto dispatch:
+    the registry's accumulator specs in registration order."""
+    from repro.core import backend_registry
+
+    return tuple(s.name for s in backend_registry.accumulator_specs())
 
 
 def backend_fast_models(plan: ChunkPlan, envelope) -> dict:
-    """All three accumulator byte models under one plan + envelope."""
-    return {b: _BACKEND_MODELS[b](plan, envelope)
-            for b in ACCUMULATOR_BACKENDS}
+    """Every registered accumulator's byte model under one plan + envelope,
+    in the registry's priority order."""
+    from repro.core import backend_registry
+
+    return {s.name: s.byte_model(plan, envelope)
+            for s in backend_registry.accumulator_specs()}
 
 
 def select_accumulator_backend(plan: ChunkPlan, envelope) -> str:
     """The ``backend="auto"`` rule: run the accumulator whose modeled peak
     resident fast-memory footprint is smallest under this plan + envelope —
     dense slab (``pallas``) vs ESC CSR scratch (``sparse``) vs hash probe
-    (``hash``). Ties break toward the earlier entry of
-    ``ACCUMULATOR_BACKENDS`` (dense slab first: on real hardware it is the
+    (``hash``) vs blocked MXU tiles (``bsr``, only under block-capped
+    envelopes — uncapped ones price it at infinity). Ties break toward the
+    earlier registry entry (dense slab first: on real hardware it is the
     MXU-shaped one). This is the per-geometry accumulator choice ROADMAP
     asked the planner to make instead of picking one unconditionally."""
     models = backend_fast_models(plan, envelope)
-    return min(ACCUMULATOR_BACKENDS,
-               key=lambda b: models[b].fast_bytes_needed)
+    return min(models, key=lambda b: models[b].fast_bytes_needed)
 
 
 def check_output_caps(strip_nnz, c_max_row_nnz: int, c_pad: int,

@@ -51,8 +51,12 @@ class SymbolicStructure:
     flops: int               # 2 * number of scalar products
 
 
-def spgemm_structure_host(A: CSR, B: CSR) -> SymbolicStructure:
-    """Exact per-row structure of C = A x B (the symbolic phase proper)."""
+def _structure_expand(A: CSR, B: CSR):
+    """Shared expansion core: unique C coordinate keys + scalar-product count.
+
+    Returns ``(keys, total)`` where ``keys`` are the sorted unique
+    ``row * n_cols + col`` coordinates of C's exact structure and ``total``
+    is the number of scalar products (half the flops)."""
     a_ptr = np.asarray(A.indptr).astype(np.int64)
     a_idx = np.asarray(A.indices).astype(np.int64)
     b_ptr = np.asarray(B.indptr).astype(np.int64)
@@ -69,6 +73,12 @@ def spgemm_structure_host(A: CSR, B: CSR) -> SymbolicStructure:
     prod_rows = a_rows[t]
     prod_cols = b_idx[b_ptr[a_cols[t]] + (p - cum[t])]
     keys = np.unique(prod_rows * np.int64(B.n_cols) + prod_cols)
+    return keys, total
+
+
+def spgemm_structure_host(A: CSR, B: CSR) -> SymbolicStructure:
+    """Exact per-row structure of C = A x B (the symbolic phase proper)."""
+    keys, total = _structure_expand(A, B)
     per_row = np.bincount(keys // B.n_cols, minlength=A.n_rows)
     return SymbolicStructure(
         per_row_nnz=per_row,
@@ -117,3 +127,115 @@ def strip_output_caps(A: CSR, B: CSR, p_ac: tuple,
         c_max_row_nnz=structure.c_max_row_nnz,
         strip_nnz=strip_nnz,
     )
+
+
+# ---------------------------------------------------------------------------
+# block-level symbolic phase (the BSR backend's output-cap analogue)
+# ---------------------------------------------------------------------------
+
+
+def _next_pow2(v: int) -> int:
+    p = 1
+    while p < v:
+        p *= 2
+    return p
+
+
+@dataclasses.dataclass(frozen=True)
+class BsrPlanCaps:
+    """Block-geometry capacities of a chunk plan at block size ``block_size``.
+
+    These bound the BSR backend's staged shapes for every (strip, chunk)
+    pair of the plan, the way :class:`StripOutputCaps` bounds the sparse
+    backends' CSR scratch: ``nbl_a`` bounds the blocks of any staged A
+    strip x chunk-column slice, ``nbl_b`` the blocks of any staged B chunk,
+    ``nc`` the C blocks of any strip's full output, and ``u`` the
+    contributor (k-block) count of any C block. All are quantized here —
+    block counts to a multiple of ``quantum``, ``u`` to a power of two — so
+    ``as_tuple()`` doubles as the envelope's ``bsr_caps`` compile-key field.
+    """
+
+    block_size: int
+    nbl_a: int   # blocks of any staged A (strip x chunk-columns) piece
+    nbl_b: int   # blocks of any staged B chunk
+    nc: int      # block-expanded C blocks of any (strip, chunk) pair
+    u: int       # contributor (A block, B block) pairs of any C block
+
+    def as_tuple(self) -> tuple:
+        return (self.block_size, self.nbl_a, self.nbl_b, self.nc, self.u)
+
+
+def bsr_plan_caps(A: CSR, B: CSR, plan, block_size: int,
+                  quantum: int = 8) -> BsrPlanCaps:
+    """Exact block-structure capacities of ``plan`` on (A, B) at ``block_size``.
+
+    A pair stages as A's strip rows restricted to the chunk's columns (full
+    element width, out-of-range columns zeroed) against B's chunk rows (full
+    element height). ``nc`` and ``u`` bound the *block-level expansion* the
+    BSR kernel's symbolic phase performs — C block (i, j) is scheduled when
+    A block (i, kb) meets B block (kb, j), even if no element-level product
+    lands in it — so they must be computed by the same join, not from C's
+    element structure (which can be strictly smaller). Like
+    :func:`strip_output_caps`, this is exact (no probabilistic estimate) and
+    meant to be amortized across the numeric calls that reuse one
+    plan/envelope.
+    """
+    bs = int(block_size)
+    if bs < 1:
+        raise ValueError(f"block_size must be >= 1, got {block_size}")
+    k, n = B.shape
+    kb = -(-k // bs)
+    nb = -(-n // bs)
+    a_ptr = np.asarray(A.indptr).astype(np.int64)
+    a_idx = np.asarray(A.indices).astype(np.int64)
+    nnz_a = int(a_ptr[-1])
+    rows_a = np.repeat(np.arange(A.n_rows, dtype=np.int64),
+                       a_ptr[1:] - a_ptr[:-1])
+    cols_a = a_idx[:nnz_a]
+    b_ptr = np.asarray(B.indptr).astype(np.int64)
+    b_idx = np.asarray(B.indices).astype(np.int64)
+    nnz_b = int(b_ptr[-1])
+    rows_b = np.repeat(np.arange(B.n_rows, dtype=np.int64),
+                       b_ptr[1:] - b_ptr[:-1])
+    cols_b = b_idx[:nnz_b]
+    strips = list(zip(plan.p_ac[:-1], plan.p_ac[1:]))
+    chunks = list(zip(plan.p_b[:-1], plan.p_b[1:]))
+
+    nbl_a = nbl_b = nc = u = 1
+    # block-level CSR pattern of each staged B chunk, for the expansion join
+    chunk_patterns = []
+    for r0, r1 in chunks:
+        sel = (rows_b >= r0) & (rows_b < r1)
+        keys = np.unique((rows_b[sel] // bs) * nb + cols_b[sel] // bs)
+        nbl_b = max(nbl_b, int(keys.size))
+        ptr = np.zeros(kb + 1, np.int64)
+        np.add.at(ptr, keys // nb + 1, 1)
+        chunk_patterns.append((np.cumsum(ptr), keys % nb))
+
+    for s, e in strips:
+        sela = (rows_a >= s) & (rows_a < e)
+        abr = (rows_a[sela] - s) // bs
+        acol = cols_a[sela]
+        abc = acol // bs
+        for (r0, r1), (bptr, bjb) in zip(chunks, chunk_patterns):
+            selp = (acol >= r0) & (acol < r1)
+            akeys = np.unique(abr[selp] * kb + abc[selp])
+            nbl_a = max(nbl_a, int(akeys.size))
+            ai, ak = akeys // kb, akeys % kb
+            lens = bptr[ak + 1] - bptr[ak]
+            total = int(lens.sum())
+            if not total:
+                continue
+            cum = np.concatenate([[0], np.cumsum(lens)])
+            p = np.arange(total, dtype=np.int64)
+            t = np.searchsorted(cum, p, side="right") - 1
+            ckeys = ai[t] * nb + bjb[bptr[ak[t]] + (p - cum[t])]
+            uniq, counts = np.unique(ckeys, return_counts=True)
+            nc = max(nc, int(uniq.size))
+            u = max(u, int(counts.max()))
+
+    def up(v: int) -> int:
+        return -(-int(v) // quantum) * quantum
+
+    return BsrPlanCaps(block_size=bs, nbl_a=up(nbl_a), nbl_b=up(nbl_b),
+                       nc=up(nc), u=_next_pow2(u))

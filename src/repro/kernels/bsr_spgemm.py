@@ -49,11 +49,20 @@ class BsrSpgemmMeta:
     flops: int               # 2 * bs^3 * total contributor pairs (MXU flops)
 
 
-def bsr_spgemm_symbolic(A: BSR, B: BSR, pad_multiple: int = 8) -> BsrSpgemmMeta:
+def bsr_spgemm_symbolic(A: BSR, B: BSR, pad_multiple: int = 8,
+                        nc_pad: int | None = None,
+                        u_max: int | None = None) -> BsrSpgemmMeta:
     """Block-level symbolic phase: structure of C and contributor slot tables.
 
     The zero-sentinel slot is ``A.nbl_pad`` / ``B.nbl_pad`` — the wrapper appends one
     guaranteed-zero block to each blocks array before the pallas_call.
+
+    ``nc_pad`` / ``u_max``, when given, are envelope-level *floors* (from
+    ``repro.core.symbolic.bsr_plan_caps``): the tables are shaped to them so
+    every (strip, chunk) pair under one envelope compiles to one kernel
+    geometry. A realized structure exceeding a floor raises ``ValueError``
+    loudly — the kernel would otherwise drop contributor pairs (table
+    columns past ``u_max``) or C blocks (rows past ``nc_pad``) silently.
     """
     a_ptr = np.asarray(A.block_indptr, np.int64)
     a_idx = np.asarray(A.block_indices, np.int64)
@@ -82,8 +91,23 @@ def bsr_spgemm_symbolic(A: BSR, B: BSR, pad_multiple: int = 8) -> BsrSpgemmMeta:
     uniq, start = np.unique(key_s, return_index=True)
     counts = np.diff(np.concatenate([start, [total]]))
     n_c = int(uniq.size)
-    u_max = int(counts.max()) if n_c else 1
-    nc_pad = -(-max(n_c, 1) // pad_multiple) * pad_multiple
+    u = int(counts.max()) if n_c else 1
+    if u_max is None:
+        u_max = u
+    elif u > u_max:
+        raise ValueError(
+            f"u_max={u_max} < realized contributor count {u}: the envelope's "
+            f"block caps do not dominate this instance — rebuild the envelope "
+            f"(bsr_plan_caps) from the instances it serves"
+        )
+    if nc_pad is None:
+        nc_pad = -(-max(n_c, 1) // pad_multiple) * pad_multiple
+    elif n_c > nc_pad:
+        raise ValueError(
+            f"nc_pad={nc_pad} < realized C block count {n_c}: the envelope's "
+            f"block caps do not dominate this instance — rebuild the envelope "
+            f"(bsr_plan_caps) from the instances it serves"
+        )
     a_zero, b_zero = A.nbl_pad, B.nbl_pad  # appended zero-block slots
     a_tab = np.full((nc_pad, u_max), a_zero, np.int32)
     b_tab = np.full((nc_pad, u_max), b_zero, np.int32)
@@ -99,6 +123,14 @@ def bsr_spgemm_symbolic(A: BSR, B: BSR, pad_multiple: int = 8) -> BsrSpgemmMeta:
     c_indptr = np.cumsum(c_indptr).astype(np.int32)
     c_indices = np.zeros(nc_pad, np.int32)
     c_indices[:n_c] = c_j
+    # padding invariants consumers rely on: c_indptr spans exactly the n_c
+    # real blocks (so a scatter driven by it can never touch a padding row),
+    # and padding table rows are all-sentinel (their grid steps MAC nothing,
+    # flushing a zero tile). c_indices past n_c stays 0 — aliasing real block
+    # (i, 0) if a consumer scattered the padded tail, which is why every
+    # consumer must crop the kernel output to n_c_blocks first.
+    assert int(c_indptr[-1]) == n_c, (c_indptr[-1], n_c)
+    assert (a_tab[n_c:] == a_zero).all() and (b_tab[n_c:] == b_zero).all()
     return BsrSpgemmMeta(
         c_indptr=c_indptr,
         c_indices=c_indices,

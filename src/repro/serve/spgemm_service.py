@@ -43,6 +43,7 @@ import time
 
 import jax
 
+from repro.core import backend_registry
 from repro.core.chunk_stream import TRACE_COUNTS, chunked_spgemm_batched
 from repro.core.chunking import ChunkStats, instance_envelope
 from repro.core.planner import ChunkPlan, plan_knl
@@ -112,27 +113,36 @@ class SpGEMMService:
     width (short flush tails drop to the smallest power-of-two ladder width
     that fits, bounding both padding waste and per-bucket compiles),
     ``retrace_budget`` the maximum number of distinct compiled buckets, and
-    ``backend`` the executor every bucket runs (``"scan"`` | ``"pallas"`` |
-    ``"sparse"`` | ``"hash"`` | ``"auto"``; auto resolves per bucket from
-    the planner byte models).
+    ``backend`` the executor every bucket runs: any registered spec with a
+    batched entry (``backend_registry.batched_backends()``) or ``"auto"``,
+    which resolves per bucket from the planner byte models. ``block_size``
+    opts the block-level symbolic phase into every submit-time envelope
+    (defaulted from the spec for block backends like ``"bsr"``; set it
+    explicitly under ``"auto"`` to let buckets resolve to a block backend).
     """
 
     def __init__(self, plan: ChunkPlan | None = None, *,
                  fast_limit_bytes: float | None = None,
                  quantum: int = 32, max_batch: int = 4,
-                 retrace_budget: int = 8, backend: str = "scan"):
+                 retrace_budget: int = 8, backend: str = "scan",
+                 block_size: int | None = None):
         if plan is None and fast_limit_bytes is None:
             raise ValueError("need a fixed plan or fast_limit_bytes to plan by")
         if max_batch < 1 or quantum < 1 or retrace_budget < 1:
             raise ValueError("quantum, max_batch, retrace_budget must be >= 1")
-        if backend not in ("scan", "pallas", "sparse", "hash", "auto"):
-            raise ValueError(f"unknown backend {backend!r}")
+        spec = None if backend == "auto" else backend_registry.get(backend)
+        if spec is not None and not spec.supports_batched:
+            raise ValueError(
+                f"backend {backend!r} does not support batched execution")
+        if block_size is None and spec is not None and spec.needs_block_caps:
+            block_size = spec.block_size
         self._plan = plan
         self._fast_limit = fast_limit_bytes
         self.quantum = quantum
         self.max_batch = max_batch
         self.retrace_budget = retrace_budget
         self.backend = backend
+        self.block_size = block_size
         # bounded microbatch width ladder: powers of two below max_batch plus
         # max_batch itself ({1, 2, 4, ..., max_batch})
         self.widths = sorted(
@@ -199,7 +209,8 @@ class SpGEMMService:
     def submit(self, A: CSR, B: CSR) -> int:
         """Queue one C = A x B request; returns its request id."""
         plan = self._plan_for(A, B)
-        env = instance_envelope(A, B, plan).quantized(self.quantum)
+        env = instance_envelope(
+            A, B, plan, block_size=self.block_size).quantized(self.quantum)
         bucket = self._resolve_bucket(env, plan)
         req = SpGEMMRequest(self._next_id, A, B, time.perf_counter())
         self._next_id += 1
@@ -236,9 +247,10 @@ class SpGEMMService:
             from repro.core.planner import select_accumulator_backend
 
             backend = select_accumulator_backend(bucket.plan, bucket.envelope)
-        suffix = {"pallas": "pallas_batched", "sparse": "sparse_batched",
-                  "hash": "hash_batched"}.get(backend, "batched")
-        counter = f"{bucket.plan.algorithm}_{suffix}"
+        # the spec's trace-key template names the counter the compile
+        # accounting below watches — no per-backend suffix table to maintain
+        counter = backend_registry.get(backend).trace_key_batched.format(
+            alg=bucket.plan.algorithm)
         responses = []
         while bucket.queue:
             batch = bucket.queue[: self.max_batch]

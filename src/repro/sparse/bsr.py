@@ -109,6 +109,29 @@ def bsr_from_dense(dense, block_size: int, pad_to: int | None = None,
     )
 
 
+def bsr_blocks_with_sentinel(m: BSR) -> jax.Array:
+    """Blocks array with the zero-sentinel block appended at index ``nbl_pad``.
+
+    The BSR SpGEMM kernel's padding slots all point at ``nbl_pad``
+    (``kernels.bsr_spgemm.bsr_spgemm_symbolic``), so slot ``nbl_pad`` being
+    all-zero is what makes padding grid steps MAC nothing. This helper is the
+    one place the sentinel is appended, and it *verifies* the container
+    contract on the way: the padding tail (``blocks[n_blocks:]``) must be
+    all-zero, because a conversion that left garbage there would hand any
+    mis-aimed slot a nonzero tile and corrupt C silently instead of loudly.
+    """
+    blocks = np.asarray(m.blocks)
+    nbl = int(np.asarray(m.block_indptr)[-1])
+    if blocks[nbl:].any():
+        raise ValueError(
+            f"BSR padding tail (blocks {nbl}..{blocks.shape[0]}) contains "
+            "nonzeros; the kernel's zero-sentinel contract requires padding "
+            "blocks to be all-zero"
+        )
+    zero = np.zeros((1,) + blocks.shape[1:], blocks.dtype)
+    return jnp.asarray(np.concatenate([blocks, zero]))
+
+
 def bsr_to_dense(m: BSR) -> jax.Array:
     """JAX-traceable densify via scatter-add of blocks."""
     bs, mb, nb = m.block_size, m.mb, m.nb

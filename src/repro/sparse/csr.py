@@ -168,6 +168,22 @@ def csr_select_rows_host(m: CSR, r0: int, r1: int, pad_to: int | None = None) ->
                                pad_to, dtype=m.dtype)
 
 
+def _union_bsr_caps(a: tuple, b: tuple) -> tuple:
+    """Elementwise max of two block-cap tuples. Mixing a block-capped
+    envelope with an uncapped one (or two different block sizes) is a caller
+    bug — the union would either silently drop the caps or silently change
+    the block geometry — so both fail loudly."""
+    if not a and not b:
+        return ()
+    if not a or not b:
+        raise ValueError(
+            "cannot union a block-capped envelope with an uncapped one; "
+            "build every instance envelope with the same block_size")
+    if a[0] != b[0]:
+        raise ValueError(f"block_size mismatch in envelope union: {a[0]} vs {b[0]}")
+    return (a[0], *(max(x, y) for x, y in zip(a[1:], b[1:])))
+
+
 @dataclasses.dataclass(frozen=True)
 class GeometryEnvelope:
     """Padded geometry that a chunked-SpGEMM executable is compiled for.
@@ -206,6 +222,13 @@ class GeometryEnvelope:
     dtype: str          # value dtype name ("float32", ...)
     c_nnz_cap: int = 0      # whole-C structure capacity (symbolic; 0 = unset)
     c_max_row_nnz: int = 0  # densest C row bound (symbolic; 0 = unset)
+    # Block-geometry caps for block-structured (BSR) backends, as the tuple
+    # (block_size, nbl_a_cap, nbl_b_cap, nc_cap, u_cap) from
+    # ``repro.core.symbolic.bsr_plan_caps`` — already quantized there, so the
+    # tuple IS the backend's compile key. ``()`` = not computed: block
+    # analysis is opt-in (costs a host pass), and an uncapped envelope prices
+    # block backends at infinity in the planner, excluding them from ``auto``.
+    bsr_caps: tuple = ()
 
     def _check_compatible(self, other: "GeometryEnvelope") -> None:
         if (self.a_shape != other.a_shape or self.b_shape != other.b_shape
@@ -232,6 +255,7 @@ class GeometryEnvelope:
             dtype=self.dtype,
             c_nnz_cap=max(self.c_nnz_cap, other.c_nnz_cap),
             c_max_row_nnz=max(self.c_max_row_nnz, other.c_max_row_nnz),
+            bsr_caps=_union_bsr_caps(self.bsr_caps, other.bsr_caps),
         )
 
     def dominates(self, other: "GeometryEnvelope") -> bool:
@@ -249,7 +273,18 @@ class GeometryEnvelope:
                 and self.strip_nnz_cap >= other.strip_nnz_cap
                 and self.c_pad >= other.c_pad
                 and self.c_nnz_cap >= other.c_nnz_cap
-                and self.c_max_row_nnz >= other.c_max_row_nnz)
+                and self.c_max_row_nnz >= other.c_max_row_nnz
+                and self._dominates_bsr_caps(other))
+
+    def _dominates_bsr_caps(self, other: "GeometryEnvelope") -> bool:
+        # An uncapped request fits any envelope (block caps only matter to
+        # block backends, which demand a capped envelope at dispatch); a
+        # capped request needs same-block-size caps at least as large.
+        if not other.bsr_caps:
+            return True
+        if not self.bsr_caps or self.bsr_caps[0] != other.bsr_caps[0]:
+            return False
+        return all(s >= o for s, o in zip(self.bsr_caps[1:], other.bsr_caps[1:]))
 
     def quantized(self, quantum: int = 32) -> "GeometryEnvelope":
         """Round the nnz caps up to ``quantum`` multiples and the row-nnz
@@ -276,6 +311,9 @@ class GeometryEnvelope:
             c_nnz_cap=up(self.c_nnz_cap) if self.c_nnz_cap else 0,
             c_max_row_nnz=(up_pow2(self.c_max_row_nnz)
                            if self.c_max_row_nnz else 0),
+            # block caps arrive pre-quantized from the block symbolic phase
+            # (their own block-count quantum, not the nnz quantum)
+            bsr_caps=self.bsr_caps,
         )
 
     @classmethod

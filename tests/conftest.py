@@ -16,11 +16,26 @@ NOTE: no XLA_FLAGS here on purpose — tests must see exactly 1 CPU device
 
 import inspect
 
+import jax
 import numpy as np
 import pytest
 import jax.numpy as jnp  # noqa: F401  (re-exported convenience for tests)
 
 from repro.sparse.csr import CSR, csr_from_dense
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _release_compiled_executables_between_modules():
+    """Drop jit caches at module boundaries.
+
+    The full suite compiles hundreds of executables in one process (arch
+    smokes, the conformance matrix, every chunked backend); on the 1-CPU CI
+    box the accumulated XLA compile state eventually segfaults the CPU
+    compiler mid-suite. No module relies on warm caches from a previous
+    module — the trace-count pins all measure deltas within a single test.
+    """
+    yield
+    jax.clear_caches()
 
 try:
     # re-exported: test modules import given/settings/st from conftest

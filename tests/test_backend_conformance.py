@@ -4,9 +4,12 @@ One seeded geometry matrix — empty rows, skewed rows, all-zero chunks,
 single-column B, all-zero B, wide-but-sparse outputs — runs through **every**
 ``chunked_spgemm`` backend and is asserted allclose to the loop oracle at
 matched ``c_pad`` (scan additionally bitwise, which ``assert_close`` at tiny
-atol effectively witnesses via identical float schedules). New backends
-register in ``BACKENDS``/``BATCHED_BACKENDS`` and inherit the whole matrix:
-correctness guarantees come from this suite, not per-backend ad-hoc tests.
+atol effectively witnesses via identical float schedules). The backend lists
+are **derived from the registry** (``repro.core.backend_registry``): a new
+backend's one registration call enrolls it in the whole matrix — correctness
+guarantees come from this suite, not per-backend ad-hoc tests — and the
+registry-completeness test pins the expected roster so an accidentally
+dropped registration fails here, not in production dispatch.
 
 The trace-count section pins the *exact* ``TRACE_COUNTS`` deltas of every
 backend across repeat / same-envelope / new-envelope calls, so a silent
@@ -22,6 +25,7 @@ diffs (the determinism job in .github/workflows/ci.yml).
 import numpy as np
 import pytest
 
+from repro.core import backend_registry
 from repro.core.chunk_stream import TRACE_COUNTS, chunked_spgemm_batched
 from repro.core.chunking import (
     batch_envelope, chunked_spgemm, default_c_pad, instance_envelope,
@@ -33,11 +37,48 @@ from repro.sparse.csr import csr_from_dense, csr_to_dense
 from repro.serve.spgemm_service import SpGEMMService
 from conftest import assert_close, random_csr, random_dense
 
-# every chunked_spgemm backend; new backends register here (and in
-# BATCHED_BACKENDS below when they support chunked_spgemm_batched)
-BACKENDS = ["loop", "scan", "pallas", "sparse", "hash", "auto"]
-BATCHED_BACKENDS = ["scan", "pallas", "sparse", "hash", "auto"]
+# registry-derived backend matrix: registering a BackendSpec enrolls the
+# backend in every test below; nothing is named by hand
+BACKENDS = [*backend_registry.all_backends(), "auto"]
+BATCHED_BACKENDS = [*backend_registry.batched_backends(), "auto"]
 ALGORITHMS = ["knl", "chunk1", "chunk2"]
+
+
+def _block_size_for(backend: str) -> int | None:
+    """The envelope block edge a backend needs (None for non-block backends
+    and for auto, whose resolve under uncapped envelopes never picks one)."""
+    if backend == "auto":
+        return None
+    spec = backend_registry.get(backend)
+    return spec.block_size if spec.needs_block_caps else None
+
+
+def test_registry_completeness():
+    """The registration contract: the expected roster in priority order,
+    every spec covering every algorithm, batched + trace-keyed except the
+    loop oracle, byte models on every accumulator, a block edge on every
+    block backend. A dropped or malformed registration fails here, not as a
+    cryptic dispatch error."""
+    specs = backend_registry.specs()
+    assert [s.name for s in specs] == ["loop", "scan", "pallas", "sparse",
+                                       "hash", "bsr"]
+    for s in specs:
+        assert set(backend_registry.ALGORITHMS) <= set(s.executors), s.name
+        if s.name == "loop":
+            assert not s.supports_batched
+        else:
+            assert s.supports_batched, s.name
+            assert s.trace_key and s.trace_key_batched, s.name
+        if s.is_accumulator:
+            assert s.byte_model is not None, s.name
+        if s.needs_block_caps:
+            assert s.block_size, s.name
+    assert backend_registry.batched_backends() == ("scan", "pallas", "sparse",
+                                                   "hash", "bsr")
+    assert tuple(s.name for s in backend_registry.accumulator_specs()) == (
+        "pallas", "sparse", "hash", "bsr")
+    with pytest.raises(ValueError, match="unknown backend"):
+        backend_registry.get("nope")
 
 
 def _thirds(n: int) -> tuple:
@@ -186,12 +227,13 @@ def test_service_conformance(backend):
 # trace-count regression: exact deltas per backend
 # ---------------------------------------------------------------------------
 
-# TRACE_COUNTS key of each backend's unbatched jitted core ({alg} formats in)
-TRACE_KEYS = {"scan": "{alg}", "pallas": "{alg}_pallas",
-              "sparse": "{alg}_sparse", "hash": "{alg}_hash"}
-TRACE_KEYS_BATCHED = {"scan": "{alg}_batched", "pallas": "{alg}_pallas_batched",
-                      "sparse": "{alg}_sparse_batched",
-                      "hash": "{alg}_hash_batched"}
+# TRACE_COUNTS key of each backend's jitted core ({alg} formats in) — pulled
+# from the registry, so a registration's trace keys are what gets pinned
+TRACE_KEYS = {s.name: s.trace_key for s in backend_registry.specs()
+              if s.trace_key}
+TRACE_KEYS_BATCHED = {s.name: s.trace_key_batched
+                      for s in backend_registry.specs()
+                      if s.trace_key_batched}
 
 
 def _trace_key(backend: str, algorithm: str, plan, env) -> str:
@@ -210,8 +252,7 @@ def _trace_geometry(rng, m=21, k=19, n=13, da=0.25, db=0.3):
     return random_csr(rng, m, k, da), random_csr(rng, k, n, db)
 
 
-@pytest.mark.parametrize("backend", ["scan", "pallas", "sparse", "hash",
-                                     "auto"])
+@pytest.mark.parametrize("backend", [*TRACE_KEYS, "auto"])
 @pytest.mark.parametrize("algorithm", ALGORITHMS)
 def test_trace_counts_exact(algorithm, backend):
     """first call = exactly one trace of the backend core; repeat and
@@ -263,7 +304,8 @@ def test_trace_counts_exact_batched(backend):
     As = [random_csr(rng, 22, 17, 0.2) for _ in range(2)]
     Bs = [random_csr(rng, 17, 12, 0.25) for _ in range(2)]
     plan = _plan(algorithm, As[0], Bs[0])
-    env = batch_envelope(As, Bs, plan)
+    block = _block_size_for(backend)
+    env = batch_envelope(As, Bs, plan, block_size=block)
     resolved = (select_accumulator_backend(plan, env) if backend == "auto"
                 else backend)
     key = TRACE_KEYS_BATCHED[resolved].format(alg=algorithm)
@@ -294,7 +336,7 @@ def test_trace_counts_exact_batched(backend):
     # auto resolves to under the grown envelope
     As3 = [random_csr(rng, 22, 17, 0.5) for _ in range(2)]
     Bs3 = [random_csr(rng, 17, 12, 0.5) for _ in range(2)]
-    env3 = env.union(batch_envelope(As3, Bs3, plan))
+    env3 = env.union(batch_envelope(As3, Bs3, plan, block_size=block))
     resolved3 = (select_accumulator_backend(plan, env3) if backend == "auto"
                  else backend)
     key3 = TRACE_KEYS_BATCHED[resolved3].format(alg=algorithm)

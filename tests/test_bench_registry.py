@@ -5,6 +5,7 @@ stale SUITES entry (double-run) or none (silently dropped from full runs).
 """
 
 import collections
+import pathlib
 
 from benchmarks.chunking_bench import JSON_LANES
 from benchmarks.run import SUITES, _resolve
@@ -31,5 +32,23 @@ def test_json_lanes_have_driver_entries():
     for lane in JSON_LANES:
         assert lane in SUITES, f"JSON lane {lane!r} missing from run.SUITES"
     assert "accumulator_shootout" in JSON_LANES
+    assert "bsr_blocking" in JSON_LANES
     assert "dense_vs_sparse_accum" not in SUITES, \
         "stale pre-shootout lane name still registered"
+
+
+def test_ci_smokes_every_json_lane():
+    """Registry-driven CI gating: the workflow must carry a smoke step (and
+    artifact capture) for every registered JSON lane, so registering a lane
+    without wiring its CI gate fails the fast test lane — the same
+    add-one-registration contract the backend registry gives executors."""
+    ci = (pathlib.Path(__file__).resolve().parents[1]
+          / ".github" / "workflows" / "ci.yml").read_text()
+    for lane in JSON_LANES:
+        if lane == "scan_vs_pallas":
+            continue                     # the workflow's default (laneless) run
+        assert f"--lane {lane}" in ci, \
+            f"JSON lane {lane!r} has no smoke step in .github/workflows/ci.yml"
+    assert "upload-artifact" in ci, "bench artifacts are not uploaded by CI"
+    assert "bench_trajectory" in ci, \
+        "bench trajectory persistence step missing from CI"

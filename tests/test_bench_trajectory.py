@@ -1,0 +1,89 @@
+"""The bench-trajectory persistence tool: schema, idempotence, CLI contract.
+
+The tool is what CI trusts to keep ``BENCH_trajectory.json`` an append-only,
+duplicate-free record; these tests pin the properties that make that safe to
+run unattended (re-runs are no-ops, malformed inputs fail loudly, summaries
+are bounded) against the committed seed file's actual schema.
+"""
+
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+TOOL = REPO / "tools" / "bench_trajectory.py"
+
+sys.path.insert(0, str(REPO / "tools"))
+from bench_trajectory import append_entries, summarize  # noqa: E402
+
+
+def _report(lane="chunking_bsr_blocking", n=3):
+    return {
+        "bench": lane,
+        "problem": "synthetic/64x64x64",
+        "interpret_mode": True,
+        "rows": [{"case": f"r{i}", "bsr_us": 10.0 * (i + 1),
+                  "bsr_fast_bytes": 9484, "byte_winner": "bsr"}
+                 for i in range(n)],
+    }
+
+
+def test_summarize_is_bounded_and_numeric_median():
+    s = summarize(_report(n=5))
+    assert s["n_rows"] == 5
+    assert s["row_medians"]["bsr_us"] == 30.0
+    assert s["row_medians"]["bsr_fast_bytes"] == 9484
+    assert "rows" not in s
+    assert s["bench"] == "chunking_bsr_blocking"
+    # non-numeric row fields never leak into the medians
+    assert "case" not in s["row_medians"] and "byte_winner" not in s["row_medians"]
+
+
+def test_append_idempotent_per_sha_lane(tmp_path):
+    out = tmp_path / "traj.json"
+    added = append_entries(out, "abc123", "2026-08-08", [_report()])
+    assert [e["lane"] for e in added] == ["chunking_bsr_blocking"]
+    # same (sha, lane): no-op; new lane under the same sha: appended
+    assert append_entries(out, "abc123", "2026-08-08", [_report()]) == []
+    added = append_entries(out, "abc123", "2026-08-08",
+                           [_report(), _report(lane="chunking_scan_vs_pallas")])
+    assert [e["lane"] for e in added] == ["chunking_scan_vs_pallas"]
+    doc = json.loads(out.read_text())
+    assert len(doc["entries"]) == 2
+    # a new sha re-records the same lane (that is the trajectory)
+    append_entries(out, "def456", "2026-08-09", [_report()])
+    assert len(json.loads(out.read_text())["entries"]) == 3
+
+
+def test_cli_end_to_end(tmp_path):
+    rep = tmp_path / "rep.json"
+    rep.write_text(json.dumps(_report()))
+    out = tmp_path / "traj.json"
+    cmd = [sys.executable, str(TOOL), str(rep), "--sha", "feed01",
+           "--date", "2026-08-08", "--out", str(out)]
+    r1 = subprocess.run(cmd, capture_output=True, text=True)
+    assert r1.returncode == 0 and "appended chunking_bsr_blocking" in r1.stdout
+    r2 = subprocess.run(cmd, capture_output=True, text=True)
+    assert r2.returncode == 0 and "nothing to append" in r2.stdout
+    doc = json.loads(out.read_text())
+    assert len(doc["entries"]) == 1
+    assert doc["entries"][0]["sha"] == "feed01"
+
+
+def test_lane_name_required(tmp_path):
+    out = tmp_path / "traj.json"
+    with pytest.raises(SystemExit, match="no 'bench' lane name"):
+        append_entries(out, "abc", "2026-08-08", [{"rows": []}])
+    assert not out.exists()
+
+
+def test_committed_seed_matches_schema():
+    doc = json.loads((REPO / "BENCH_trajectory.json").read_text())
+    assert isinstance(doc["entries"], list) and doc["entries"]
+    for e in doc["entries"]:
+        assert {"sha", "date", "lane", "summary"} <= set(e)
+        assert e["summary"]["n_rows"] >= 1
+        assert isinstance(e["summary"]["row_medians"], dict)

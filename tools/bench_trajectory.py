@@ -1,0 +1,92 @@
+"""Append bench-lane JSON reports to the committed trajectory file.
+
+CI runs every smoke JSON lane, tees each report to ``bench-artifacts/``
+(uploaded as workflow artifacts), then runs this tool to fold a compact
+summary of each report into ``BENCH_trajectory.json`` — the committed,
+append-only record of how the lanes' headline numbers move across commits.
+Artifacts hold the full per-row data for a few weeks; the trajectory file
+holds the durable curve.
+
+Stdlib-only and idempotent: an (sha, lane) pair already present is skipped,
+so re-runs (workflow retries, local invocations) never duplicate entries.
+
+    python tools/bench_trajectory.py --sha <sha> [--date ISO] \
+        [--out BENCH_trajectory.json] report.json [report2.json ...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+from datetime import datetime, timezone
+from pathlib import Path
+
+
+def summarize(report: dict) -> dict:
+    """Compact lane summary: lane-level scalar fields verbatim, per-row
+    numeric metrics reduced to medians. Bounded regardless of row count."""
+    rows = report.get("rows", [])
+    summary = {k: v for k, v in report.items()
+               if k != "rows" and not isinstance(v, list)}
+    metrics = {}
+    for row in rows:
+        for k, v in row.items():
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                metrics.setdefault(k, []).append(float(v))
+    summary["n_rows"] = len(rows)
+    summary["row_medians"] = {
+        k: round(statistics.median(vs), 3) for k, vs in sorted(metrics.items())
+    }
+    return summary
+
+
+def append_entries(out_path: Path, sha: str, date: str,
+                   reports: list) -> list:
+    """Fold reports into the trajectory file; returns the appended entries."""
+    if out_path.exists():
+        doc = json.loads(out_path.read_text())
+    else:
+        doc = {"entries": []}
+    if "entries" not in doc or not isinstance(doc["entries"], list):
+        raise SystemExit(f"{out_path}: not a trajectory file (no entries list)")
+    seen = {(e.get("sha"), e.get("lane")) for e in doc["entries"]}
+    added = []
+    for report in reports:
+        lane = report.get("bench")
+        if not lane:
+            raise SystemExit("report has no 'bench' lane name")
+        if (sha, lane) in seen:
+            continue
+        entry = {"sha": sha, "date": date, "lane": lane,
+                 "summary": summarize(report)}
+        doc["entries"].append(entry)
+        seen.add((sha, lane))
+        added.append(entry)
+    if added:
+        out_path.write_text(json.dumps(doc, indent=2) + "\n")
+    return added
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("reports", nargs="+", type=Path,
+                    help="bench-lane JSON report files")
+    ap.add_argument("--sha", required=True, help="commit the reports measure")
+    ap.add_argument("--date", default=None,
+                    help="ISO date of the measurement (default: now, UTC)")
+    ap.add_argument("--out", type=Path, default=Path("BENCH_trajectory.json"))
+    args = ap.parse_args(argv)
+    date = args.date or datetime.now(timezone.utc).strftime("%Y-%m-%d")
+    reports = [json.loads(p.read_text()) for p in args.reports]
+    added = append_entries(args.out, args.sha, date, reports)
+    for e in added:
+        print(f"appended {e['lane']} @ {e['sha']}")
+    if not added:
+        print("nothing to append (all (sha, lane) pairs already recorded)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
