@@ -39,7 +39,7 @@ from repro.core.planner import plan_chunks, plan_knl, row_bytes_csr
 from repro.sparse import multigrid
 
 
-def _modeled_chunk_gflops(system, plan, stats, ws, st, A, B) -> float:
+def _modeled_chunk_gflops(system, _plan, stats, ws, st, A, B) -> float:
     """Kernel runs at fast-memory speed; staged copies pay the copy engine."""
     nnz_a = float(np.asarray(A.indptr)[-1])
     from repro.core.memory_model import spgemm_cost
@@ -120,10 +120,10 @@ def run_loop_vs_scan():
 
     for plan, label in cases:
         c_pad = default_c_pad(A, P, plan)
-        us_loop = timeit(lambda: chunked_spgemm(A, P, plan, c_pad,
-                                                backend="loop"), repeats=3)
-        us_scan = timeit(lambda: chunked_spgemm(A, P, plan, c_pad,
-                                                backend="scan"), repeats=3)
+        us_loop = timeit(lambda plan=plan, c_pad=c_pad: chunked_spgemm(
+            A, P, plan, c_pad, backend="loop"), repeats=3)
+        us_scan = timeit(lambda plan=plan, c_pad=c_pad: chunked_spgemm(
+            A, P, plan, c_pad, backend="scan"), repeats=3)
         emit_compare(
             f"scan_vs_loop/{prob}/AxP/{label}"
             f"[{plan.algorithm};ac={plan.n_ac};b={plan.n_b}]",
@@ -161,12 +161,10 @@ def run_scan_vs_pallas(smoke: bool = False) -> dict:
         # call instead of re-executing after the timed runs
         _, stats_scan = chunked_spgemm(A, P, plan, c_pad, backend="scan")
         _, stats_pallas = chunked_spgemm(A, P, plan, c_pad, backend="pallas")
-        us_scan = timeit(lambda: chunked_spgemm(A, P, plan, c_pad,
-                                                backend="scan"),
-                         repeats=repeats)
-        us_pallas = timeit(lambda: chunked_spgemm(A, P, plan, c_pad,
-                                                  backend="pallas"),
-                           repeats=repeats)
+        us_scan = timeit(lambda plan=plan, c_pad=c_pad: chunked_spgemm(
+            A, P, plan, c_pad, backend="scan"), repeats=repeats)
+        us_pallas = timeit(lambda plan=plan, c_pad=c_pad: chunked_spgemm(
+            A, P, plan, c_pad, backend="pallas"), repeats=repeats)
         rows.append({
             "case": f"{prob}/AxP/{label}",
             "algorithm": plan.algorithm,
@@ -252,14 +250,13 @@ def run_accumulator_shootout(smoke: bool = False) -> dict:
             "c_density": round(c_nnz / float(m * n), 5),
         }
         for backend in ("pallas", "sparse", "hash"):
-            us = timeit(lambda be=backend: chunked_spgemm(A, B, plan, c_pad,
-                                                          backend=be),
-                        repeats=repeats)
+            us = timeit(lambda be=backend, B=B, c_pad=c_pad: chunked_spgemm(
+                A, B, plan, c_pad, backend=be), repeats=repeats)
             row[f"{backend}_us"] = round(us, 1)
             row[f"{backend}_fast_bytes"] = models[backend].fast_bytes_needed
         row["byte_winner"] = min(
             ("pallas", "sparse", "hash"),
-            key=lambda be: row[f"{be}_fast_bytes"])
+            key=lambda be, row=row: row[f"{be}_fast_bytes"])
         row["auto_backend"] = auto_pick
         assert auto_pick == row["byte_winner"], (
             f"auto dispatch disagrees with the byte argmin at {row['case']}")
@@ -368,13 +365,13 @@ def run_bsr_blocking(smoke: bool = False) -> dict:
         for backend in ("pallas", "hash", "bsr"):
             kw = {"block_size": bs} if backend == "bsr" else {}
             C, _ = chunked_spgemm(A, B, plan, backend=backend, **kw)
-            us = timeit(lambda be=backend, k=kw: chunked_spgemm(
+            us = timeit(lambda be=backend, k=kw, A=A, B=B: chunked_spgemm(
                 A, B, plan, backend=be, **k), repeats=repeats)
             row[f"{backend}_us"] = round(us, 1)
         # the blocked backend must stay correct at every blockiness
         assert np.allclose(np.asarray(csr_to_dense(C)),
                            np.asarray(spgemm_dense_oracle(A, B)), atol=1e-4)
-        row["byte_winner"] = min(models, key=lambda be:
+        row["byte_winner"] = min(models, key=lambda be, models=models:
                                  models[be].fast_bytes_needed)
         row["auto_backend"] = auto_pick
         assert auto_pick == row["byte_winner"], (

@@ -1,0 +1,30 @@
+"""Static backend verifier: abstract-traces every registered backend core
+(``jax.make_jaxpr`` on envelope-shaped inputs, no device execution) and runs
+three analyses — VMEM footprint vs the planner byte models, DMA double-buffer
+schedule structure, and retrace-leak detection. See ``docs/static_analysis.md``
+and ``tools/audit_backends.py`` (the CLI / CI entry point)."""
+
+from repro.analysis.dma import (
+    check_dma_structure, check_while_bounds, collect_dma_events,
+    simulate_schedule,
+)
+from repro.analysis.report import (
+    Violation, audit_all, audit_backend_case,
+)
+from repro.analysis.retrace import check_retrace, diff_summary, trace_text
+from repro.analysis.vmem import VmemAudit, audit_vmem
+
+__all__ = [
+    "VmemAudit",
+    "Violation",
+    "audit_all",
+    "audit_backend_case",
+    "audit_vmem",
+    "check_dma_structure",
+    "check_retrace",
+    "check_while_bounds",
+    "collect_dma_events",
+    "diff_summary",
+    "simulate_schedule",
+    "trace_text",
+]

@@ -1,0 +1,230 @@
+"""DMA schedule checker: proves the two-slot double buffer is race-free.
+
+Two complementary passes over one backend core:
+
+**Host simulation** (:func:`simulate_schedule`) replays the slot arithmetic
+of ``repro.kernels.dma_schedule`` — the module the kernels themselves import
+— over every linear grid step of the audited launch and asserts the
+pipeline invariants concretely: the step-``j`` prefetch of element ``j+1``
+never targets the slot step ``j`` is reading (slot parity), a slot is never
+overwritten before its previous element was consumed, every read consumes a
+copy that was started *and* waited on, and every streamed element is copied
+and read exactly once. Because the kernels take their slot indices from the
+same functions, simulating the module is simulating the kernels.
+
+**Jaxpr structure** (:func:`check_dma_structure`) walks the traced kernel
+body and verifies what the simulation cannot see — that the lowered program
+actually contains the schedule: every ``dma_start`` targets a VMEM scratch
+buffer (the double buffer), each stream buffer receives exactly
+``n_slots`` starts (the warm-up prime plus the steady-state prefetch path),
+and a matching ``dma_wait`` on that buffer precedes its first read in
+program order. ``dma_start`` eqns live inside the ``pl.when`` cond
+branches, so the walker threads variable identity through branch invars
+positionally (a cond eqn's invars after the predicate map one-to-one onto
+its branch jaxprs' invars).
+
+The while-loop pass (:func:`check_while_bounds`) closes the hash kernel's
+probe-termination contract: every ``while`` in an audited kernel must carry
+a static comparison literal (a derivable step bound), and for the hash
+backend that literal must equal
+``probe_step_bound(planner.hash_table_slots(...))`` of the audited
+envelope — the table the planner sized is the loop bound the kernel baked.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.analysis.jaxpr_tools import (
+    is_literal, kernel_jaxpr, kernel_operands, pallas_calls, unwrap,
+    while_loop_bounds,
+)
+from repro.kernels.dma_schedule import TWO_SLOT
+
+
+def simulate_schedule(total: int, schedule=TWO_SLOT) -> list:
+    """Replay the double-buffer schedule over ``total`` linear grid steps.
+
+    Returns a list of violation strings (empty = race-free). ``schedule`` is
+    any object with the :class:`repro.kernels.dma_schedule.SlotSchedule`
+    surface — the production ``TWO_SLOT`` by default, or a deliberately
+    broken one (the negative fixtures).
+    """
+    violations = []
+    # per-slot state: (element, waited, consumed) or None (never written)
+    slots = [None] * schedule.n_slots
+    copied = set()
+    read = set()
+
+    def start(step, elem, slot, what):
+        if not 0 <= slot < schedule.n_slots:
+            violations.append(
+                f"step {step}: {what} targets slot {slot} outside the "
+                f"{schedule.n_slots}-slot buffer")
+            return
+        state = slots[slot]
+        if state is not None and not state[2]:
+            violations.append(
+                f"step {step}: {what} of element {elem} overwrites slot "
+                f"{slot} holding unconsumed element {state[0]}")
+        if elem in copied:
+            violations.append(
+                f"step {step}: element {elem} copied twice")
+        copied.add(elem)
+        slots[slot] = (elem, False, False)
+
+    for lin in range(total):
+        if schedule.is_prime_step(lin):
+            start(lin, 0, schedule.prime_slot(), "warm-up copy")
+        if schedule.has_prefetch(lin, total):
+            pslot = schedule.prefetch_slot(lin)
+            if pslot == schedule.read_slot(lin):
+                violations.append(
+                    f"step {lin}: prefetch of element {lin + 1} targets "
+                    f"slot {pslot}, the slot this step reads — "
+                    "write-after-read race")
+            start(lin, lin + 1, pslot, "prefetch")
+        rslot = schedule.read_slot(lin)
+        if not 0 <= rslot < schedule.n_slots or slots[rslot] is None:
+            violations.append(
+                f"step {lin}: reads slot {rslot}, which holds no element")
+            continue
+        elem, _, consumed = slots[rslot]
+        if elem != lin:
+            violations.append(
+                f"step {lin}: reads slot {rslot} holding element {elem}, "
+                f"expected element {lin}")
+        if consumed:
+            violations.append(
+                f"step {lin}: re-reads already-consumed element {elem}")
+        # the kernels wait on exactly the slot they read, every step
+        slots[rslot] = (elem, True, True)
+        read.add(elem)
+
+    missing = set(range(total)) - read
+    if missing:
+        violations.append(
+            f"elements never streamed: {sorted(missing)[:8]}"
+            f"{'...' if len(missing) > 8 else ''}")
+    return violations
+
+
+def _resolve(env: dict, var):
+    if is_literal(var):
+        return var
+    return env.get(var, var)
+
+
+def collect_dma_events(kjaxpr) -> list:
+    """(kind, dst_var, src_var) events of one kernel body, in program order,
+    with ``dma_start`` destinations resolved through cond-branch and pjit
+    invar mappings back to kernel-invar identity. Kinds: ``"start"``,
+    ``"wait"``, ``"get"`` (dst = the ref being read, src = None).
+    """
+    events = []
+
+    def walk(jaxpr, env):
+        for eqn in jaxpr.eqns:
+            name = eqn.primitive.name
+            if name in ("dma_start", "dma_wait"):
+                flat = [_resolve(env, v) for v in eqn.invars]
+                parts = jax.tree_util.tree_unflatten(eqn.params["tree"], flat)
+                src, _, dst = parts[0], parts[1], parts[2]
+                kind = "start" if name == "dma_start" else "wait"
+                events.append((kind, dst, src))
+            elif name == "get":
+                events.append(("get", _resolve(env, eqn.invars[0]), None))
+            elif name == "cond":
+                for branch in eqn.params["branches"]:
+                    body = unwrap(branch)
+                    sub_env = {
+                        lv: _resolve(env, ov)
+                        for lv, ov in zip(body.invars, eqn.invars[1:])
+                    }
+                    walk(body, sub_env)
+            elif name == "pjit":
+                body = unwrap(eqn.params["jaxpr"])
+                sub_env = {
+                    lv: _resolve(env, ov)
+                    for lv, ov in zip(body.invars, eqn.invars)
+                }
+                walk(body, sub_env)
+
+    walk(kjaxpr, {})
+    return events
+
+
+def check_dma_structure(traced, *, n_slots: int = TWO_SLOT.n_slots) -> list:
+    """Structural double-buffer checks on every pallas_call of a traced core.
+
+    Returns violation strings. Cores without DMA eqns (the scan backend, the
+    BSR kernel — their staging is BlockSpec-driven) pass vacuously.
+    """
+    violations = []
+    for call_ix, eqn in enumerate(pallas_calls(traced)):
+        kj = kernel_jaxpr(eqn)
+        ops = kernel_operands(eqn)
+        scratch_vars = {v for v, _ in ops["scratch"]}
+        events = collect_dma_events(kj)
+        starts = [e for e in events if e[0] == "start"]
+        if not starts:
+            continue
+        where = f"pallas_call #{call_ix}"
+        buffers = {}
+        for _, dst, _src in starts:
+            buffers.setdefault(dst, 0)
+            buffers[dst] += 1
+            if dst not in scratch_vars:
+                violations.append(
+                    f"{where}: dma_start destination {dst} is not a scratch "
+                    "operand — stream buffers must be VMEM scratch")
+        for dst, n in buffers.items():
+            if n != n_slots:
+                violations.append(
+                    f"{where}: stream buffer {dst} receives {n} dma_start "
+                    f"paths, expected {n_slots} (warm-up prime + prefetch)")
+        # a wait on the buffer must precede its first read, program order
+        for dst in buffers:
+            waited = False
+            for kind, ref, _src in events:
+                if kind == "wait" and ref is dst:
+                    waited = True
+                if kind == "get" and ref is dst:
+                    if not waited:
+                        violations.append(
+                            f"{where}: stream buffer {dst} is read before "
+                            "any dma_wait on it — unsynchronized read")
+                    break
+        # every started copy must be waited on somewhere
+        waited_bufs = {ref for kind, ref, _ in events if kind == "wait"}
+        for dst in buffers:
+            if dst not in waited_bufs:
+                violations.append(
+                    f"{where}: stream buffer {dst} has dma_starts but no "
+                    "dma_wait — the copy is never synchronized")
+    return violations
+
+
+def check_while_bounds(traced, *, expected_bound: int | None = None) -> list:
+    """Every ``while`` in the traced core must carry a static comparison
+    literal in its cond (a derivable step bound); with ``expected_bound``
+    (the hash backend: ``probe_step_bound(hash_table_slots(...))`` of the
+    audited envelope) that literal must be present among the candidates of
+    every probe loop."""
+    violations = []
+    bounds = while_loop_bounds(traced)
+    for ix, candidates in enumerate(bounds):
+        if not candidates:
+            violations.append(
+                f"while-loop #{ix}: no static comparison literal in its "
+                "cond — bound not derivable, loop may not terminate")
+        elif expected_bound is not None and expected_bound not in candidates:
+            violations.append(
+                f"while-loop #{ix}: cond literals {sorted(candidates)} do "
+                f"not include the planner-derived bound {expected_bound} "
+                "(probe_step_bound of hash_table_slots)")
+    if expected_bound is not None and not bounds:
+        violations.append(
+            "no while-loop found, but the backend's probe loops were "
+            "expected (hash kernel)")
+    return violations

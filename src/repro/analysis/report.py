@@ -1,0 +1,163 @@
+"""Audit orchestration: every registered backend x algorithm x geometry.
+
+One :func:`audit_all` call drives the whole static verifier:
+
+* the **schedule model** simulation (:mod:`repro.analysis.dma`) replays the
+  shared two-slot arithmetic over a sweep of launch lengths — once, since
+  every streaming kernel imports the same ``repro.kernels.dma_schedule``;
+* per (backend, algorithm, corpus case): the spec's ``audit_trace`` stages
+  the instance at its envelope, ``jax.make_jaxpr`` abstract-traces the core
+  (no device execution), and the trace feeds the VMEM domination audit, the
+  structural DMA checks, and the while-bound checks;
+* the **retrace-leak** pass stages the case and its structural-subset twin
+  at the shared (union) envelope and demands byte-identical jaxprs.
+
+The output is a JSON-able report dict; ``tools/audit_backends.py`` is the
+CLI wrapper and the ``static-audit`` CI job fails on any violation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.analysis import corpus
+from repro.analysis.dma import (
+    check_dma_structure, check_while_bounds, simulate_schedule,
+)
+from repro.analysis.retrace import check_retrace
+from repro.analysis.vmem import audit_vmem
+from repro.core import backend_registry
+
+# launch lengths the schedule simulation sweeps: 1 (prime-only), the parity
+# boundary cases, and enough steady-state steps to cover any corpus plan
+# (thirds-of-thirds launches never exceed 9 linear steps per batch row).
+SCHEDULE_SWEEP = tuple(range(1, 13))
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One auditor finding, locatable to (analysis, backend, algorithm,
+    case)."""
+
+    analysis: str      # "vmem" | "dma" | "while" | "retrace" | "schedule"
+    backend: str
+    algorithm: str
+    case: str
+    message: str
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _expected_while_bound(spec, target) -> int | None:
+    """The hash backend's probe loops must bake the planner-derived table
+    size as their static bound; other backends carry no expectation."""
+    if spec.name != "hash":
+        return None
+    from repro.kernels.hash_accum_spgemm import probe_step_bound
+
+    return probe_step_bound(target.meta["table_size"])
+
+
+def _case_envelope(spec, A, B, plan):
+    from repro.core.chunking import instance_envelope
+
+    block = spec.block_size if spec.needs_block_caps else None
+    return instance_envelope(A, B, plan, block_size=block)
+
+
+def audit_backend_case(spec, algorithm: str, case_name: str, A, B,
+                       retrace: bool = True):
+    """All analyses for one (backend, algorithm, instance). Returns
+    ``(record, violations)``: a JSON-able measurement record and the list
+    of :class:`Violation`."""
+    plan = corpus.make_plan(algorithm, A, B)
+    env = _case_envelope(spec, A, B, plan)
+    target = spec.audit_trace(A, B, plan, env.c_pad, env)
+    traced = jax.make_jaxpr(target.fn)(*target.args)
+    violations = []
+
+    def flag(analysis, messages):
+        violations.extend(
+            Violation(analysis, spec.name, algorithm, case_name, m)
+            for m in messages)
+
+    model = spec.byte_model(plan, env) if spec.byte_model is not None else None
+    vaudit = audit_vmem(traced, model)
+    if vaudit.dominated is False:
+        flag("vmem", [
+            f"byte model undercounts the traced VMEM footprint: model "
+            f"claims {vaudit.model_bytes:.0f} B but the trace stages "
+            f"{vaudit.traced_bytes:.0f} B (blocked-in "
+            f"{vaudit.blocked_in_bytes:.0f} + out {vaudit.output_bytes:.0f} "
+            f"+ scratch {vaudit.scratch_bytes:.0f} - alias credit "
+            f"{vaudit.alias_credit_bytes:.0f} + workspace "
+            f"{vaudit.workspace_bytes:.0f})"])
+    flag("dma", check_dma_structure(traced))
+    flag("while", check_while_bounds(
+        traced, expected_bound=_expected_while_bound(spec, target)))
+
+    if retrace:
+        A2, B2 = corpus.retrace_pair(A, B)
+        plan2 = corpus.make_plan(algorithm, A2, B2)
+        env_shared = env.union(_case_envelope(spec, A2, B2, plan2))
+        t1 = spec.audit_trace(A, B, plan, env_shared.c_pad, env_shared)
+        t2 = spec.audit_trace(A2, B2, plan, env_shared.c_pad, env_shared)
+        flag("retrace", check_retrace(t1, t2))
+
+    record = {
+        "backend": spec.name,
+        "algorithm": algorithm,
+        "case": case_name,
+        "vmem": dataclasses.asdict(vaudit),
+        "dominated": vaudit.dominated,
+        "n_pallas_calls": vaudit.n_pallas_calls,
+        "n_violations": len(violations),
+    }
+    return record, violations
+
+
+def audit_all(backends=None, algorithms=None, cases=None,
+              retrace: bool = True) -> dict:
+    """Run the full static audit. Returns a JSON-able report dict with
+    ``records`` (per backend x algorithm x case measurements),
+    ``violations``, ``skipped`` (non-auditable backends), and ``ok``."""
+    backend_registry.ensure_registered()
+    names = list(backends) if backends else list(backend_registry.all_backends())
+    algorithms = list(algorithms) if algorithms else list(backend_registry.ALGORITHMS)
+    case_names = list(cases) if cases else list(corpus.CASES)
+
+    violations = []
+    for total in SCHEDULE_SWEEP:
+        violations.extend(
+            Violation("schedule", "*", "*", f"total={total}", m)
+            for m in simulate_schedule(total))
+
+    records, skipped = [], []
+    for name in names:
+        spec = backend_registry.get(name)
+        if not spec.supports_audit:
+            skipped.append({"backend": name,
+                            "reason": "no audit_trace (host-loop oracle has "
+                                      "no jitted core)"})
+            continue
+        for case_name in case_names:
+            A, B = corpus.build_case(case_name)
+            for algorithm in algorithms:
+                record, v = audit_backend_case(
+                    spec, algorithm, case_name, A, B, retrace=retrace)
+                records.append(record)
+                violations.extend(v)
+
+    return {
+        "schedule_sweep": list(SCHEDULE_SWEEP),
+        "backends": names,
+        "algorithms": algorithms,
+        "cases": case_names,
+        "records": records,
+        "skipped": skipped,
+        "violations": [v.to_dict() for v in violations],
+        "ok": not violations,
+    }

@@ -1,0 +1,76 @@
+"""Retrace-leak detector: same envelope, same jaxpr — or a value leaked.
+
+A :class:`~repro.sparse.csr.GeometryEnvelope` is the compile key: two
+instances staged to one envelope must produce byte-identical traces of a
+backend core, otherwise some Python value derived from the instance *data*
+(an nnz count, a float, a host-computed table size) leaked into the trace —
+the silent-retrace bug class the conformance suite's ``TRACE_COUNTS``
+deltas only catch per-test, caught here structurally by diffing the jaxprs
+themselves.
+
+The staging contract is the spec's ``audit_trace``: both instances are
+staged at the *shared* envelope (exactly what the batched executors do), so
+any aval difference is itself a staging bug and reported as such before the
+jaxpr diff runs.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import jax
+
+
+def trace_text(target) -> str:
+    """Canonical text of one TraceTarget's jaxpr (abstract trace only).
+
+    ``make_jaxpr`` names variables deterministically from a fresh counter
+    per trace, so two structurally identical traces print identically.
+    """
+    return str(jax.make_jaxpr(target.fn)(*target.args))
+
+
+def diff_summary(text_a: str, text_b: str, context: int = 2,
+                 max_lines: int = 12) -> list:
+    """First divergence between two jaxpr texts, a few lines of context."""
+    lines_a, lines_b = text_a.splitlines(), text_b.splitlines()
+    for ix, (la, lb) in enumerate(itertools.zip_longest(lines_a, lines_b)):
+        if la != lb:
+            lo = max(0, ix - context)
+            out = [f"first divergence at jaxpr line {ix + 1}:"]
+            for j in range(lo, min(ix + context + 1, max(len(lines_a),
+                                                         len(lines_b)))):
+                a = lines_a[j] if j < len(lines_a) else "<absent>"
+                b = lines_b[j] if j < len(lines_b) else "<absent>"
+                marker = ">>" if j == ix else "  "
+                out.append(f"{marker} A| {a.strip()}")
+                out.append(f"{marker} B| {b.strip()}")
+                if len(out) >= max_lines:
+                    break
+            return out
+    return []
+
+
+def check_retrace(target_a, target_b) -> list:
+    """Violations if two same-envelope TraceTargets diverge.
+
+    Checks staged avals first (a staging bug masquerades as a leak), then
+    diffs the traced jaxprs textually.
+    """
+    shapes_a = jax.tree_util.tree_map(
+        lambda x: (getattr(x, "shape", ()), str(getattr(x, "dtype", ""))),
+        target_a.args)
+    shapes_b = jax.tree_util.tree_map(
+        lambda x: (getattr(x, "shape", ()), str(getattr(x, "dtype", ""))),
+        target_b.args)
+    if shapes_a != shapes_b:
+        return ["staged operand avals differ between same-envelope "
+                f"instances: {shapes_a} vs {shapes_b} — envelope-driven "
+                "staging is broken for this backend"]
+    text_a, text_b = trace_text(target_a), trace_text(target_b)
+    if text_a == text_b:
+        return []
+    detail = "; ".join(diff_summary(text_a, text_b))
+    return ["same-envelope instances trace to different jaxprs — a "
+            "Python value from the instance data leaked into the compile "
+            f"key ({detail})"]

@@ -1,0 +1,171 @@
+"""VMEM footprint auditor: traced resident bytes vs the planner byte model.
+
+For one backend core traced at one (plan, envelope) the auditor sums, per
+``pallas_call``, the bytes of every kernel operand resident in fast memory:
+
+* **blocked inputs** — BlockSpec-staged operands (the stationary piece, the
+  fused ``C_prev`` blocks); SMEM scalar-prefetch operands and ``ANY``-space
+  (slow-memory) refs are excluded — they are precisely what the streaming
+  schedule keeps *out* of VMEM;
+* **outputs** — the persistent accumulator blocks;
+* **scratch** — the double-buffer slots (both of them: that is the point of
+  the two-slot pipeline) and any VMEM workspace; semaphores excluded;
+* an **alias credit**: the fused-``C_prev`` convention means each output
+  block is initialized from a same-shaped input block and the two are never
+  both live, so one matching input block's bytes are credited back per
+  output block;
+* the **peak intermediate** of the kernel body, counted only for backends
+  whose byte model carries a nonzero ``workspace`` term (the ESC expand
+  buffer, the hash tables) — for dense-slab kernels the MXU feeds from the
+  staged blocks and the model deliberately prices no workspace. Functional
+  *ref-update images* are excluded: a scatter into the CSR accumulator
+  traces as a fresh ``(c_pad + 1,)`` array (the column plus the overflow
+  sentinel slot) that the compiler in-places into the already-priced ref,
+  so intermediates no larger than one output/scratch column of their dtype
+  (plus one element) are not workspace.
+
+The audit asserts the spec's registered ``byte_model`` **dominates** the
+traced footprint: ``model.fast_bytes_needed >= traced_total``. An
+undercounting model is exactly the bug class PR 3 fixed dynamically
+(planner fast-memory undercounts) — this pass proves its absence at trace
+time for every backend x geometry in the corpus.
+
+The scan backend registers no byte model (the planner does not dispatch to
+it on byte grounds); for it the auditor reports the largest ``lax.scan``
+carry as an informational measurement instead of a domination check.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.analysis.jaxpr_tools import (
+    aval_bytes, find_eqns, iter_eqns, kernel_jaxpr, kernel_operands,
+    pallas_calls, unwrap, vmem_resident,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class VmemAudit:
+    """Traced fast-memory accounting of one core at one geometry."""
+
+    traced_bytes: float          # peak resident VMEM the trace witnesses
+    model_bytes: float | None    # byte model's claim (None: no model)
+    blocked_in_bytes: float
+    output_bytes: float
+    scratch_bytes: float
+    alias_credit_bytes: float
+    workspace_bytes: float       # counted peak intermediate (0 if excluded)
+    scan_carry_bytes: float      # largest scan carry (scan backend info)
+    n_pallas_calls: int
+
+    @property
+    def dominated(self) -> bool | None:
+        """model >= traced; None when there is no model to check."""
+        if self.model_bytes is None:
+            return None
+        return self.model_bytes >= self.traced_bytes
+
+
+def _alias_credit(in_avals, out_avals) -> float:
+    """Bytes of input blocks structurally aliased by output blocks: for each
+    output, one unclaimed input with identical (shape, dtype) — the fused
+    C_prev init. Greedy, so a missing partner simply earns no credit."""
+    pool = [(tuple(a.shape), str(a.dtype), aval_bytes(a)) for a in in_avals]
+    credit = 0.0
+    for out in out_avals:
+        key = (tuple(out.shape), str(out.dtype))
+        for ix, (shape, dtype, nbytes) in enumerate(pool):
+            if (shape, dtype) == key:
+                credit += nbytes
+                pool.pop(ix)
+                break
+    return credit
+
+
+def _update_image_floors(ref_avals) -> dict:
+    """Per dtype: bytes of the largest output/scratch ref plus one element —
+    the size of a functional update image of that ref (the accumulator
+    scatter's ``(c_pad + 1,)`` buffer). Intermediates at or below the floor
+    are in-placed ref updates, not workspace."""
+    floors = {}
+    for aval in ref_avals:
+        dtype = getattr(aval, "dtype", None)
+        if dtype is None:
+            continue
+        key = str(dtype)
+        size = aval_bytes(aval) + np.dtype(dtype).itemsize
+        floors[key] = max(floors.get(key, 0), size)
+    return floors
+
+
+def _workspace_intermediate_bytes(kjaxpr, ref_avals) -> float:
+    """Largest kernel-body intermediate that is genuine workspace (the ESC
+    expand buffer, the hash tables): bigger than any in-place update image
+    of the already-priced output/scratch refs."""
+    floors = _update_image_floors(ref_avals)
+    worst = 0
+    for eqn in iter_eqns(kjaxpr):
+        for var in eqn.outvars:
+            aval = getattr(var, "aval", None)
+            nbytes = aval_bytes(aval)
+            if nbytes > floors.get(str(getattr(aval, "dtype", "")), 0):
+                worst = max(worst, nbytes)
+    return float(worst)
+
+
+def _scan_carry_bytes(traced) -> float:
+    worst = 0
+    for eqn in find_eqns(unwrap(traced), "scan"):
+        num_carry = eqn.params.get("num_carry", 0)
+        num_consts = eqn.params.get("num_consts", 0)
+        carry = eqn.invars[num_consts:num_consts + num_carry]
+        worst = max(worst, sum(aval_bytes(v.aval) for v in carry))
+    return float(worst)
+
+
+def audit_vmem(traced, model=None, *,
+               count_workspace: bool | None = None) -> VmemAudit:
+    """Audit one traced core (``jax.make_jaxpr`` output) against a
+    :class:`~repro.core.planner.BackendFastModel` (or None).
+
+    ``count_workspace`` forces the peak-intermediate term on or off; by
+    default it follows ``model.workspace_bytes > 0``.
+    """
+    if count_workspace is None:
+        count_workspace = bool(model is not None
+                               and model.workspace_bytes > 0)
+    blocked_in = out_bytes = scratch = credit = workspace = 0.0
+    peak = 0.0
+    calls = pallas_calls(traced)
+    for eqn in calls:
+        ops = kernel_operands(eqn)
+        in_avals = [a for _, a in ops["inputs"] if vmem_resident(a)]
+        out_avals = [a for _, a in ops["outputs"]]
+        scratch_avals = [a for _, a in ops["scratch"] if vmem_resident(a)]
+        c_in = float(sum(aval_bytes(a) for a in in_avals))
+        c_out = float(sum(aval_bytes(a) for a in out_avals))
+        c_scratch = float(sum(aval_bytes(a) for a in scratch_avals))
+        c_credit = _alias_credit(in_avals, out_avals)
+        c_work = (_workspace_intermediate_bytes(
+                      kernel_jaxpr(eqn), out_avals + scratch_avals)
+                  if count_workspace else 0.0)
+        total = c_in + c_out + c_scratch - c_credit + c_work
+        if total > peak:
+            peak = total
+            blocked_in, out_bytes, scratch = c_in, c_out, c_scratch
+            credit, workspace = c_credit, c_work
+    return VmemAudit(
+        traced_bytes=peak,
+        model_bytes=(float(model.fast_bytes_needed)
+                     if model is not None else None),
+        blocked_in_bytes=blocked_in,
+        output_bytes=out_bytes,
+        scratch_bytes=scratch,
+        alias_credit_bytes=credit,
+        workspace_bytes=workspace,
+        scan_carry_bytes=_scan_carry_bytes(traced),
+        n_pallas_calls=len(calls),
+    )

@@ -22,6 +22,7 @@ of that scheme (documented in DESIGN.md §6).
 
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import shutil
@@ -76,9 +77,10 @@ def _complete_steps(directory: str):
     if not os.path.isdir(directory):
         return out
     for name in os.listdir(directory):
-        if name.startswith("step_") and not name.endswith(".tmp"):
-            if os.path.exists(os.path.join(directory, name, "manifest.json")):
-                out.append(int(name[len("step_"):]))
+        if (name.startswith("step_") and not name.endswith(".tmp")
+                and os.path.exists(os.path.join(directory, name,
+                                                "manifest.json"))):
+            out.append(int(name[len("step_"):]))
     return out
 
 
@@ -125,12 +127,11 @@ class CheckpointManager:
         self.keep_last_k = keep_last_k
         self._preempted = False
         if install_sigterm:
-            try:
+            # ValueError: not on the main thread (tests)
+            with contextlib.suppress(ValueError):
                 signal.signal(signal.SIGTERM, self._on_sigterm)
-            except ValueError:
-                pass  # not on the main thread (tests)
 
-    def _on_sigterm(self, signum, frame):  # pragma: no cover - signal path
+    def _on_sigterm(self, _signum, _frame):  # pragma: no cover - signal path
         self._preempted = True
 
     @property

@@ -49,9 +49,23 @@ registry-completeness test):
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Mapping
+from typing import Any, Callable, Mapping
 
 ALGORITHMS = ("knl", "chunk1", "chunk2")
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceTarget:
+    """An abstract-traceable handle on one backend core: ``fn(*args)`` must
+    trace under ``jax.make_jaxpr`` without device execution (statics already
+    bound into ``fn``). This is what a spec's ``audit_trace`` builds and what
+    every ``repro.analysis`` pass consumes — the registry-level audit
+    capability, kept here so the analysis package and the executor module
+    never import each other."""
+
+    fn: Callable
+    args: tuple
+    meta: Mapping[str, Any] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,10 +82,19 @@ class BackendSpec:
     needs_block_caps: bool = False              # envelope must carry bsr_caps
     is_accumulator: bool = False                # participates in backend="auto"
     block_size: int | None = None               # default block edge (block backends)
+    # audit capability: (A, B, plan, c_pad, envelope) -> TraceTarget staging
+    # the backend's jitted core exactly as the executors would, so the static
+    # verifier (repro.analysis) can abstract-trace it. None = not auditable
+    # (the host-loop oracle has no jitted core).
+    audit_trace: Callable | None = None
 
     @property
     def supports_batched(self) -> bool:
         return self.run_batched is not None
+
+    @property
+    def supports_audit(self) -> bool:
+        return self.audit_trace is not None
 
 
 _REGISTRY: dict[str, BackendSpec] = {}
@@ -90,6 +113,21 @@ def register(spec: BackendSpec) -> BackendSpec:
     if spec.is_accumulator and spec.byte_model is None:
         raise ValueError(
             f"accumulator backend {spec.name!r} needs a planner byte model")
+    # the trace-key contract: keys are per-algorithm, so a template without
+    # the "{alg}" slot would collapse all three algorithms onto one counter
+    # and silently break the serving layer's compile accounting. Fail at
+    # import, where the registration lives, not at first format().
+    for field in ("trace_key", "trace_key_batched"):
+        template = getattr(spec, field)
+        if template is not None and "{alg}" not in template:
+            raise ValueError(
+                f"backend {spec.name!r}: {field}={template!r} must contain "
+                "the '{alg}' placeholder (one TRACE_COUNTS key per algorithm)")
+    if spec.needs_block_caps and spec.block_size is None:
+        raise ValueError(
+            f"backend {spec.name!r} needs_block_caps but registers no "
+            "block_size: the dispatchers could not build its default "
+            "block-capped envelope")
     _REGISTRY[spec.name] = spec
     return spec
 

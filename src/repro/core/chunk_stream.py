@@ -1045,6 +1045,114 @@ def chunked_spgemm_batched(As, Bs, plan: ChunkPlan, c_pad: int | None = None,
 # ---------------------------------------------------------------------------
 
 
+# ---------------------------------------------------------------------------
+# audit staging: TraceTargets for the static verifier (repro.analysis)
+# ---------------------------------------------------------------------------
+#
+# Each helper stages one instance at an explicit GeometryEnvelope — exactly
+# the envelope-driven padding the batched executors perform — and binds the
+# statics into the backend's jitted core so `jax.make_jaxpr(fn)(*args)`
+# abstract-traces the very program the executors launch. Two same-envelope
+# instances must therefore produce byte-identical jaxprs (the retrace-leak
+# contract); the traced program is also what the VMEM and DMA audits read.
+
+
+def _audit_scan(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int,
+                envelope: GeometryEnvelope):
+    Bst = csr_stack(b_chunks(B, plan.p_b, envelope=envelope))
+    r0s, r1s = plan.b_ranges()
+    if plan.algorithm == "knl":
+        Ast = csr_pad_to(A, nnz_cap=envelope.a_nnz_cap,
+                         max_row_nnz=envelope.a_max_row_nnz)
+        C0 = _empty_c(A.n_rows, B.n_cols, c_pad, A.dtype)
+        core = _knl_scan
+    else:
+        Ast = csr_stack(a_strips(A, plan.p_ac, envelope=envelope))
+        strip_rows = envelope.strip_rows
+        if plan.algorithm == "chunk1":
+            C0 = _empty_c(strip_rows, B.n_cols, c_pad, A.dtype)
+            core = _chunk1_scan
+        else:
+            C0 = _empty_c_stack(plan.n_ac, strip_rows, B.n_cols, c_pad,
+                                A.dtype)
+            core = _chunk2_scan
+    return backend_registry.TraceTarget(
+        fn=partial(core, c_pad=c_pad),
+        args=(Ast, Bst, jnp.asarray(r0s), jnp.asarray(r1s), C0))
+
+
+def _audit_pallas(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int,
+                  envelope: GeometryEnvelope):
+    del c_pad  # capacity is implicit in the dense accumulator
+    Bst = csr_stack(b_chunks(B, plan.p_b, envelope=envelope))
+    r0s, _ = plan.b_ranges()
+    if plan.algorithm == "knl":
+        Ast = csr_pad_to(A, nnz_cap=envelope.a_nnz_cap,
+                         max_row_nnz=envelope.a_max_row_nnz)
+        core = _knl_pallas
+    else:
+        Ast = csr_stack(a_strips(A, plan.p_ac, envelope=envelope))
+        core = _chunk1_pallas if plan.algorithm == "chunk1" else _chunk2_pallas
+    return backend_registry.TraceTarget(fn=core,
+                                        args=(Ast, Bst, jnp.asarray(r0s)))
+
+
+def _make_audit_csr_accum(kind: str):
+    """Audit staging shared by the ESC ("sparse") and hash backends — the
+    doubly stacked width-1 staging of ``_sparse_run``, envelope-padded."""
+
+    def audit(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int,
+              envelope: GeometryEnvelope):
+        Ast = csr_stack([csr_stack(a_strips(A, plan.p_ac,
+                                            envelope=envelope))])
+        Bst = csr_stack([csr_stack(b_chunks(B, plan.p_b,
+                                            envelope=envelope))])
+        r0s, r1s = plan.b_ranges()
+        C0 = _sparse_c0_stack(1, plan.n_ac, envelope.strip_rows, B.n_cols,
+                              c_pad, A.dtype)
+        args = (Ast, Bst, C0, jnp.asarray(r0s), jnp.asarray(r1s))
+        if kind == "hash":
+            # compile key: the table derives from the envelope, exactly as
+            # in the batched run (see _csr_accum_run_batched)
+            table = hash_table_slots(
+                envelope.c_max_row_nnz if envelope.c_nnz_cap else B.n_cols)
+            return backend_registry.TraceTarget(
+                fn=partial(_HASH_CORES[plan.algorithm], table_size=table),
+                args=args, meta={"table_size": table})
+        return backend_registry.TraceTarget(
+            fn=_SPARSE_CORES[plan.algorithm], args=args)
+
+    return audit
+
+
+def _audit_bsr(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int,
+               envelope: GeometryEnvelope):
+    """Stage the first (strip, chunk) pair exactly as ``_bsr_execute`` does;
+    every pair launches the same envelope-keyed kernel geometry, so one pair
+    is the whole compile surface."""
+    del c_pad
+    bs, nbl_a_cap, nbl_b_cap, nc_cap, u_cap = envelope.bsr_caps
+    k, n = B.shape
+    kpad = -(-k // bs) * bs
+    npad = -(-n // bs) * bs
+    srpad = -(-envelope.strip_rows // bs) * bs
+    Ad = np.asarray(csr_to_dense(A), np.float32)
+    Bd = np.asarray(csr_to_dense(B), np.float32)
+    s, e = plan.p_ac[0], plan.p_ac[1]
+    r0, r1 = plan.p_b[0], plan.p_b[1]
+    Am = np.zeros((srpad, kpad), np.float32)
+    Am[: e - s, r0:r1] = Ad[s:e, r0:r1]
+    Bm = np.zeros((kpad, npad), np.float32)
+    Bm[r0:r1, :n] = Bd[r0:r1, :]
+    Ab = bsr_from_dense(Am, bs, pad_to=nbl_a_cap)
+    Bb = bsr_from_dense(Bm, bs, pad_to=nbl_b_cap)
+    meta = bsr_spgemm_symbolic(Ab, Bb, nc_pad=nc_cap, u_max=u_cap)
+    return backend_registry.TraceTarget(
+        fn=partial(_BSR_CORES[plan.algorithm], envelope=envelope),
+        args=(bsr_blocks_with_sentinel(Ab), bsr_blocks_with_sentinel(Bb),
+              jnp.asarray(meta.a_slots), jnp.asarray(meta.b_slots)))
+
+
 def _register_all() -> None:
     if "scan" in backend_registry._REGISTRY:   # tolerate importlib.reload
         return
@@ -1062,6 +1170,7 @@ def _register_all() -> None:
         run_batched=_scan_run_batched,
         trace_key="{alg}",
         trace_key_batched="{alg}_batched",
+        audit_trace=_audit_scan,
     ))
     register(Spec(
         name="pallas",
@@ -1072,6 +1181,7 @@ def _register_all() -> None:
         trace_key="{alg}_pallas",
         trace_key_batched="{alg}_pallas_batched",
         is_accumulator=True,
+        audit_trace=_audit_pallas,
     ))
     register(Spec(
         name="sparse",
@@ -1082,6 +1192,7 @@ def _register_all() -> None:
         trace_key_batched="{alg}_sparse_batched",
         needs_output_caps=True,
         is_accumulator=True,
+        audit_trace=_make_audit_csr_accum("sparse"),
     ))
     register(Spec(
         name="hash",
@@ -1092,6 +1203,7 @@ def _register_all() -> None:
         trace_key_batched="{alg}_hash_batched",
         needs_output_caps=True,
         is_accumulator=True,
+        audit_trace=_make_audit_csr_accum("hash"),
     ))
     register(Spec(
         name="bsr",
@@ -1104,6 +1216,7 @@ def _register_all() -> None:
         needs_block_caps=True,
         is_accumulator=True,
         block_size=_BSR_DEFAULT_BLOCK,
+        audit_trace=_audit_bsr,
     ))
 
 

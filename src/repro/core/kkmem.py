@@ -100,7 +100,7 @@ def _expand_products(A: CSR, B: CSR, r0, r1):
     return rows.reshape(-1), cols.reshape(-1), vals.reshape(-1)
 
 
-def _accumulate(rows, cols, vals, m: int, n: int, c_pad: int):
+def _accumulate(rows, cols, vals, m: int, _n: int, c_pad: int):
     """Sort-based accumulator: coalesce duplicate (row, col) into CSR arrays.
 
     Two stable sorts == lexsort by (row, col) without 64-bit keys. Boundary scan

@@ -181,6 +181,7 @@ def spgemm_cost(system: MemorySystem, *, bytes_A: float, bytes_B: float, bytes_C
     cache hierarchy and go to the memory level holding B (reuse-distance simulation
     provides the fraction — repro.core.locality).
     """
+    del bytes_B   # B traffic is the gather term: b_row_reads x b_row_bytes misses
     lA, lB, lC = (system.level(place_A), system.level(place_B), system.level(place_C))
     t_A = lA.stream_time(bytes_A)
     t_C = lC.stream_time(bytes_C)

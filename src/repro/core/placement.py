@@ -106,6 +106,7 @@ def place(operand, space: str, system_name: str = "tpu_v5e"):
     HBM. On backends without memory kinds (this CPU container) placement is a no-op
     transfer and the cost is tracked analytically.
     """
+    del system_name   # parity with the cost APIs; physical placement is kind-based
     if space not in SPACES:
         raise ValueError(f"space must be one of {SPACES}")
     try:

@@ -132,11 +132,10 @@ def plan_chunks(A: CSR, B: CSR, c_row_bytes: np.ndarray, system: MemorySystem,
         # big to small portion").
         leftover = fast - size_b
         p_ac = binary_search_partition(ac_rows, leftover)
-        plan = ChunkPlan("chunk2", p_ac, (0, B.n_rows),
+        return ChunkPlan("chunk2", p_ac, (0, B.n_rows),
                          copy_bytes=partition_cost(size_a, size_b, size_c,
                                                    len(p_ac) - 1, 1, "chunk2"),
                          fast_bytes_needed=size_b + staged_ac(p_ac))
-        return plan
 
     if size_a + size_c <= big_portion * fast:
         leftover = fast - (size_a + size_c)
@@ -435,6 +434,7 @@ def plan_knl(A: CSR, B: CSR, fast_limit_bytes: float,
              system: MemorySystem | None = None) -> ChunkPlan:
     """Algorithm 1 planning: np = ceil(size(B)/FastSize), equal-byte row partition of
     B via binary search. A and C stay in slow memory (never copied)."""
+    del system   # accepted for signature parity with plan_chunks; sizing is byte-only
     b_rows = row_bytes_csr(B)
     size_b = float(b_rows.sum())
     n_p = max(1, int(np.ceil(size_b / fast_limit_bytes)))

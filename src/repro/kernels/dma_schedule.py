@@ -1,0 +1,68 @@
+"""Slot arithmetic of the streaming kernels' two-slot DMA double buffer.
+
+The paper's ``copy2Fast`` overlap — start copying streamed element j+1 while
+element j multiplies — is realized in both streaming kernels
+(``kernels/ranged_spgemm.py`` dense slabs, ``kernels/sparse_accum_spgemm.py``
+CSR triples, and through the latter ``kernels/hash_accum_spgemm.py``) as the
+same schedule over a ``[N_SLOTS, ...]`` VMEM scratch buffer:
+
+  * step ``lin == 0`` primes the pipeline: element 0 is copied into slot 0
+    synchronously-before-use (started, then immediately waited on below);
+  * every step with a successor starts the async copy of element ``lin + 1``
+    into slot ``(lin + 1) % 2`` — the *other* slot;
+  * every step waits on and reads element ``lin`` from slot ``lin % 2``.
+
+This module is the **single source of truth** for that arithmetic: the
+kernels call these functions with traced grid indices, and the static
+verifier (``repro.analysis.dma``) calls them with concrete ints to simulate
+the whole grid host-side and prove the schedule is race-free (the j+1 copy
+never targets the slot step j reads, every copy is waited on before its
+element is consumed, every element streams exactly once). One definition, so
+the kernels and the checker cannot drift apart.
+
+Every function works on both traced JAX scalars and host ints — plain
+``%``/``+``/comparison arithmetic only.
+"""
+
+from __future__ import annotations
+
+N_SLOTS = 2
+
+
+class SlotSchedule:
+    """The two-slot double-buffer schedule as an object, so the DMA checker
+    can be handed a deliberately broken schedule (the negative fixtures in
+    ``tests/test_static_audit.py``) without touching the real one."""
+
+    n_slots = N_SLOTS
+
+    def read_slot(self, lin):
+        """Slot holding streamed element ``lin`` when step ``lin`` runs."""
+        return lin % self.n_slots
+
+    def prefetch_slot(self, lin):
+        """Slot the step-``lin`` prefetch of element ``lin + 1`` targets."""
+        return (lin + 1) % self.n_slots
+
+    def is_prime_step(self, lin):
+        """Whether step ``lin`` must synchronously stage its own element
+        (only the very first step has no predecessor to prefetch it)."""
+        return lin == 0
+
+    def prime_slot(self):
+        """Slot the warm-up copy of element 0 targets (== read_slot(0))."""
+        return 0
+
+    def has_prefetch(self, lin, total):
+        """Whether step ``lin`` starts the copy of element ``lin + 1``."""
+        return lin + 1 < total
+
+
+TWO_SLOT = SlotSchedule()
+
+# module-level aliases: the kernels read these, keeping call sites terse
+read_slot = TWO_SLOT.read_slot
+prefetch_slot = TWO_SLOT.prefetch_slot
+is_prime_step = TWO_SLOT.is_prime_step
+prime_slot = TWO_SLOT.prime_slot
+has_prefetch = TWO_SLOT.has_prefetch

@@ -56,6 +56,16 @@ _EMPTY = -1           # table key sentinel (column ids are >= 0)
 _KNUTH = -1640531527  # 2654435769 as int32: Knuth's multiplicative hash
 
 
+def probe_step_bound(table_size: int) -> int:
+    """Static step bound of one linear-probe ``while_loop``: a probe visits
+    at most every slot once, so ``table_size`` steps make the loop total even
+    if a (host-checked) capacity invariant were violated. Named so the static
+    DMA/loop checker (``repro.analysis.dma``) can assert the bound baked into
+    the traced jaxpr *is* this function of ``planner.hash_table_slots`` —
+    the kernel and the verifier derive the literal from one definition."""
+    return int(table_size)
+
+
 def _insert(tables, row, col, val, valid):
     """Insert-or-accumulate one (row, col, val) product into its row table.
 
@@ -66,12 +76,13 @@ def _insert(tables, row, col, val, valid):
     """
     keys, vals = tables
     size = keys.shape[1]
+    bound = probe_step_bound(size)
     start = (col * _KNUTH) & (size - 1)
 
     def cond(state):
         slot, steps = state
         k = keys[row, slot]
-        return (steps < size) & (k != col) & (k != _EMPTY)
+        return (steps < bound) & (k != col) & (k != _EMPTY)
 
     def body(state):
         slot, steps = state

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import dma_schedule
 from repro.kernels._compat import ANY as _ANY
 
 
@@ -77,19 +78,21 @@ def _kernel(r0s_ref, stationary_ref, streamed_hbm, c0_ref, out_ref,
         )
 
     # warm-up: the very first streamed element has no previous step to
-    # prefetch it, so stage it synchronously before the overlap steady-state
-    @pl.when(lin == 0)
+    # prefetch it, so stage it synchronously before the overlap steady-state.
+    # All slot arithmetic comes from kernels/dma_schedule — the module the
+    # static DMA checker (repro.analysis.dma) simulates host-side.
+    @pl.when(dma_schedule.is_prime_step(lin))
     def _prime():
-        dma(0, 0).start()
+        dma(dma_schedule.prime_slot(), 0).start()
 
     # the explicit copy2Fast overlap: start element lin+1 into the other
-    # slot while this step's multiply consumes slot lin % 2
-    @pl.when(lin + 1 < total)
+    # slot while this step's multiply consumes the read slot
+    @pl.when(dma_schedule.has_prefetch(lin, total))
     def _prefetch():
-        dma((lin + 1) % 2, lin + 1).start()
+        dma(dma_schedule.prefetch_slot(lin), lin + 1).start()
 
-    dma(lin % 2, lin).wait()
-    streamed = stream_buf[lin % 2]
+    dma(dma_schedule.read_slot(lin), lin).wait()
+    streamed = stream_buf[dma_schedule.read_slot(lin)]
 
     if order == "chunk1":
         j, i = inner_ix, outer_ix
@@ -161,7 +164,7 @@ def ranged_spgemm_stream(a_dense: jax.Array, b_slabs: jax.Array,
             (1, 1, strip_rows, k_pad), lambda b, i, j, r0s: (b, i, 0, 0)
         )
         streamed, stationary = b_slabs, a_dense
-        stream_buf = pltpu.VMEM((2, span, n), jnp.float32)
+        stream_buf = pltpu.VMEM((dma_schedule.N_SLOTS, span, n), jnp.float32)
         c0_spec = pl.BlockSpec(
             (1, 1, strip_rows, n), lambda b, i, j, r0s: (b, i, 0, 0)
         )
@@ -176,7 +179,8 @@ def ranged_spgemm_stream(a_dense: jax.Array, b_slabs: jax.Array,
             (1, 1, span, n), lambda b, j, i, r0s: (b, j, 0, 0)
         )
         streamed, stationary = a_dense, b_slabs
-        stream_buf = pltpu.VMEM((2, strip_rows, k_pad), jnp.float32)
+        stream_buf = pltpu.VMEM((dma_schedule.N_SLOTS, strip_rows, k_pad),
+                                jnp.float32)
         # one whole-result c0 block per batch element (fetched once, read at
         # j == 0), matching the out block it initializes
         c0_spec = pl.BlockSpec(
@@ -204,7 +208,7 @@ def ranged_spgemm_stream(a_dense: jax.Array, b_slabs: jax.Array,
             out_specs=out_spec,
             scratch_shapes=[
                 stream_buf,
-                pltpu.SemaphoreType.DMA((2,)),
+                pltpu.SemaphoreType.DMA((dma_schedule.N_SLOTS,)),
             ],
         ),
         out_shape=out_shape,

@@ -47,10 +47,11 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.kkmem import spgemm_ranged_impl
+from repro.kernels import dma_schedule
 from repro.kernels._compat import ANY as _ANY
 # shared with the dense-slab streaming kernel: same interpret heuristic, same
-# linear-grid decomposition (the two kernels are one DMA pattern, two
-# accumulators)
+# linear-grid decomposition, same slot schedule (the two kernels are one DMA
+# pattern — kernels/dma_schedule — two accumulators)
 from repro.kernels.ranged_spgemm import _decompose, default_interpret
 from repro.sparse.csr import CSR
 
@@ -93,22 +94,24 @@ def _kernel(r0s_ref, r1s_ref, stat_ip, stat_ix, stat_d,
         ]
 
     # warm-up: the very first streamed element has no previous step to
-    # prefetch it, so stage it synchronously before the overlap steady-state
-    @pl.when(lin == 0)
+    # prefetch it, so stage it synchronously before the overlap steady-state.
+    # Slot arithmetic comes from kernels/dma_schedule — the module the static
+    # DMA checker (repro.analysis.dma) simulates host-side.
+    @pl.when(dma_schedule.is_prime_step(lin))
     def _prime():
-        for copy in dma(0, 0):
+        for copy in dma(dma_schedule.prime_slot(), 0):
             copy.start()
 
     # the explicit copy2Fast overlap: start element lin+1 into the other
-    # slot while this step's merge consumes slot lin % 2
-    @pl.when(lin + 1 < total)
+    # slot while this step's merge consumes the read slot
+    @pl.when(dma_schedule.has_prefetch(lin, total))
     def _prefetch():
-        for copy in dma((lin + 1) % 2, lin + 1):
+        for copy in dma(dma_schedule.prefetch_slot(lin), lin + 1):
             copy.start()
 
-    for copy in dma(lin % 2, lin):
+    for copy in dma(dma_schedule.read_slot(lin), lin):
         copy.wait()
-    slot = lin % 2
+    slot = dma_schedule.read_slot(lin)
     s_ip, s_ix, s_d = buf_ip[slot], buf_ix[slot], buf_d[slot]
 
     if order == "chunk1":
@@ -214,9 +217,10 @@ def sparse_accum_spgemm_stream(Ast: CSR, Bst: CSR, C0st: CSR,
                     blocked((c_cap,), c_map), blocked((c_cap,), c_map)]
         out_specs = (blocked((strip_rows + 1,), c_map),
                      blocked((c_cap,), c_map), blocked((c_cap,), c_map))
-        bufs = [pltpu.VMEM((2, chunk_rows + 1), jnp.int32),
-                pltpu.VMEM((2, chunk_cap), jnp.int32),
-                pltpu.VMEM((2, chunk_cap), dtype)]
+        ns = dma_schedule.N_SLOTS
+        bufs = [pltpu.VMEM((ns, chunk_rows + 1), jnp.int32),
+                pltpu.VMEM((ns, chunk_cap), jnp.int32),
+                pltpu.VMEM((ns, chunk_cap), dtype)]
     else:
         grid = (batch, n_b, n_ac)
         stat = Bst
@@ -234,9 +238,10 @@ def sparse_accum_spgemm_stream(Ast: CSR, Bst: CSR, C0st: CSR,
         out_specs = (pl.BlockSpec((1, n_ac, strip_rows + 1), c_map),
                      pl.BlockSpec((1, n_ac, c_cap), c_map),
                      pl.BlockSpec((1, n_ac, c_cap), c_map))
-        bufs = [pltpu.VMEM((2, strip_rows + 1), jnp.int32),
-                pltpu.VMEM((2, a_cap), jnp.int32),
-                pltpu.VMEM((2, a_cap), dtype)]
+        ns = dma_schedule.N_SLOTS
+        bufs = [pltpu.VMEM((ns, strip_rows + 1), jnp.int32),
+                pltpu.VMEM((ns, a_cap), jnp.int32),
+                pltpu.VMEM((ns, a_cap), dtype)]
 
     kernel = functools.partial(
         _kernel, order=order, batch=batch, n_ac=n_ac, n_b=n_b,
@@ -256,7 +261,8 @@ def sparse_accum_spgemm_stream(Ast: CSR, Bst: CSR, C0st: CSR,
             grid=grid,
             in_specs=[*stat_specs, any_spec, any_spec, any_spec, *c0_specs],
             out_specs=out_specs,
-            scratch_shapes=[*bufs, pltpu.SemaphoreType.DMA((2, 3))],
+            scratch_shapes=[*bufs,
+                            pltpu.SemaphoreType.DMA((dma_schedule.N_SLOTS, 3))],
         ),
         out_shape=out_shape,
         interpret=interpret,

@@ -39,6 +39,7 @@ DEFAULT_MICROBATCHES = {"train_4k": 8}
 
 def opt_shardings(cfg, mesh, abstract_opt, psh):
     """Optimizer state shardings: mu/nu mirror params; scalars replicated."""
+    del cfg   # uniform *_shardings signature; mirrors the param shardings
     out = {"mu": psh, "nu": psh,
            "step": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())}
     if "ef" in abstract_opt:

@@ -64,7 +64,7 @@ def best_effort_spec(shape, mesh: Mesh, wanted) -> P:
 # ---------------------------------------------------------------------------
 
 
-def _param_rule(path: tuple, leaf, cfg: ModelConfig, mesh: Mesh,
+def _param_rule(path: tuple, leaf, _cfg: ModelConfig, mesh: Mesh,
                 fsdp, model) -> P:
     """Map one parameter (by its pytree path) to a PartitionSpec.
 
@@ -181,6 +181,7 @@ def batch_shardings(mesh: Mesh, abstract_batch, extra_axes: tuple = ()):
 def cache_shardings(cfg: ModelConfig, mesh: Mesh, abstract_cache):
     """Decode caches: batch over data axes; KV heads over model when they divide,
     else sequence-parallel (SP) over model (the long_500k batch=1 case)."""
+    del cfg   # uniform *_shardings(cfg, mesh, tree) signature; rules are shape-driven
     fsdp, model = _mesh_axes(mesh)
     dp = tuple(fsdp) if fsdp else None
 

@@ -69,6 +69,7 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
 
 
 def init_opt_state(cfg: ModelConfig, tcfg: TrainConfig, params):
+    del cfg   # uniform init(cfg, tcfg, params) signature; state is shaped by params
     from repro.train.optim import adamw_init
     from repro.train.compress import ef_init
 
@@ -93,6 +94,7 @@ def make_serve_step(cfg: ModelConfig, greedy: bool = True):
     """serve_step(params, cache, tokens[B,1]) -> (next_tokens[B,1], cache).
 
     One new token against the full KV cache — what decode_* shape cells lower."""
+    del greedy   # only greedy (argmax) decode is lowered; the flag is the serve API
 
     def serve_step(params, cache, tokens):
         logits, cache = tf.decode_step(params, cache, tokens, cfg)

@@ -171,7 +171,7 @@ def test_service_large_mixed_sweep(algorithm):
     counter = f"{algorithm}_batched"
     densities = [0.02, 0.08, 0.15, 0.25]
     n_widths = len(svc.widths)
-    for wave in range(3):
+    for _wave in range(3):
         reqs = _mixed_workload(rng, 10, dim, densities)
         traces0 = TRACE_COUNTS[counter]
         merges0 = svc.stats.budget_merges

@@ -1,0 +1,126 @@
+"""Static backend auditor CLI: abstract-trace every registered backend and
+verify the planner byte models, the DMA double-buffer schedule, and the
+retrace (compile-key) contract — no device execution.
+
+Registry-driven: the backend roster, the analyses, and the geometry corpus
+all come from ``repro.analysis``; a newly registered backend is audited with
+zero changes here (the add-a-backend checklist in ``docs/backends.md``
+requires this tool to pass).
+
+    PYTHONPATH=src python tools/audit_backends.py \
+        [--json bench-artifacts/static_audit.json] \
+        [--backends sparse,hash] [--algorithms chunk1] [--cases fast] \
+        [--no-retrace] [--subprocess-checks]
+
+``--subprocess-checks`` additionally runs the multi-device proof scripts
+(``tools/elastic_check.py``, ``tools/pipeline_check.py``) in subprocesses
+and asserts their OK markers — the fast-CI home of checks otherwise only
+exercised by the nightly ``slow`` test lane.
+
+Exit status 0 iff every analysis (and every requested subprocess check)
+passed; the JSON report is written either way.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+SUBPROCESS_CHECKS = (
+    ("elastic_check.py", ("ELASTIC_OK",)),
+    ("pipeline_check.py",
+     ("PIPELINE_FWD_OK", "PIPELINE_PAD_OK", "PIPELINE_GRAD_OK")),
+)
+
+
+def run_subprocess_checks(timeout: int = 900) -> list:
+    """Run the multi-device proof scripts; each entry reports the script,
+    its exit code, and any missing OK markers."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    results = []
+    for script, markers in SUBPROCESS_CHECKS:
+        proc = subprocess.run(
+            [sys.executable, os.path.join(ROOT, "tools", script)],
+            capture_output=True, text=True, env=env, timeout=timeout)
+        missing = [m for m in markers if m not in proc.stdout]
+        results.append({
+            "script": script,
+            "returncode": proc.returncode,
+            "missing_markers": missing,
+            "ok": proc.returncode == 0 and not missing,
+            "tail": (proc.stdout + proc.stderr)[-2000:],
+        })
+    return results
+
+
+def _csv(value):
+    return [v for v in value.split(",") if v] if value else None
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--json", metavar="PATH",
+                        help="write the full JSON report here")
+    parser.add_argument("--backends", type=_csv, default=None,
+                        help="comma-separated backend subset (default: all "
+                             "registered)")
+    parser.add_argument("--algorithms", type=_csv, default=None,
+                        help="comma-separated algorithm subset "
+                             "(knl,chunk1,chunk2)")
+    parser.add_argument("--cases", default=None,
+                        help="comma-separated corpus cases, or 'fast' for "
+                             "the quick subset (default: full corpus)")
+    parser.add_argument("--no-retrace", action="store_true",
+                        help="skip the retrace-leak pass (halves trace work)")
+    parser.add_argument("--subprocess-checks", action="store_true",
+                        help="also run tools/elastic_check.py and "
+                             "tools/pipeline_check.py and require their OK "
+                             "markers")
+    args = parser.parse_args(argv)
+
+    from repro.analysis import audit_all
+    from repro.analysis.corpus import FAST_CASES
+
+    cases = (list(FAST_CASES) if args.cases == "fast" else _csv(args.cases))
+    report = audit_all(backends=args.backends, algorithms=args.algorithms,
+                       cases=cases, retrace=not args.no_retrace)
+
+    ok = report["ok"]
+    if args.subprocess_checks:
+        checks = run_subprocess_checks()
+        report["subprocess_checks"] = checks
+        ok = ok and all(c["ok"] for c in checks)
+        for c in checks:
+            status = "OK" if c["ok"] else "FAIL"
+            print(f"subprocess {c['script']}: {status}")
+            if not c["ok"]:
+                print(c["tail"])
+
+    dominated = sum(1 for r in report["records"] if r["dominated"])
+    print(f"audited {len(report['records'])} (backend, algorithm, case) "
+          f"traces over backends={report['backends']}; "
+          f"{dominated} byte-model domination checks passed; "
+          f"{len(report['skipped'])} backend(s) skipped "
+          f"({', '.join(s['backend'] for s in report['skipped']) or 'none'})")
+    for v in report["violations"]:
+        print(f"VIOLATION [{v['analysis']}] {v['backend']}/{v['algorithm']}"
+              f"/{v['case']}: {v['message']}")
+
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as fh:
+            json.dump(report, fh, indent=2, sort_keys=True)
+        print(f"report written to {args.json}")
+
+    print("STATIC_AUDIT_OK" if ok else "STATIC_AUDIT_FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
