@@ -1,30 +1,52 @@
 """Static backend verifier: abstract-traces every registered backend core
 (``jax.make_jaxpr`` on envelope-shaped inputs, no device execution) and runs
-three analyses — VMEM footprint vs the planner byte models, DMA double-buffer
-schedule structure, and retrace-leak detection. See ``docs/static_analysis.md``
+six analyses — VMEM footprint vs the planner byte models, DMA double-buffer
+schedule structure, copy-event flow equality against the declared traffic
+models, exhaustive DMA interleaving model checking, Mosaic-lowerability
+preflight lint, and retrace-leak detection. See ``docs/static_analysis.md``
 and ``tools/audit_backends.py`` (the CLI / CI entry point)."""
 
 from repro.analysis.dma import (
     check_dma_structure, check_while_bounds, collect_dma_events,
     simulate_schedule,
 )
+from repro.analysis.interleave import (
+    Counterexample, Op, build_program, check_interleave, explore,
+)
+from repro.analysis.mosaic_lint import (
+    LintDiagnostic, check_lint, lint_pallas_call, lint_traced,
+)
 from repro.analysis.report import (
-    Violation, audit_all, audit_backend_case,
+    ANALYSES, Violation, audit_all, audit_backend_case, normalize_analyses,
 )
 from repro.analysis.retrace import check_retrace, diff_summary, trace_text
+from repro.analysis.traffic import check_traffic, traced_flows
 from repro.analysis.vmem import VmemAudit, audit_vmem
 
 __all__ = [
+    "ANALYSES",
+    "Counterexample",
+    "LintDiagnostic",
+    "Op",
     "VmemAudit",
     "Violation",
     "audit_all",
     "audit_backend_case",
     "audit_vmem",
+    "build_program",
     "check_dma_structure",
+    "check_interleave",
+    "check_lint",
     "check_retrace",
+    "check_traffic",
     "check_while_bounds",
     "collect_dma_events",
     "diff_summary",
+    "explore",
+    "lint_pallas_call",
+    "lint_traced",
+    "normalize_analyses",
     "simulate_schedule",
     "trace_text",
+    "traced_flows",
 ]

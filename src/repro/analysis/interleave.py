@@ -1,0 +1,238 @@
+"""DMA interleaving model checker: prove the double-buffer schedule safe
+under *every* completion order of its async copies.
+
+``analysis/dma.py`` replays one linear order of the slot schedule — copies
+complete exactly when waited on. Real DMA is asynchronous: a started copy
+may land at any later point, and the schedule is only correct if **no**
+completion order can make a step read a slot before its copy has landed or
+let a new copy overwrite a slot that is still in flight. This module checks
+that exhaustively:
+
+* the program (:func:`build_program`) is the kernel's per-step op sequence
+  — prime ``start``, prefetch ``start``, semaphore ``wait``, slot ``read``
+  — emitted from the same :class:`~repro.kernels.dma_schedule.SlotSchedule`
+  arithmetic the kernels call, once per streamed element and once per
+  buffer field (the CSR backends stream three fields per element);
+* :func:`explore` walks every interleaving consistent with that program
+  order: from each state either the next program op executes (if enabled)
+  or any in-flight copy completes. States — ``(pc, in-flight copies, slot
+  contents, semaphore counts)`` — are memoized, and the two-slot schedule
+  keeps the reachable set tiny (tens of states per streamed element);
+* hazards surface as a **minimal counterexample**: the BFS is
+  breadth-first over transitions, so the first violation found is a
+  shortest event trace, formatted step by step for the report.
+
+Hazards checked: a ``start`` targeting a slot/field with a copy still in
+flight (overwrite-in-flight), a ``read`` of a slot/field with a copy still
+in flight (read-before-landing), a ``read`` observing the wrong element
+(stale contents — the wait consumed a semaphore signal for a *different*
+copy), and a ``wait`` no pending copy can ever satisfy (deadlock).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import numpy as np
+
+from repro.analysis.dma import collect_dma_events
+from repro.analysis.jaxpr_tools import kernel_jaxpr, pallas_calls
+from repro.kernels.dma_schedule import TWO_SLOT
+
+
+@dataclasses.dataclass(frozen=True)
+class Op:
+    """One program event. ``kind`` in {"start", "wait", "read"}; ``slot``
+    and ``field`` address the double-buffer cell; ``elem`` is the streamed
+    element the op moves/consumes (for ``wait`` it is the element the
+    schedule believes the signal belongs to)."""
+
+    kind: str
+    slot: int
+    field: int
+    elem: int
+
+    def describe(self) -> str:
+        verb = {"start": "start copy of elem",
+                "wait": "wait on sem for elem",
+                "read": "read elem"}[self.kind]
+        return (f"{verb} {self.elem} "
+                f"{'into' if self.kind == 'start' else 'from'} "
+                f"slot {self.slot} field {self.field}")
+
+
+def build_program(total: int, schedule=TWO_SLOT, n_fields: int = 1) -> list:
+    """The streaming kernel's op sequence for ``total`` elements under
+    ``schedule`` — the exact per-step order the kernels emit: prime start
+    (step 0 only), prefetch start, wait, read, each replicated per field."""
+    ops = []
+    for lin in range(total):
+        if schedule.is_prime_step(lin):
+            for f in range(n_fields):
+                ops.append(Op("start", int(schedule.prime_slot()), f, lin))
+        if schedule.has_prefetch(lin, total):
+            for f in range(n_fields):
+                ops.append(
+                    Op("start", int(schedule.prefetch_slot(lin)), f, lin + 1))
+        rs = int(schedule.read_slot(lin))
+        for f in range(n_fields):
+            ops.append(Op("wait", rs, f, lin))
+        for f in range(n_fields):
+            ops.append(Op("read", rs, f, lin))
+    return ops
+
+
+@dataclasses.dataclass(frozen=True)
+class Counterexample:
+    """A violating interleaving: the hazard, plus the shortest event trace
+    reaching it (program ops interleaved with ``complete ...`` DMA-landing
+    events)."""
+
+    hazard: str
+    trace: tuple
+
+    def describe(self) -> str:
+        lines = [f"hazard: {self.hazard}", "shortest interleaving:"]
+        lines += [f"  {i + 1}. {step}" for i, step in enumerate(self.trace)]
+        return "\n".join(lines)
+
+
+def _trace_back(parents, state, last_step):
+    steps = [last_step]
+    while state is not None:
+        prev, step = parents[state]
+        if step is not None:
+            steps.append(step)
+        state = prev
+    return tuple(reversed(steps))
+
+
+def explore(ops, n_slots: int, n_fields: int = 1,
+            max_states: int = 200_000) -> Counterexample | None:
+    """Exhaustive interleaving search. Returns ``None`` when every
+    completion order is hazard-free, else the shortest counterexample.
+
+    State: ``(pc, in_flight, contents, sems)`` where ``in_flight`` is the
+    set of started-but-unlanded copies ``(slot, field, elem)``, ``contents``
+    maps each slot/field cell to the element it holds (-1 = garbage), and
+    ``sems`` counts unconsumed completion signals per cell. Transitions:
+    complete any in-flight copy (land its element, bump the cell's
+    semaphore), or execute ``ops[pc]`` when enabled (``wait`` needs a
+    signal). BFS + memoization make the first hazard found minimal.
+    """
+    empty = tuple(-1 for _ in range(n_slots * n_fields))
+    zeros = tuple(0 for _ in range(n_slots * n_fields))
+    init = (0, frozenset(), empty, zeros)
+    parents = {init: (None, None)}
+    queue = collections.deque([init])
+    cell = lambda s, f: s * n_fields + f  # noqa: E731
+    while queue:
+        if len(parents) > max_states:
+            raise RuntimeError(
+                f"interleaving state space exceeded {max_states} states — "
+                "not a two-slot-shaped schedule")
+        state = queue.popleft()
+        pc, in_flight, contents, sems = state
+        # transition family 1: any in-flight copy lands
+        for copy in in_flight:
+            slot, field, elem = copy
+            c = cell(slot, field)
+            nxt = (pc, in_flight - {copy},
+                   tuple(elem if i == c else v
+                         for i, v in enumerate(contents)),
+                   tuple(s + 1 if i == c else s
+                         for i, s in enumerate(sems)))
+            if nxt not in parents:
+                parents[nxt] = (state,
+                                f"complete copy of elem {elem} into "
+                                f"slot {slot} field {field}")
+                queue.append(nxt)
+        if pc >= len(ops):
+            continue
+        # transition family 2: the next program op executes
+        op = ops[pc]
+        c = cell(op.slot, op.field)
+        here = {cp for cp in in_flight if cp[0] == op.slot and cp[1] == op.field}
+        if op.kind == "start":
+            if here:
+                victim = sorted(here)[0]
+                return Counterexample(
+                    f"{op.describe()} overwrites slot {op.slot} field "
+                    f"{op.field} while the copy of elem {victim[2]} is "
+                    "still in flight",
+                    _trace_back(parents, state, op.describe()))
+            nxt = (pc + 1, in_flight | {(op.slot, op.field, op.elem)},
+                   contents, sems)
+        elif op.kind == "wait":
+            if sems[c] == 0:
+                if not here:
+                    return Counterexample(
+                        f"{op.describe()} can never be satisfied: no copy "
+                        f"to slot {op.slot} field {op.field} is in flight "
+                        "and its semaphore is zero (deadlock)",
+                        _trace_back(parents, state, op.describe()))
+                continue  # blocked; only completions can move this state on
+            nxt = (pc + 1, in_flight, contents,
+                   tuple(s - 1 if i == c else s for i, s in enumerate(sems)))
+        else:  # read
+            if here:
+                victim = sorted(here)[0]
+                return Counterexample(
+                    f"{op.describe()} races the in-flight copy of elem "
+                    f"{victim[2]} into the same slot",
+                    _trace_back(parents, state, op.describe()))
+            if contents[c] != op.elem:
+                seen = ("garbage (never written)" if contents[c] == -1
+                        else f"elem {contents[c]}")
+                return Counterexample(
+                    f"{op.describe()} observes {seen} — stale slot contents",
+                    _trace_back(parents, state, op.describe()))
+            nxt = (pc + 1, in_flight, contents, sems)
+        if nxt not in parents:
+            parents[nxt] = (state, op.describe())
+            queue.append(nxt)
+    return None
+
+
+def streamed_shapes(traced) -> list:
+    """Per-``pallas_call`` streaming shape ``(total, n_fields)`` derived
+    from the trace: ``n_fields`` = number of distinct VMEM buffers targeted
+    by ``dma_start`` inside the kernel, ``total`` = grid size (one streamed
+    element per linear step). Calls with no hand-rolled DMA yield no entry."""
+    shapes = []
+    for eqn in pallas_calls(traced):
+        kj = kernel_jaxpr(eqn)
+        bufs = []
+        for kind, dst, _src in collect_dma_events(kj):
+            if kind == "start" and dst not in bufs:
+                bufs.append(dst)
+        if not bufs:
+            continue
+        grid = tuple(int(g) for g in eqn.params["grid_mapping"].grid)
+        total = int(np.prod(grid, dtype=np.int64)) if grid else 1
+        shapes.append((total, len(bufs)))
+    return shapes
+
+
+def check_interleave(traced, schedule=TWO_SLOT) -> tuple:
+    """Model-check every hand-DMA'd ``pallas_call`` of a traced core under
+    ``schedule``. Returns ``(violations, info)``: each violation is a
+    formatted minimal counterexample; ``info`` summarizes the exploration
+    (streams checked, states visited is implicit in success)."""
+    violations, streams = [], []
+    for total, n_fields in streamed_shapes(traced):
+        # cap the modeled stream: the schedule is periodic in the slot
+        # count, so hazards reachable at all are reachable within a few
+        # periods; modeling min(total, 6) elements keeps the program short
+        # without losing coverage (6 >= 3 full two-slot periods).
+        modeled = min(total, 6)
+        ops = build_program(modeled, schedule, n_fields)
+        cex = explore(ops, int(schedule.n_slots), n_fields)
+        streams.append({"total": total, "modeled": modeled,
+                        "n_fields": n_fields,
+                        "ok": cex is None})
+        if cex is not None:
+            violations.append(cex.describe())
+    info = {"checked": True, "streams": streams}
+    return violations, info

@@ -1,0 +1,234 @@
+"""Mosaic-lowerability preflight lint: structural checks on the pallas
+kernel bodies, run on the abstract trace before any TPU is involved.
+
+The interpreter (``interpret=True``) executes anything jaxpr-shaped, so a
+kernel can pass the whole CPU suite and still fail to lower through Mosaic
+on hardware. The ROADMAP explicitly distrusts the ESC sort/scatter bodies
+and the hash-probe ``while_loop`` for this reason. This lint encodes the
+known structural rules from the Pallas/TPU guide as per-kernel diagnostics:
+
+* **primitive census** — host-callback primitives are errors (they cannot
+  exist inside a Mosaic kernel); the ESC/hash data-movement primitives
+  (``sort``, ``scatter*``, ``gather``, ``cumsum``) are warnings naming the
+  untrusted lanes; anything outside the audited allowlist is an info-level
+  note so new primitives get reviewed, not silently trusted;
+* **tile alignment** — VMEM block shapes want lane = multiples of 128 and
+  sublane = multiples of the dtype's min tile (8 for 4-byte, 16 for
+  2-byte, 32 for 1-byte types); rank-1 VMEM refs lower via implicit
+  reshapes. Misalignment costs padding/relayout, not correctness, and the
+  test-corpus geometries are deliberately tiny — so these are warnings;
+* **static loop bounds** — a ``while`` whose cond contains no integer
+  comparison literal has no statically evident trip bound: an error, since
+  the planner's cost model (and Mosaic's unrolling decisions) need one;
+* **dtype rules** — float64 values are errors (no TPU lowering under the
+  repo's f32 envelope), int64 a warning (x32 mode truncates);
+* **dot shape** — ``dot_general`` without a ``preferred_element_type`` is
+  a warning (MXU accumulation dtype left implicit);
+* **scalar prefetch** — grid index operands must be int32 SMEM refs
+  (errors otherwise: Mosaic places scalar prefetch in SMEM);
+* **1-D iota** — rank-1 ``iota`` needs a relayout on TPU (warning; the
+  guide's recommended form is 2-D ``broadcasted_iota``).
+
+Only **error**-severity diagnostics become audit violations; warnings and
+infos ride along in the report and the CI lint artifact so the on-TPU
+validation work has a precise worklist.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.analysis.jaxpr_tools import (
+    int_literals, iter_eqns, kernel_jaxpr, kernel_operands, memory_space_of,
+    pallas_calls,
+)
+
+SEVERITIES = ("error", "warning", "info")
+
+# primitives that can never appear inside a Mosaic kernel: they re-enter
+# the host runtime mid-kernel.
+DISALLOWED = frozenset({
+    "pure_callback", "io_callback", "debug_callback", "callback",
+    "outside_call", "infeed", "outfeed",
+})
+
+# primitives the ROADMAP flags as untrusted on TPU until validated on
+# hardware: the ESC sort/scatter pipeline and the hash-probe machinery.
+SUSPECT = frozenset({
+    "sort", "scatter", "scatter-add", "scatter-max", "scatter-min",
+    "gather", "cumsum",
+})
+
+# the audited census of every primitive the four auditable backends stage
+# today (probed over the corpus), plus close arithmetic/structural
+# neighbours known to lower. Anything outside -> info diagnostic.
+ALLOWED = frozenset({
+    "add", "and", "broadcast_in_dim", "concatenate", "cond",
+    "convert_element_type", "div", "dma_start", "dma_wait", "dot_general",
+    "dynamic_slice", "dynamic_update_slice", "eq", "ge", "get", "gt",
+    "iota", "le", "le_to", "lt", "lt_to", "max", "min", "mul", "ne",
+    "neg", "not", "or", "pad", "pjit", "program_id", "reduce_and",
+    "reduce_max", "reduce_min", "reduce_or", "reduce_sum", "rem",
+    "reshape", "scan", "select_n", "sign", "slice", "squeeze", "sub",
+    "swap", "transpose", "while", "xor",
+}) | SUSPECT
+
+# minimum sublane multiple per dtype itemsize (lane is always 128).
+LANE = 128
+SUBLANE = {4: 8, 2: 16, 1: 32}
+
+
+@dataclasses.dataclass(frozen=True)
+class LintDiagnostic:
+    """One structured finding. ``where`` locates it (call index, operand or
+    primitive); ``check`` names the rule for filtering/artifact grouping."""
+
+    severity: str
+    check: str
+    where: str
+    message: str
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def describe(self) -> str:
+        return f"[{self.severity}] {self.check} @ {self.where}: {self.message}"
+
+
+def _tile_diags(where: str, aval, out: list) -> None:
+    shape = tuple(getattr(aval, "shape", ()) or ())
+    dtype = np.dtype(getattr(aval, "dtype", np.float32))
+    if not shape:
+        return
+    if len(shape) == 1:
+        out.append(LintDiagnostic(
+            "warning", "tile-alignment", where,
+            f"rank-1 VMEM ref of shape {shape} lowers via implicit "
+            "relayout; prefer a (sublane, lane) 2-D shape"))
+        return
+    sublane_min = SUBLANE.get(dtype.itemsize, 8)
+    lane, sublane = shape[-1], shape[-2]
+    if lane % LANE:
+        out.append(LintDiagnostic(
+            "warning", "tile-alignment", where,
+            f"lane dim {lane} of block shape {shape} is not a multiple of "
+            f"{LANE} — Mosaic pads each block to the full lane width"))
+    if sublane % sublane_min:
+        out.append(LintDiagnostic(
+            "warning", "tile-alignment", where,
+            f"sublane dim {sublane} of block shape {shape} is not a "
+            f"multiple of {sublane_min} (min tile for {dtype.name})"))
+
+
+def _dtype_diags(where: str, aval, out: list) -> None:
+    dtype = getattr(aval, "dtype", None)
+    if dtype is None:
+        return
+    dt = np.dtype(dtype)
+    if dt == np.float64:
+        out.append(LintDiagnostic(
+            "error", "dtype", where,
+            "float64 value in a kernel body — no TPU lowering under the "
+            "f32 compute envelope"))
+    elif dt == np.int64:
+        out.append(LintDiagnostic(
+            "warning", "dtype", where,
+            "int64 value in a kernel body — x32 lowering truncates"))
+
+
+def lint_pallas_call(eqn, where: str = "pallas_call#0") -> list:
+    """All diagnostics of one ``pallas_call`` eqn's kernel body + operands."""
+    diags = []
+    ops = kernel_operands(eqn)
+    for i, (_var, aval) in enumerate(ops["index"]):
+        loc = f"{where}/index#{i}"
+        space = memory_space_of(aval)
+        dtype = np.dtype(getattr(aval, "dtype", np.float32))
+        if space != "smem":
+            diags.append(LintDiagnostic(
+                "error", "scalar-prefetch", loc,
+                f"scalar-prefetch operand lives in {space!r}, not SMEM — "
+                "Mosaic requires prefetch scalars in SMEM"))
+        if dtype.kind != "i" or dtype.itemsize > 4:
+            diags.append(LintDiagnostic(
+                "error", "scalar-prefetch", loc,
+                f"scalar-prefetch operand has dtype {dtype.name}; Mosaic "
+                "prefetches int32 scalars"))
+    for group in ("inputs", "outputs", "scratch"):
+        for i, (_var, aval) in enumerate(ops[group]):
+            space = memory_space_of(aval)
+            loc = f"{where}/{group}#{i}"
+            if space in ("blocked", "vmem"):
+                _tile_diags(loc, aval, diags)
+    kj = kernel_jaxpr(eqn)
+    seen = set()
+    for keqn in iter_eqns(kj):
+        name = keqn.primitive.name
+        loc = f"{where}/{name}"
+        if name in DISALLOWED:
+            diags.append(LintDiagnostic(
+                "error", "primitive-allowlist", loc,
+                "host-callback primitive inside a kernel body — cannot "
+                "lower through Mosaic"))
+        elif name in SUSPECT and name not in seen:
+            diags.append(LintDiagnostic(
+                "warning", "primitive-allowlist", loc,
+                "ESC/hash data-movement primitive — the ROADMAP flags this "
+                "lane as unvalidated on TPU hardware"))
+        elif name not in ALLOWED and name not in seen:
+            diags.append(LintDiagnostic(
+                "info", "primitive-allowlist", loc,
+                "primitive outside the audited allowlist — review its "
+                "Mosaic support before trusting this lane on TPU"))
+        seen.add(name)
+        if name == "while":
+            cond = keqn.params["cond_jaxpr"].jaxpr
+            bounds = set()
+            for ceqn in iter_eqns(cond):
+                if ceqn.primitive.name in ("lt", "le", "gt", "ge"):
+                    bounds.update(int_literals(ceqn))
+            if not bounds:
+                diags.append(LintDiagnostic(
+                    "error", "static-bounds", loc,
+                    "while loop whose cond has no integer comparison "
+                    "literal — no statically evident trip bound"))
+        if name == "dot_general" and \
+                keqn.params.get("preferred_element_type") is None:
+            diags.append(LintDiagnostic(
+                "warning", "dot-accumulation", loc,
+                "dot_general without preferred_element_type — MXU "
+                "accumulation dtype left implicit"))
+        if name == "iota":
+            aval = keqn.outvars[0].aval
+            if len(getattr(aval, "shape", ())) < 2:
+                diags.append(LintDiagnostic(
+                    "warning", "iota-rank", loc,
+                    f"rank-{len(aval.shape)} iota of shape {aval.shape} — "
+                    "TPU wants 2-D broadcasted_iota"))
+        for var in keqn.outvars:
+            _dtype_diags(loc, getattr(var, "aval", None), diags)
+    return diags
+
+
+def lint_traced(traced) -> list:
+    """All diagnostics across every ``pallas_call`` of a traced core."""
+    diags = []
+    for ci, eqn in enumerate(pallas_calls(traced)):
+        diags.extend(lint_pallas_call(eqn, f"pallas_call#{ci}"))
+    return diags
+
+
+def check_lint(traced) -> tuple:
+    """Audit entry: ``(violations, info)``. Violations are the error-level
+    diagnostics' descriptions; ``info`` carries every diagnostic (dicts)
+    plus per-severity counts for the report and the CI artifact."""
+    diags = lint_traced(traced)
+    counts = {sev: 0 for sev in SEVERITIES}
+    for d in diags:
+        counts[d.severity] += 1
+    violations = [d.describe() for d in diags if d.severity == "error"]
+    info = {"checked": True, "counts": counts,
+            "diagnostics": [d.to_dict() for d in diags]}
+    return violations, info

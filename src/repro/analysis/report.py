@@ -8,9 +8,20 @@ One :func:`audit_all` call drives the whole static verifier:
 * per (backend, algorithm, corpus case): the spec's ``audit_trace`` stages
   the instance at its envelope, ``jax.make_jaxpr`` abstract-traces the core
   (no device execution), and the trace feeds the VMEM domination audit, the
-  structural DMA checks, and the while-bound checks;
+  structural DMA checks, the while-bound checks, the **copy-event flow
+  equality** pass (:mod:`repro.analysis.traffic` — traced bytes must equal
+  the spec's declared per-copy model and tie to the executors'
+  ``ChunkStats``), the **DMA interleaving model checker**
+  (:mod:`repro.analysis.interleave` — every async-completion order of the
+  two-slot schedule is hazard-free, or a minimal counterexample), and the
+  **Mosaic preflight lint** (:mod:`repro.analysis.mosaic_lint` — error
+  diagnostics fail the audit, warnings/infos ride along in the record);
 * the **retrace-leak** pass stages the case and its structural-subset twin
   at the shared (union) envelope and demands byte-identical jaxprs.
+
+``analyses`` subsets the per-trace passes (the CLI's ``--analyses`` flag:
+the fast lane smokes one analysis without paying for the rest); the
+schedule sweep runs whenever ``dma`` or ``interleave`` is selected.
 
 The output is a JSON-able report dict; ``tools/audit_backends.py`` is the
 CLI wrapper and the ``static-audit`` CI job fails on any violation.
@@ -26,7 +37,10 @@ from repro.analysis import corpus
 from repro.analysis.dma import (
     check_dma_structure, check_while_bounds, simulate_schedule,
 )
+from repro.analysis.interleave import check_interleave
+from repro.analysis.mosaic_lint import check_lint
 from repro.analysis.retrace import check_retrace
+from repro.analysis.traffic import check_traffic
 from repro.analysis.vmem import audit_vmem
 from repro.core import backend_registry
 
@@ -35,13 +49,17 @@ from repro.core import backend_registry
 # (thirds-of-thirds launches never exceed 9 linear steps per batch row).
 SCHEDULE_SWEEP = tuple(range(1, 13))
 
+# every per-trace analysis audit_backend_case can run, in run order.
+ANALYSES = ("vmem", "dma", "while", "traffic", "interleave", "lint",
+            "retrace")
+
 
 @dataclasses.dataclass(frozen=True)
 class Violation:
     """One auditor finding, locatable to (analysis, backend, algorithm,
     case)."""
 
-    analysis: str      # "vmem" | "dma" | "while" | "retrace" | "schedule"
+    analysis: str      # one of ANALYSES, or "schedule" for the sweep
     backend: str
     algorithm: str
     case: str
@@ -68,11 +86,25 @@ def _case_envelope(spec, A, B, plan):
     return instance_envelope(A, B, plan, block_size=block)
 
 
+def normalize_analyses(analyses) -> tuple:
+    """Validate/default an analysis subset (``None`` = all)."""
+    if analyses is None:
+        return ANALYSES
+    selected = tuple(analyses)
+    unknown = [a for a in selected if a not in ANALYSES]
+    if unknown:
+        raise ValueError(
+            f"unknown analyses {unknown}; available: {list(ANALYSES)}")
+    return selected
+
+
 def audit_backend_case(spec, algorithm: str, case_name: str, A, B,
-                       retrace: bool = True):
-    """All analyses for one (backend, algorithm, instance). Returns
-    ``(record, violations)``: a JSON-able measurement record and the list
-    of :class:`Violation`."""
+                       retrace: bool = True, analyses=None):
+    """All selected analyses for one (backend, algorithm, instance).
+    Returns ``(record, violations)``: a JSON-able measurement record and
+    the list of :class:`Violation`. ``retrace=False`` is shorthand for
+    dropping ``"retrace"`` from the selection."""
+    analyses = normalize_analyses(analyses)
     plan = corpus.make_plan(algorithm, A, B)
     env = _case_envelope(spec, A, B, plan)
     target = spec.audit_trace(A, B, plan, env.c_pad, env)
@@ -84,22 +116,63 @@ def audit_backend_case(spec, algorithm: str, case_name: str, A, B,
             Violation(analysis, spec.name, algorithm, case_name, m)
             for m in messages)
 
-    model = spec.byte_model(plan, env) if spec.byte_model is not None else None
-    vaudit = audit_vmem(traced, model)
-    if vaudit.dominated is False:
-        flag("vmem", [
-            f"byte model undercounts the traced VMEM footprint: model "
-            f"claims {vaudit.model_bytes:.0f} B but the trace stages "
-            f"{vaudit.traced_bytes:.0f} B (blocked-in "
-            f"{vaudit.blocked_in_bytes:.0f} + out {vaudit.output_bytes:.0f} "
-            f"+ scratch {vaudit.scratch_bytes:.0f} - alias credit "
-            f"{vaudit.alias_credit_bytes:.0f} + workspace "
-            f"{vaudit.workspace_bytes:.0f})"])
-    flag("dma", check_dma_structure(traced))
-    flag("while", check_while_bounds(
-        traced, expected_bound=_expected_while_bound(spec, target)))
+    record = {
+        "backend": spec.name,
+        "algorithm": algorithm,
+        "case": case_name,
+        "analyses": list(analyses),
+    }
 
-    if retrace:
+    if "vmem" in analyses:
+        model = (spec.byte_model(plan, env)
+                 if spec.byte_model is not None else None)
+        vaudit = audit_vmem(traced, model)
+        if vaudit.dominated is False:
+            flag("vmem", [
+                f"byte model undercounts the traced VMEM footprint: model "
+                f"claims {vaudit.model_bytes:.0f} B but the trace stages "
+                f"{vaudit.traced_bytes:.0f} B (blocked-in "
+                f"{vaudit.blocked_in_bytes:.0f} + out "
+                f"{vaudit.output_bytes:.0f} + scratch "
+                f"{vaudit.scratch_bytes:.0f} - alias credit "
+                f"{vaudit.alias_credit_bytes:.0f} + workspace "
+                f"{vaudit.workspace_bytes:.0f})"])
+        record["vmem"] = dataclasses.asdict(vaudit)
+        record["dominated"] = vaudit.dominated
+        record["n_pallas_calls"] = vaudit.n_pallas_calls
+
+    if "dma" in analyses:
+        flag("dma", check_dma_structure(traced))
+    if "while" in analyses:
+        flag("while", check_while_bounds(
+            traced, expected_bound=_expected_while_bound(spec, target)))
+
+    if "traffic" in analyses:
+        if spec.supports_traffic:
+            expected = spec.traffic_model(
+                A, B, plan, env.c_pad, env, target.meta)
+            tv, tinfo = check_traffic(
+                traced, expected,
+                scalar_args=target.meta.get("scalar_args", ()))
+            flag("traffic", tv)
+            record["traffic"] = tinfo
+        else:
+            record["traffic"] = {
+                "checked": False,
+                "reason": "no traffic_model registered (device-resident "
+                          "core: stats are a replay oracle by design)"}
+
+    if "interleave" in analyses:
+        iv, iinfo = check_interleave(traced)
+        flag("interleave", iv)
+        record["interleave"] = iinfo
+
+    if "lint" in analyses:
+        lv, linfo = check_lint(traced)
+        flag("lint", lv)
+        record["lint"] = linfo
+
+    if retrace and "retrace" in analyses:
         A2, B2 = corpus.retrace_pair(A, B)
         plan2 = corpus.make_plan(algorithm, A2, B2)
         env_shared = env.union(_case_envelope(spec, A2, B2, plan2))
@@ -107,33 +180,28 @@ def audit_backend_case(spec, algorithm: str, case_name: str, A, B,
         t2 = spec.audit_trace(A2, B2, plan, env_shared.c_pad, env_shared)
         flag("retrace", check_retrace(t1, t2))
 
-    record = {
-        "backend": spec.name,
-        "algorithm": algorithm,
-        "case": case_name,
-        "vmem": dataclasses.asdict(vaudit),
-        "dominated": vaudit.dominated,
-        "n_pallas_calls": vaudit.n_pallas_calls,
-        "n_violations": len(violations),
-    }
+    record["n_violations"] = len(violations)
     return record, violations
 
 
 def audit_all(backends=None, algorithms=None, cases=None,
-              retrace: bool = True) -> dict:
+              retrace: bool = True, analyses=None) -> dict:
     """Run the full static audit. Returns a JSON-able report dict with
     ``records`` (per backend x algorithm x case measurements),
-    ``violations``, ``skipped`` (non-auditable backends), and ``ok``."""
+    ``violations``, ``skipped`` (non-auditable backends), and ``ok``.
+    ``analyses`` subsets the per-trace passes (see :data:`ANALYSES`)."""
     backend_registry.ensure_registered()
     names = list(backends) if backends else list(backend_registry.all_backends())
     algorithms = list(algorithms) if algorithms else list(backend_registry.ALGORITHMS)
     case_names = list(cases) if cases else list(corpus.CASES)
+    analyses = normalize_analyses(analyses)
 
     violations = []
-    for total in SCHEDULE_SWEEP:
-        violations.extend(
-            Violation("schedule", "*", "*", f"total={total}", m)
-            for m in simulate_schedule(total))
+    if "dma" in analyses or "interleave" in analyses:
+        for total in SCHEDULE_SWEEP:
+            violations.extend(
+                Violation("schedule", "*", "*", f"total={total}", m)
+                for m in simulate_schedule(total))
 
     records, skipped = [], []
     for name in names:
@@ -147,7 +215,8 @@ def audit_all(backends=None, algorithms=None, cases=None,
             A, B = corpus.build_case(case_name)
             for algorithm in algorithms:
                 record, v = audit_backend_case(
-                    spec, algorithm, case_name, A, B, retrace=retrace)
+                    spec, algorithm, case_name, A, B, retrace=retrace,
+                    analyses=analyses)
                 records.append(record)
                 violations.extend(v)
 
@@ -156,6 +225,7 @@ def audit_all(backends=None, algorithms=None, cases=None,
         "backends": names,
         "algorithms": algorithms,
         "cases": case_names,
+        "analyses": list(analyses),
         "records": records,
         "skipped": skipped,
         "violations": [v.to_dict() for v in violations],

@@ -1,0 +1,240 @@
+"""Copy-event flow equality: the traced jaxpr's data movement must equal
+the backend's declared per-copy event model **exactly** — not dominate it.
+
+The paper's cost model is a stream of ``copy2Fast``/``copy2Slow`` events;
+the executors report that stream as :class:`~repro.core.chunking.ChunkStats`
+and the planner prices plans from the same arithmetic. Nothing at runtime
+ties those host-side models to the bytes the staged programs actually move,
+so this pass closes the loop statically, in three layers:
+
+1. **Traced reconstruction** (:func:`traced_flows`): walk every
+   ``pallas_call`` of an abstract-traced core and rebuild, per operand, the
+   ordered list of copy-event byte sizes over the whole launch grid:
+
+   * *blocked* operands (BlockSpec-staged) — replay the operand's index map
+     over the grid in row-major order (the pipeline's iteration order) with
+     the staged scalar-prefetch values bound; a copy event fires whenever
+     the map's start indices change between consecutive steps (the pipeline
+     reuses a resident block otherwise), at the kernel ref's block bytes;
+   * *streamed* (``ANY``-space) operands — the hand-DMA'd path: find the
+     VMEM scratch buffer their ``dma_start`` events target and charge one
+     slot-sized copy per linear grid step (warm-up prime + per-step
+     prefetch, the ``kernels/dma_schedule.py`` arithmetic);
+   * *outputs* — one writeback event per run of distinct block indices
+     (same transition replay as blocked inputs).
+
+2. **Flow equality** (:func:`check_traffic`): the reconstruction must equal
+   the spec's :class:`~repro.core.backend_registry.ExpectedTraffic`
+   operand-for-operand and event-for-event; any divergence produces a
+   per-event diff naming the operand, the event index, and both byte
+   streams.
+
+3. **Stats tie**: same-key expected flows merge event-wise (the three CSR
+   field operands of one logical staging sum into the single event the
+   executors log) and the merged multiset must equal the
+   ``ChunkStats.per_copy_in/out`` the backend reports — so the numbers the
+   benches plot are, provably, the bytes the kernels move. A spec may
+   declare a documented ``stats_exempt`` reason (the BSR executor's
+   per-pair host staging) — recorded, not flagged.
+"""
+
+from __future__ import annotations
+
+import collections
+import itertools
+
+import numpy as np
+
+from repro.analysis.dma import collect_dma_events
+from repro.analysis.jaxpr_tools import (
+    aval_bytes, kernel_jaxpr, kernel_operands, memory_space_of, pallas_calls,
+)
+
+
+def _grid_steps(grid):
+    """Row-major enumeration of the launch grid (last dim fastest — the
+    Pallas pipeline's iteration order, matching the kernels' ``lin``
+    linearization)."""
+    return itertools.product(*[range(int(g)) for g in grid])
+
+
+def _block_events(bm, grid, scalar_args, nbytes: float) -> tuple:
+    """Copy events of one blocked operand: replay the index map over the
+    grid; an event fires at every start-index transition (first step
+    included). ``compute_start_indices_interpret`` evaluates data-dependent
+    maps (the BSR slot-table lookups) given the concrete scalar-prefetch
+    operands."""
+    events, prev = [], None
+    for idx in _grid_steps(grid):
+        start = tuple(
+            int(x) for x in bm.compute_start_indices_interpret(
+                idx, *scalar_args))
+        if start != prev:
+            events.append(float(nbytes))
+        prev = start
+    return tuple(events)
+
+
+def traced_call_flows(eqn, scalar_args=()) -> dict:
+    """Per-operand copy-event flows of one ``pallas_call`` eqn.
+
+    Returns ``{"in": [(label, events), ...], "out": [...],
+    "notes": [...]}`` with operands in spec order. ``notes`` collects
+    structural surprises (an ``ANY`` operand never DMA'd, a block-mapping
+    count mismatch) that the caller should surface as violations.
+    """
+    gm = eqn.params["grid_mapping"]
+    grid = tuple(int(g) for g in gm.grid)
+    total = int(np.prod(grid, dtype=np.int64)) if grid else 1
+    ops = kernel_operands(eqn)
+    kj = kernel_jaxpr(eqn)
+    bms = list(gm.block_mappings)
+    n_in, n_out = len(ops["inputs"]), len(ops["outputs"])
+    notes = []
+    if len(bms) != n_in + n_out:
+        notes.append(
+            f"grid mapping carries {len(bms)} block mappings for "
+            f"{n_in} inputs + {n_out} outputs")
+        return {"in": [], "out": [], "notes": notes}
+    dma = collect_dma_events(kj)
+    in_flows = []
+    for i, (var, aval) in enumerate(ops["inputs"]):
+        space = memory_space_of(aval)
+        label = f"in#{i}({space})"
+        if space == "any":
+            starts = [d for d in dma if d[0] == "start" and d[2] is var]
+            if not starts:
+                notes.append(
+                    f"{label}: ANY-space operand is never dma_start'ed — "
+                    "a streamed operand the kernel does not stream")
+                in_flows.append((label, ()))
+                continue
+            buf_aval = getattr(starts[0][1], "aval", None)
+            n_slots = int(buf_aval.shape[0])
+            slot_bytes = aval_bytes(buf_aval) / n_slots
+            # one slot copy per linear grid step: prime + per-step prefetch
+            in_flows.append((label, (float(slot_bytes),) * total))
+        else:
+            in_flows.append((label, _block_events(
+                bms[i], grid, scalar_args, aval_bytes(aval))))
+    out_flows = []
+    for j, (_var, aval) in enumerate(ops["outputs"]):
+        label = f"out#{j}"
+        out_flows.append((label, _block_events(
+            bms[n_in + j], grid, scalar_args, aval_bytes(aval))))
+    return {"in": in_flows, "out": out_flows, "notes": notes}
+
+
+def traced_flows(traced, scalar_args=()) -> list:
+    """Per-``pallas_call`` operand flows of a traced core (see
+    :func:`traced_call_flows`)."""
+    return [traced_call_flows(eqn, scalar_args)
+            for eqn in pallas_calls(traced)]
+
+
+def _fmt_events(events, limit: int = 6) -> str:
+    shown = ", ".join(f"{e:.0f}" for e in events[:limit])
+    more = f", ...({len(events)} total)" if len(events) > limit else ""
+    return f"[{shown}{more}]"
+
+
+def _diff_flow(direction: str, op, label: str, events: tuple) -> str | None:
+    """One per-event diff line, or None when the flows match exactly."""
+    expected = tuple(float(e) for e in op.events)
+    if events == expected:
+        return None
+    head = (f"{direction} operand {label} (model key {op.key!r}): traced "
+            f"{len(events)} copy events {_fmt_events(events)} vs model "
+            f"{len(expected)} events {_fmt_events(expected)}")
+    for ix, (t, e) in enumerate(zip(events, expected)):
+        if t != e:
+            return (f"{head}; first divergence at event {ix}: traced "
+                    f"{t:.0f} B vs model {e:.0f} B")
+    return f"{head}; streams agree up to the shorter length"
+
+
+def _merged_events(ops) -> tuple:
+    """Same-key flows merged event-wise: the k-th event of every operand
+    sharing a key sums into one k-th merged event (three CSR fields staging
+    together are one ChunkStats copy)."""
+    merged, order, errors = {}, [], []
+    for op in ops:
+        if op.key not in merged:
+            merged[op.key] = [float(e) for e in op.events]
+            order.append(op.key)
+        else:
+            cur = merged[op.key]
+            if len(cur) != len(op.events):
+                errors.append(
+                    f"model flows sharing key {op.key!r} differ in event "
+                    f"count ({len(cur)} vs {len(op.events)}) — they cannot "
+                    "merge into one ChunkStats event stream")
+                continue
+            merged[op.key] = [a + float(b) for a, b in zip(cur, op.events)]
+    events = [e for key in order for e in merged[key]]
+    return events, errors
+
+
+def _diff_multiset(direction: str, merged: list, stats: tuple) -> list:
+    got = collections.Counter(round(e, 6) for e in merged)
+    want = collections.Counter(round(float(e), 6) for e in stats)
+    if got == want:
+        return []
+    missing = sorted((want - got).elements())
+    extra = sorted((got - want).elements())
+    return [
+        f"{direction} stats tie broken: merged model flow has "
+        f"{len(merged)} events summing {sum(merged):.0f} B but the "
+        f"executors' ChunkStats log {len(stats)} events summing "
+        f"{sum(float(e) for e in stats):.0f} B"
+        + (f"; stats events absent from the flow: {_fmt_events(missing)}"
+           if missing else "")
+        + (f"; flow events absent from the stats: {_fmt_events(extra)}"
+           if extra else "")
+    ]
+
+
+def check_traffic(traced, expected, *, scalar_args=()) -> tuple:
+    """Flow-equality audit of one traced core against its
+    :class:`~repro.core.backend_registry.ExpectedTraffic`.
+
+    Returns ``(violations, info)``: violation strings (empty = the traced
+    movement equals the model exactly and ties to the reported stats) and a
+    JSON-able summary for the report record.
+    """
+    violations = []
+    calls = pallas_calls(traced)
+    info = {"checked": True, "n_pallas_calls": len(calls),
+            "stats_exempt": expected.stats_exempt}
+    if len(calls) != 1:
+        violations.append(
+            f"traffic model describes one staged launch but the trace "
+            f"contains {len(calls)} pallas_calls")
+        return violations, info
+    flows = traced_call_flows(calls[0], scalar_args)
+    violations.extend(flows["notes"])
+    for direction, traced_side, model_side in (
+            ("slow->fast", flows["in"], expected.in_ops),
+            ("fast->slow", flows["out"], expected.out_ops)):
+        if len(traced_side) != len(model_side):
+            violations.append(
+                f"{direction}: trace has {len(traced_side)} operands but "
+                f"the model declares {len(model_side)}")
+            continue
+        for (label, events), op in zip(traced_side, model_side):
+            diff = _diff_flow(direction, op, label, events)
+            if diff:
+                violations.append(diff)
+    info["in_bytes"] = sum(e for _, ev in flows["in"] for e in ev)
+    info["out_bytes"] = sum(e for _, ev in flows["out"] for e in ev)
+    info["in_events"] = sum(len(ev) for _, ev in flows["in"])
+    info["out_events"] = sum(len(ev) for _, ev in flows["out"])
+    if expected.stats_exempt is None:
+        for direction, ops, stats in (("slow->fast", expected.in_ops,
+                                       expected.stats_in),
+                                      ("fast->slow", expected.out_ops,
+                                       expected.stats_out)):
+            merged, errors = _merged_events(ops)
+            violations.extend(errors)
+            violations.extend(_diff_multiset(direction, merged, stats))
+    return violations, info

@@ -55,6 +55,36 @@ ALGORITHMS = ("knl", "chunk1", "chunk2")
 
 
 @dataclasses.dataclass(frozen=True)
+class OpFlow:
+    """Per-operand copy-event model: the ordered byte sizes of every
+    slow->fast (or fast->slow) copy one pallas operand performs across the
+    whole grid. ``key`` names the logical operand (several CSR field
+    operands may share one key — their per-event bytes then sum into the
+    single ``ChunkStats`` event the executor logs)."""
+
+    key: str
+    events: tuple     # ordered per-copy byte sizes, one float per copy event
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpectedTraffic:
+    """A backend's declared data-movement model for one staged core:
+    the per-operand copy-event lists the traced jaxpr must reproduce
+    *exactly* (``analysis/traffic.py`` checks equality, not domination),
+    plus the ``ChunkStats``-granularity event lists the executors report
+    (same-key operand flows merged event-wise). ``stats_exempt`` names a
+    documented reason the stats tie is skipped (e.g. the BSR executor's
+    per-pair host staging loop, which the pipeline-model stats
+    intentionally idealize); the per-operand flow check still applies."""
+
+    in_ops: tuple                  # tuple[OpFlow, ...], slow->fast
+    out_ops: tuple                 # tuple[OpFlow, ...], fast->slow
+    stats_in: tuple = ()           # ChunkStats.per_copy_in the executor logs
+    stats_out: tuple = ()          # ChunkStats.per_copy_out the executor logs
+    stats_exempt: str | None = None
+
+
+@dataclasses.dataclass(frozen=True)
 class TraceTarget:
     """An abstract-traceable handle on one backend core: ``fn(*args)`` must
     trace under ``jax.make_jaxpr`` without device execution (statics already
@@ -87,6 +117,14 @@ class BackendSpec:
     # verifier (repro.analysis) can abstract-trace it. None = not auditable
     # (the host-loop oracle has no jitted core).
     audit_trace: Callable | None = None
+    # traffic capability: (A, B, plan, c_pad, envelope, meta) -> ExpectedTraffic,
+    # the per-copy-event byte model `analysis/traffic.py` holds the traced
+    # jaxpr to (exact equality). `meta` is the TraceTarget.meta of the
+    # matching audit_trace — the statics (scalar-prefetch tables, chunk
+    # counts) both sides were staged from. None = flow equality not checked
+    # (the scan backend is device-resident: its stats are a replay oracle by
+    # design, with no per-chunk pallas copies to reconcile).
+    traffic_model: Callable | None = None
 
     @property
     def supports_batched(self) -> bool:
@@ -95,6 +133,10 @@ class BackendSpec:
     @property
     def supports_audit(self) -> bool:
         return self.audit_trace is not None
+
+    @property
+    def supports_traffic(self) -> bool:
+        return self.traffic_model is not None
 
 
 _REGISTRY: dict[str, BackendSpec] = {}
@@ -123,6 +165,11 @@ def register(spec: BackendSpec) -> BackendSpec:
             raise ValueError(
                 f"backend {spec.name!r}: {field}={template!r} must contain "
                 "the '{alg}' placeholder (one TRACE_COUNTS key per algorithm)")
+    if spec.traffic_model is not None and spec.audit_trace is None:
+        raise ValueError(
+            f"backend {spec.name!r} registers a traffic_model without an "
+            "audit_trace: the flow-equality analysis has no traced jaxpr "
+            "to hold the model to")
     if spec.needs_block_caps and spec.block_size is None:
         raise ValueError(
             f"backend {spec.name!r} needs_block_caps but registers no "

@@ -91,7 +91,7 @@ from repro.core.chunking import (
 )
 from repro.core.kkmem import spgemm_ranged_impl
 from repro.core.planner import (
-    ChunkPlan, check_output_caps, hash_table_slots,
+    ChunkPlan, check_output_caps, csr_field_nbytes, hash_table_slots,
     planned_stats_bsr, planned_stats_dense_slab, planned_stats_hash,
     planned_stats_sparse, select_accumulator_backend,
 )
@@ -297,8 +297,13 @@ def planned_stats_pallas(plan: ChunkPlan, slab_nbytes: int, a_stage_nbytes: int,
         volume is unchanged;
       * in the Chunk2 order the per-strip C partials persist in the VMEM
         output block across outer steps, so the ``(n_b - 1)`` per-strip
-        out+in partial bounces of the loop/scan model collapse into one
-        ``C_prev`` fetch and one final writeback per strip.
+        out+in partial bounces of the loop/scan model collapse into **one**
+        whole-block ``C_prev`` fetch and **one** final writeback: the kernel
+        maps all ``n_ac`` partials as a single ``(n_ac, strip_rows, n)``
+        block at a constant index, so the pipeline stages it as one copy
+        event of ``n_ac * c_stage_nbytes``, not ``n_ac`` per-strip events
+        (the traffic-equality audit holds this model to the traced jaxpr
+        event-for-event).
     """
     stats = ChunkStats(plan.algorithm, plan.n_ac, plan.n_b)
     if plan.algorithm in ("knl", "chunk1"):
@@ -313,13 +318,14 @@ def planned_stats_pallas(plan: ChunkPlan, slab_nbytes: int, a_stage_nbytes: int,
     if plan.algorithm == "chunk2":
         for jb in range(plan.n_b):
             stats.add_in(slab_nbytes)        # stationary chunk -> VMEM
+            if jb == 0:
+                # C_prev: one whole-block fetch (all n_ac partials at once)
+                stats.add_in(plan.n_ac * c_stage_nbytes)
             for _ in range(plan.n_ac):
-                if jb == 0:
-                    stats.add_in(c_stage_nbytes)   # C_prev fetched once
                 stats.add_in(a_stage_nbytes)       # streamed strip DMA
                 stats.kernel_calls += 1
-        for _ in range(plan.n_ac):
-            stats.add_out(c_stage_nbytes)    # single final writeback
+        # single whole-block final writeback
+        stats.add_out(plan.n_ac * c_stage_nbytes)
         return stats
     raise ValueError(f"unknown algorithm {plan.algorithm!r}")
 
@@ -1093,8 +1099,9 @@ def _audit_pallas(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int,
     else:
         Ast = csr_stack(a_strips(A, plan.p_ac, envelope=envelope))
         core = _chunk1_pallas if plan.algorithm == "chunk1" else _chunk2_pallas
-    return backend_registry.TraceTarget(fn=core,
-                                        args=(Ast, Bst, jnp.asarray(r0s)))
+    return backend_registry.TraceTarget(
+        fn=core, args=(Ast, Bst, jnp.asarray(r0s)),
+        meta={"scalar_args": (jnp.asarray(r0s),)})
 
 
 def _make_audit_csr_accum(kind: str):
@@ -1111,6 +1118,7 @@ def _make_audit_csr_accum(kind: str):
         C0 = _sparse_c0_stack(1, plan.n_ac, envelope.strip_rows, B.n_cols,
                               c_pad, A.dtype)
         args = (Ast, Bst, C0, jnp.asarray(r0s), jnp.asarray(r1s))
+        scalar_args = (jnp.asarray(r0s), jnp.asarray(r1s))
         if kind == "hash":
             # compile key: the table derives from the envelope, exactly as
             # in the batched run (see _csr_accum_run_batched)
@@ -1118,9 +1126,11 @@ def _make_audit_csr_accum(kind: str):
                 envelope.c_max_row_nnz if envelope.c_nnz_cap else B.n_cols)
             return backend_registry.TraceTarget(
                 fn=partial(_HASH_CORES[plan.algorithm], table_size=table),
-                args=args, meta={"table_size": table})
+                args=args,
+                meta={"table_size": table, "scalar_args": scalar_args})
         return backend_registry.TraceTarget(
-            fn=_SPARSE_CORES[plan.algorithm], args=args)
+            fn=_SPARSE_CORES[plan.algorithm], args=args,
+            meta={"scalar_args": scalar_args})
 
     return audit
 
@@ -1147,10 +1157,130 @@ def _audit_bsr(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int,
     Ab = bsr_from_dense(Am, bs, pad_to=nbl_a_cap)
     Bb = bsr_from_dense(Bm, bs, pad_to=nbl_b_cap)
     meta = bsr_spgemm_symbolic(Ab, Bb, nc_pad=nc_cap, u_max=u_cap)
+    a_slots, b_slots = jnp.asarray(meta.a_slots), jnp.asarray(meta.b_slots)
     return backend_registry.TraceTarget(
         fn=partial(_BSR_CORES[plan.algorithm], envelope=envelope),
         args=(bsr_blocks_with_sentinel(Ab), bsr_blocks_with_sentinel(Bb),
-              jnp.asarray(meta.a_slots), jnp.asarray(meta.b_slots)))
+              a_slots, b_slots),
+        meta={"scalar_args": (a_slots, b_slots)})
+
+
+# ---------------------------------------------------------------------------
+# traffic models: the per-copy-event byte flows the traced jaxprs must equal
+# ---------------------------------------------------------------------------
+#
+# Each hook declares, per pallas operand and in spec order, the ordered list
+# of copy-event byte sizes the staged launch performs over its whole grid —
+# the planner-side half of the flow-equality audit (repro.analysis.traffic),
+# which reconstructs the same lists from the traced jaxpr and demands exact
+# equality, then ties the merged flows to the ChunkStats the executors log.
+
+
+def _traffic_pallas(A, B, plan: ChunkPlan, c_pad: int,
+                    envelope: GeometryEnvelope, meta):
+    """Dense-slab pipeline flows. knl/chunk1 grid is (1, n_ac, n_b): the
+    stationary strip and fused C_prev block refetch per strip, the slab
+    hand-DMAs every grid step; chunk2 swaps the roles and maps all C
+    partials as one constant-index block (one fetch, one writeback)."""
+    del A, B, c_pad, meta
+    OpFlow = backend_registry.OpFlow
+    k, n = envelope.a_shape[1], envelope.b_shape[1]
+    strip_rows = (envelope.a_shape[0] if plan.algorithm == "knl"
+                  else envelope.strip_rows)
+    slab, a_stage, c_stage = (
+        float(v) for v in _pallas_stage_nbytes(strip_rows, k,
+                                               envelope.chunk_rows, n))
+    n_ac, n_b = plan.n_ac, plan.n_b
+    if plan.algorithm in ("knl", "chunk1"):
+        in_ops = (OpFlow("stationary", (a_stage,) * n_ac),
+                  OpFlow("streamed", (slab,) * (n_ac * n_b)),
+                  OpFlow("c_prev", (c_stage,) * n_ac))
+        out_ops = (OpFlow("c_out", (c_stage,) * n_ac),)
+    else:
+        in_ops = (OpFlow("stationary", (slab,) * n_b),
+                  OpFlow("streamed", (a_stage,) * (n_b * n_ac)),
+                  OpFlow("c_prev", (n_ac * c_stage,)))
+        out_ops = (OpFlow("c_out", (n_ac * c_stage,)),)
+    st = planned_stats_pallas(plan, slab, a_stage, c_stage)
+    return backend_registry.ExpectedTraffic(
+        in_ops=in_ops, out_ops=out_ops,
+        stats_in=tuple(st.per_copy_in), stats_out=tuple(st.per_copy_out))
+
+
+def _traffic_csr_accum(A, B, plan: ChunkPlan, c_pad: int,
+                       envelope: GeometryEnvelope, meta):
+    """CSR-accumulator (ESC and hash) flows: every logical operand is three
+    field operands (indptr, indices, data) whose per-event bytes sum to the
+    staged triple's ``CSR.nbytes()`` — same-key fields merge event-wise into
+    the single ChunkStats event the executors log. knl stages as the
+    1-strip chunk1 special case (see ``_sparse_run``)."""
+    del A, B, meta
+    OpFlow = backend_registry.OpFlow
+    itemsize = int(np.dtype(envelope.dtype).itemsize)
+    strip_f = csr_field_nbytes(envelope.strip_rows, envelope.strip_nnz_cap,
+                               itemsize)
+    chunk_f = csr_field_nbytes(envelope.chunk_rows, envelope.chunk_nnz_cap,
+                               itemsize)
+    c_f = csr_field_nbytes(envelope.strip_rows, c_pad, itemsize)
+    n_ac, n_b = plan.n_ac, plan.n_b
+    if plan.algorithm in ("knl", "chunk1"):
+        stat_f, stream_f = strip_f, chunk_f
+        n_stat, n_stream = n_ac, n_ac * n_b
+        c_in = tuple(OpFlow("c_prev", (f,) * n_ac) for f in c_f)
+        c_out = tuple(OpFlow("c_out", (f,) * n_ac) for f in c_f)
+    else:
+        stat_f, stream_f = chunk_f, strip_f
+        n_stat, n_stream = n_b, n_b * n_ac
+        c_in = tuple(OpFlow("c_prev", (n_ac * f,)) for f in c_f)
+        c_out = tuple(OpFlow("c_out", (n_ac * f,)) for f in c_f)
+    in_ops = (
+        tuple(OpFlow("stationary", (f,) * n_stat) for f in stat_f)
+        + tuple(OpFlow("streamed", (f,) * n_stream) for f in stream_f)
+        + c_in
+    )
+    st = planned_stats_pallas(
+        plan, int(sum(chunk_f)), int(sum(strip_f)),
+        _c_strip_nbytes(envelope.strip_rows, c_pad, envelope.dtype))
+    return backend_registry.ExpectedTraffic(
+        in_ops=in_ops, out_ops=c_out,
+        stats_in=tuple(st.per_copy_in), stats_out=tuple(st.per_copy_out))
+
+
+def _traffic_bsr(A, B, plan: ChunkPlan, c_pad: int,
+                 envelope: GeometryEnvelope, meta):
+    """Blocked-kernel flows, replayed from the audited pair's scalar-prefetch
+    slot tables: a ``bs x bs`` tile is fetched whenever the slot value
+    changes between consecutive grid steps (the pipeline reuses a resident
+    block when the index map lands on the same slot), and each output block
+    row writes back once. The ChunkStats tie is exempt: ``_bsr_execute``
+    stages every (strip, chunk) pair through a host loop while its stats
+    model the idealized BSR pipeline — a documented modeling fiction
+    (see ``_bsr_execute``) the flow audit does not re-litigate."""
+    del A, B, plan, c_pad
+    OpFlow = backend_registry.OpFlow
+    bs = envelope.bsr_caps[0]
+    block_bytes = float(bs * bs * 4)
+    a_slots = np.asarray(meta["scalar_args"][0])
+    b_slots = np.asarray(meta["scalar_args"][1])
+
+    def slot_flow(table):
+        events, prev = [], None
+        for val in table.reshape(-1):      # row-major == grid order (e, u)
+            v = int(val)
+            if prev is None or v != prev:
+                events.append(block_bytes)
+            prev = v
+        return tuple(events)
+
+    nc_pad = int(a_slots.shape[0])
+    return backend_registry.ExpectedTraffic(
+        in_ops=(OpFlow("a_blocks", slot_flow(a_slots)),
+                OpFlow("b_blocks", slot_flow(b_slots))),
+        out_ops=(OpFlow("c_blocks", (block_bytes,) * nc_pad),),
+        stats_exempt=(
+            "bsr executor stages per (strip, chunk) pair host-side; its "
+            "ChunkStats model the idealized BSR pipeline, not the audited "
+            "single-pair launch (documented in _bsr_execute)"))
 
 
 def _register_all() -> None:
@@ -1182,6 +1312,7 @@ def _register_all() -> None:
         trace_key_batched="{alg}_pallas_batched",
         is_accumulator=True,
         audit_trace=_audit_pallas,
+        traffic_model=_traffic_pallas,
     ))
     register(Spec(
         name="sparse",
@@ -1193,6 +1324,7 @@ def _register_all() -> None:
         needs_output_caps=True,
         is_accumulator=True,
         audit_trace=_make_audit_csr_accum("sparse"),
+        traffic_model=_traffic_csr_accum,
     ))
     register(Spec(
         name="hash",
@@ -1204,6 +1336,7 @@ def _register_all() -> None:
         needs_output_caps=True,
         is_accumulator=True,
         audit_trace=_make_audit_csr_accum("hash"),
+        traffic_model=_traffic_csr_accum,
     ))
     register(Spec(
         name="bsr",
@@ -1217,6 +1350,7 @@ def _register_all() -> None:
         is_accumulator=True,
         block_size=_BSR_DEFAULT_BLOCK,
         audit_trace=_audit_bsr,
+        traffic_model=_traffic_bsr,
     ))
 
 

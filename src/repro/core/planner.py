@@ -218,6 +218,19 @@ def _csr_staged_bytes(rows: int, nnz_cap: int, itemsize: int) -> float:
     return float((rows + 1) * 4 + max(nnz_cap, 1) * (4 + itemsize))
 
 
+def csr_field_nbytes(rows: int, nnz_cap: int, itemsize: int) -> tuple:
+    """Per-field ``(indptr, indices, data)`` byte sizes of one staged padded
+    CSR triple — the three copy events a CSR operand performs per staging
+    step in the sparse/hash kernels, whose sum is exactly the staged
+    ``CSR.nbytes()``. Unlike :func:`_csr_staged_bytes` (the planner's
+    domination *model*, floored at one slot) this is staging truth: a
+    zero-capacity envelope stages zero-size index/data arrays and therefore
+    moves zero bytes for those fields, and the traffic-equality audit holds
+    the traced jaxpr to these exact sizes."""
+    return (float((rows + 1) * 4), float(nnz_cap * 4),
+            float(nnz_cap * itemsize))
+
+
 def planned_stats_dense_slab(plan: ChunkPlan, envelope) -> BackendFastModel:
     """The dense-accumulator (``backend="pallas"``) resident footprint: the
     streamed/stationary pieces are dense f32 slabs and the C accumulator is a

@@ -36,6 +36,16 @@ class SlotSchedule:
 
     n_slots = N_SLOTS
 
+    def __init__(self):
+        # double buffering is the point: with fewer than two slots the
+        # prefetch of element lin+1 necessarily targets the slot step lin
+        # is reading, so every schedule below two slots is a race by
+        # construction — reject it before any kernel or checker runs it.
+        if self.n_slots < 2:
+            raise ValueError(
+                f"SlotSchedule needs n_slots >= 2 (got {self.n_slots}): a "
+                "single slot cannot overlap copy with compute")
+
     def read_slot(self, lin):
         """Slot holding streamed element ``lin`` when step ``lin`` runs."""
         return lin % self.n_slots

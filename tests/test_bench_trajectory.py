@@ -17,7 +17,9 @@ REPO = pathlib.Path(__file__).resolve().parents[1]
 TOOL = REPO / "tools" / "bench_trajectory.py"
 
 sys.path.insert(0, str(REPO / "tools"))
-from bench_trajectory import append_entries, summarize  # noqa: E402
+from bench_trajectory import (  # noqa: E402
+    append_entries, current_sha, normalize_entries, summarize,
+)
 
 
 def _report(lane="chunking_bsr_blocking", n=3):
@@ -87,3 +89,42 @@ def test_committed_seed_matches_schema():
         assert {"sha", "date", "lane", "summary"} <= set(e)
         assert e["summary"]["n_rows"] >= 1
         assert isinstance(e["summary"]["row_medians"], dict)
+
+
+def test_committed_file_has_real_shas_and_no_duplicates():
+    """The backfill contract: every committed entry stamps a hex commit sha
+    (no 'seed' placeholders) and (sha, lane) pairs are unique."""
+    doc = json.loads((REPO / "BENCH_trajectory.json").read_text())
+    keys = [(e["sha"], e["lane"]) for e in doc["entries"]]
+    assert len(keys) == len(set(keys))
+    for sha, _lane in keys:
+        assert len(sha) >= 7 and all(c in "0123456789abcdef" for c in sha), sha
+
+
+def test_default_sha_is_current_head(tmp_path):
+    """Without --sha the CLI stamps this repo's HEAD, not a placeholder."""
+    head = current_sha()
+    assert len(head) >= 10 and all(c in "0123456789abcdef" for c in head)
+    rep = tmp_path / "rep.json"
+    rep.write_text(json.dumps(_report()))
+    out = tmp_path / "traj.json"
+    r = subprocess.run(
+        [sys.executable, str(TOOL), str(rep), "--date", "2026-08-08",
+         "--out", str(out)],
+        capture_output=True, text=True, cwd=tmp_path)
+    assert r.returncode == 0, r.stderr
+    doc = json.loads(out.read_text())
+    assert doc["entries"][0]["sha"] == head
+
+
+def test_append_repairs_preexisting_duplicates(tmp_path):
+    """A file an older tool double-logged is normalized on the next append:
+    duplicates drop (first wins) even though the new report is a no-op."""
+    dup = {"sha": "abc123", "date": "2026-08-08", "lane": "chunking_bsr_blocking",
+           "summary": summarize(_report())}
+    out = tmp_path / "traj.json"
+    out.write_text(json.dumps({"entries": [dup, dict(dup), dict(dup)]}))
+    assert normalize_entries([dup, dict(dup)]) == [dup]
+    added = append_entries(out, "abc123", "2026-08-08", [_report()])
+    assert added == []
+    assert len(json.loads(out.read_text())["entries"]) == 1

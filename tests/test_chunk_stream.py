@@ -162,8 +162,8 @@ def test_planned_stats_pallas_event_model():
     assert st2.kernel_calls == 6                  # n_ac * n_b
     assert st2.per_copy_in.count(100.0) == 3      # each chunk staged once
     assert st2.per_copy_in.count(10.0) == 6       # strips streamed per chunk
-    assert st2.per_copy_in.count(1.0) == 2        # C_prev fetched once/strip
-    assert st2.per_copy_out == [1.0, 1.0]         # single final writeback
+    assert st2.per_copy_in.count(2.0) == 1        # whole C block, one fetch
+    assert st2.per_copy_out == [2.0]              # single final writeback
     plan1 = ChunkPlan("chunk1", (0, 4, 8), (0, 3, 6, 9), 0.0, 0.0)
     st1 = planned_stats_pallas(plan1, 100, 10, 1)
     assert st1.kernel_calls == 6

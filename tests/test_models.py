@@ -16,9 +16,9 @@ KEY = jax.random.PRNGKey(0)
 
 
 def dense_cfg(**kw):
-    base = dict(name="t", family="dense", n_layers=2, d_model=64, d_ff=128,
-                vocab_size=128, n_heads=8, n_kv_heads=2, q_chunk=16,
-                attn_chunk=16, compute_dtype="float32")
+    base = {"name": "t", "family": "dense", "n_layers": 2, "d_model": 64,
+            "d_ff": 128, "vocab_size": 128, "n_heads": 8, "n_kv_heads": 2,
+            "q_chunk": 16, "attn_chunk": 16, "compute_dtype": "float32"}
     base.update(kw)
     return ModelConfig(**base)
 

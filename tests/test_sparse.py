@@ -106,9 +106,10 @@ def test_graphs_symmetric_binary():
 def _env(**kw):
     from repro.sparse.csr import GeometryEnvelope
 
-    base = dict(a_shape=(8, 8), b_shape=(8, 8), a_nnz_cap=10, a_max_row_nnz=3,
-                b_max_row_nnz=5, chunk_rows=4, chunk_nnz_cap=7, strip_rows=8,
-                strip_nnz_cap=10, c_pad=64, dtype="float32")
+    base = {"a_shape": (8, 8), "b_shape": (8, 8), "a_nnz_cap": 10,
+            "a_max_row_nnz": 3, "b_max_row_nnz": 5, "chunk_rows": 4,
+            "chunk_nnz_cap": 7, "strip_rows": 8, "strip_nnz_cap": 10,
+            "c_pad": 64, "dtype": "float32"}
     base.update(kw)
     return GeometryEnvelope(**base)
 

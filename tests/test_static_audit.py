@@ -18,8 +18,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.analysis import (
-    audit_all, audit_vmem, check_dma_structure, check_retrace,
-    simulate_schedule,
+    audit_all, audit_vmem, build_program, check_dma_structure,
+    check_interleave, check_lint, check_retrace, check_traffic, explore,
+    lint_traced, normalize_analyses, simulate_schedule,
 )
 from repro.analysis import corpus
 from repro.core import backend_registry
@@ -46,6 +47,35 @@ def test_audit_clean_on_fast_corpus():
     assert {"pallas", "sparse", "hash", "bsr"} <= checked
     # the host-loop oracle is the only non-auditable backend
     assert [s["backend"] for s in rep["skipped"]] == ["loop"]
+    # flow equality actually ran on every backend with a traffic model, and
+    # the scan backend's exemption is recorded, not silently skipped
+    for r in rep["records"]:
+        if r["backend"] in ("pallas", "sparse", "hash", "bsr"):
+            assert r["traffic"]["checked"], r
+            assert r["traffic"]["in_events"] > 0, r
+        elif r["backend"] == "scan":
+            assert r["traffic"]["checked"] is False
+            assert "reason" in r["traffic"]
+        # zero lint errors on the shipped kernels (warnings are the on-TPU
+        # validation worklist and do not fail the audit)
+        assert r["lint"]["counts"]["error"] == 0, r
+    # the streaming backends' two-slot schedules were model-checked
+    streamed = {r["backend"] for r in rep["records"]
+                if any(s["ok"] for s in r["interleave"]["streams"])}
+    assert {"pallas", "sparse", "hash"} <= streamed
+
+
+def test_audit_analyses_subset():
+    """The --analyses subset machinery: only the requested passes run and
+    their record fields appear."""
+    rep = audit_all(cases=["skewed_rows"], backends=["pallas"],
+                    algorithms=["knl"], analyses=["lint"])
+    assert rep["ok"]
+    assert rep["analyses"] == ["lint"]
+    (record,) = rep["records"]
+    assert "lint" in record and "vmem" not in record and "traffic" not in record
+    with pytest.raises(ValueError, match="unknown analyses"):
+        normalize_analyses(["lint", "nonsense"])
 
 
 def test_schedule_simulation_race_free():
@@ -111,8 +141,25 @@ def test_slot_aliasing_schedule_is_flagged():
     assert simulate_schedule(6, TWO_SLOT) == []
 
 
-def test_one_slot_schedule_is_flagged():
-    assert simulate_schedule(4, _OneSlotSchedule())
+def test_one_slot_schedule_is_rejected_at_construction():
+    """Below two slots, every prefetch collides with the read by
+    construction — the schedule class refuses to exist."""
+    with pytest.raises(ValueError, match="n_slots >= 2"):
+        _OneSlotSchedule()
+
+
+def test_schedule_replay_edge_cases():
+    """Host-replay boundary conditions: an empty stream has nothing to
+    race, a single-chunk stream is prime-only (no prefetch), and wider
+    double buffers replay clean too."""
+    assert simulate_schedule(0) == []
+    assert simulate_schedule(1) == []
+
+    class _ThreeSlot(SlotSchedule):
+        n_slots = 3
+
+    for total in (0, 1, 2, 5, 9):
+        assert simulate_schedule(total, _ThreeSlot()) == []
 
 
 def _toy_missing_wait_core():
@@ -197,16 +244,175 @@ def test_hash_probe_bound_matches_planner():
     assert check_while_bounds(traced, expected_bound=bound + 1)
 
 
+def _traced_and_expected(backend="pallas", algorithm="chunk1",
+                         case="skewed_rows"):
+    spec = backend_registry.get(backend)
+    A, B = corpus.build_case(case)
+    plan = corpus.make_plan(algorithm, A, B)
+    block = spec.block_size if spec.needs_block_caps else None
+    env = instance_envelope(A, B, plan, block_size=block)
+    target = spec.audit_trace(A, B, plan, env.c_pad, env)
+    traced = jax.make_jaxpr(target.fn)(*target.args)
+    expected = spec.traffic_model(A, B, plan, env.c_pad, env, target.meta)
+    return traced, expected, target.meta.get("scalar_args", ())
+
+
+def test_traffic_flow_divergence_is_flagged():
+    """A traffic model missing one copy event diverges from the trace —
+    flow equality is per-event, so the diff names the extra traced copy."""
+    traced, expected, scalars = _traced_and_expected()
+    clean, _ = check_traffic(traced, expected, scalar_args=scalars)
+    assert clean == []
+    short = dataclasses.replace(
+        expected.in_ops[1], events=expected.in_ops[1].events[:-1])
+    tampered = dataclasses.replace(
+        expected, in_ops=(expected.in_ops[0], short, expected.in_ops[2]))
+    violations, _ = check_traffic(traced, tampered, scalar_args=scalars)
+    assert any("copy events" in v and "slow->fast" in v for v in violations)
+
+
+def test_traffic_stats_undercount_is_flagged():
+    """A kernel moving more bytes than its ChunkStats report breaks the
+    stats tie: the merged model flow no longer matches the logged events."""
+    traced, expected, scalars = _traced_and_expected(backend="sparse")
+    undercounted = dataclasses.replace(
+        expected, stats_in=expected.stats_in[:-1])
+    violations, _ = check_traffic(traced, undercounted, scalar_args=scalars)
+    assert any("stats tie broken" in v for v in violations)
+    assert any("absent from the stats" in v for v in violations)
+
+
+def test_traffic_wrong_event_size_diff_names_the_event():
+    """Per-event diff: a single wrong byte size is located by index."""
+    traced, expected, scalars = _traced_and_expected()
+    events = list(expected.in_ops[0].events)
+    events[1] = events[1] + 4.0
+    bad = dataclasses.replace(expected.in_ops[0], events=tuple(events))
+    tampered = dataclasses.replace(
+        expected, in_ops=(bad,) + expected.in_ops[1:])
+    violations, _ = check_traffic(traced, tampered, scalar_args=scalars)
+    assert any("first divergence at event 1" in v for v in violations)
+
+
+def test_interleave_counterexample_on_aliasing_schedule():
+    """The model checker proves the aliasing schedule unsafe with a
+    *minimal* counterexample: two starts into the same slot, nothing else."""
+    cex = explore(build_program(4, _SlotAliasingSchedule()), n_slots=2)
+    assert cex is not None
+    assert "still in flight" in cex.hazard
+    assert len(cex.trace) == 2          # shortest possible witness
+    text = cex.describe()
+    assert "shortest interleaving" in text
+    assert simulate_schedule(4, _SlotAliasingSchedule()) != []
+
+
+def test_interleave_clean_on_two_slot_schedule():
+    for total in (0, 1, 2, 6):
+        for n_fields in (1, 3):
+            ops = build_program(total, TWO_SLOT, n_fields)
+            assert explore(ops, n_slots=2, n_fields=n_fields) is None
+
+
+def test_interleave_deadlock_is_flagged():
+    """A schedule that never primes slot 0 leaves step 0's wait forever
+    unsatisfiable — reported as a deadlock, not an infinite search."""
+
+    class _NoPrime(SlotSchedule):
+        def is_prime_step(self, lin):
+            return False
+
+    cex = explore(build_program(3, _NoPrime()), n_slots=2)
+    assert cex is not None and "deadlock" in cex.hazard
+
+
+def test_interleave_checks_real_streaming_backends():
+    traced, _, _ = _traced_and_expected(backend="sparse")
+    violations, info = check_interleave(traced)
+    assert violations == []
+    assert info["streams"] and info["streams"][0]["n_fields"] == 3
+
+
+def _toy_lintable_core(bound_ref: bool):
+    """A kernel with a deliberately misaligned block shape and, when
+    ``bound_ref`` is set, a while loop whose trip bound is read from a ref
+    (statically unbounded — the lint's error class)."""
+
+    def kernel(n_ref, o_ref):
+        if bound_ref:
+            def cond(c):
+                return c < n_ref[0]
+        else:
+            def cond(c):
+                return c < 7
+        jax.lax.while_loop(cond, lambda c: c + 1, 0)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @jax.jit
+    def core(n):
+        return pl.pallas_call(
+            kernel,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=1,
+                grid=(1,),
+                in_specs=[],
+                out_specs=pl.BlockSpec((4, 40), lambda i, n: (0, 0)),
+            ),
+            out_shape=jax.ShapeDtypeStruct((4, 40), jnp.float32),
+            interpret=True,
+        )(n)
+
+    return core
+
+
+def test_lint_flags_nonstatic_while_bound():
+    traced = jax.make_jaxpr(_toy_lintable_core(bound_ref=True))(
+        jnp.arange(1, dtype=jnp.int32))
+    violations, info = check_lint(traced)
+    assert any("no statically evident trip bound" in v for v in violations)
+    assert info["counts"]["error"] >= 1
+    # the literal-bounded variant of the same kernel lints clean of errors
+    clean = jax.make_jaxpr(_toy_lintable_core(bound_ref=False))(
+        jnp.arange(1, dtype=jnp.int32))
+    assert check_lint(clean)[0] == []
+
+
+def test_lint_flags_misaligned_block_shape():
+    traced = jax.make_jaxpr(_toy_lintable_core(bound_ref=False))(
+        jnp.arange(1, dtype=jnp.int32))
+    diags = lint_traced(traced)
+    lane = [d for d in diags if d.check == "tile-alignment"
+            and "lane dim 40" in d.message]
+    assert lane and all(d.severity == "warning" for d in lane)
+    sub = [d for d in diags if d.check == "tile-alignment"
+           and "sublane dim 4" in d.message]
+    assert sub
+
+
+def test_lint_flags_untrusted_esc_and_hash_lanes():
+    """The ROADMAP's untrusted primitives surface as warnings on the real
+    sparse/hash kernels (the on-TPU validation worklist), never errors."""
+    for backend in ("sparse", "hash"):
+        traced, _, _ = _traced_and_expected(backend=backend)
+        violations, info = check_lint(traced)
+        assert violations == [], (backend, violations)
+        suspects = [d for d in info["diagnostics"]
+                    if d["check"] == "primitive-allowlist"
+                    and d["severity"] == "warning"]
+        assert suspects, backend
+    assert any("sort" in d["where"] or "scatter" in d["where"]
+               for d in suspects)
+
+
 # ---------------------------------------------------------------------------
 # registry validation (import-time spec contracts)
 # ---------------------------------------------------------------------------
 
 
 def _spec_kwargs(**overrides):
-    base = dict(
-        name="_audit_test_backend",
-        executors=dict.fromkeys(backend_registry.ALGORITHMS, lambda: None),
-    )
+    base = {
+        "name": "_audit_test_backend",
+        "executors": dict.fromkeys(backend_registry.ALGORITHMS, lambda: None),
+    }
     base.update(overrides)
     return base
 
@@ -232,6 +438,12 @@ def test_register_rejects_batched_trace_key_without_alg_placeholder():
 def test_register_rejects_block_caps_without_block_size():
     _expect_register_error("registers no\\s+block_size",
                            needs_block_caps=True)
+
+
+def test_register_rejects_traffic_model_without_audit_trace():
+    _expect_register_error(
+        "traffic_model without an\\s+audit_trace",
+        traffic_model=lambda *a: None)
 
 
 def test_register_rejects_missing_executor():

@@ -1,6 +1,8 @@
 """Static backend auditor CLI: abstract-trace every registered backend and
-verify the planner byte models, the DMA double-buffer schedule, and the
-retrace (compile-key) contract — no device execution.
+verify the planner byte models, the DMA double-buffer schedule, copy-event
+flow equality against the declared traffic models, exhaustive DMA
+interleaving safety, Mosaic-lowerability preflight lint, and the retrace
+(compile-key) contract — no device execution.
 
 Registry-driven: the backend roster, the analyses, and the geometry corpus
 all come from ``repro.analysis``; a newly registered backend is audited with
@@ -9,16 +11,21 @@ requires this tool to pass).
 
     PYTHONPATH=src python tools/audit_backends.py \
         [--json bench-artifacts/static_audit.json] \
+        [--lint-json bench-artifacts/mosaic_lint.json] \
         [--backends sparse,hash] [--algorithms chunk1] [--cases fast] \
-        [--no-retrace] [--subprocess-checks]
+        [--analyses traffic,lint] [--no-retrace] [--subprocess-checks]
 
-``--subprocess-checks`` additionally runs the multi-device proof scripts
-(``tools/elastic_check.py``, ``tools/pipeline_check.py``) in subprocesses
-and asserts their OK markers — the fast-CI home of checks otherwise only
-exercised by the nightly ``slow`` test lane.
+``--analyses`` subsets the per-trace passes (vmem, dma, while, traffic,
+interleave, lint, retrace) so the fast lane can smoke a single analysis;
+``--lint-json`` writes every lint diagnostic (all severities, not just the
+audit-failing errors) as a standalone artifact for the on-TPU validation
+worklist. ``--subprocess-checks`` additionally runs the multi-device proof
+scripts (``tools/elastic_check.py``, ``tools/pipeline_check.py``) in
+subprocesses and asserts their OK markers — the fast-CI home of checks
+otherwise only exercised by the nightly ``slow`` test lane.
 
 Exit status 0 iff every analysis (and every requested subprocess check)
-passed; the JSON report is written either way.
+passed; the JSON reports are written either way.
 """
 
 from __future__ import annotations
@@ -76,6 +83,13 @@ def main(argv=None) -> int:
     parser.add_argument("--cases", default=None,
                         help="comma-separated corpus cases, or 'fast' for "
                              "the quick subset (default: full corpus)")
+    parser.add_argument("--analyses", type=_csv, default=None,
+                        help="comma-separated analysis subset (vmem,dma,"
+                             "while,traffic,interleave,lint,retrace); "
+                             "default: all")
+    parser.add_argument("--lint-json", metavar="PATH",
+                        help="write all Mosaic lint diagnostics (every "
+                             "severity) here as a standalone artifact")
     parser.add_argument("--no-retrace", action="store_true",
                         help="skip the retrace-leak pass (halves trace work)")
     parser.add_argument("--subprocess-checks", action="store_true",
@@ -89,7 +103,8 @@ def main(argv=None) -> int:
 
     cases = (list(FAST_CASES) if args.cases == "fast" else _csv(args.cases))
     report = audit_all(backends=args.backends, algorithms=args.algorithms,
-                       cases=cases, retrace=not args.no_retrace)
+                       cases=cases, retrace=not args.no_retrace,
+                       analyses=args.analyses)
 
     ok = report["ok"]
     if args.subprocess_checks:
@@ -102,21 +117,42 @@ def main(argv=None) -> int:
             if not c["ok"]:
                 print(c["tail"])
 
-    dominated = sum(1 for r in report["records"] if r["dominated"])
+    dominated = sum(1 for r in report["records"] if r.get("dominated"))
+    lint_counts = {"error": 0, "warning": 0, "info": 0}
+    for r in report["records"]:
+        for sev, n in r.get("lint", {}).get("counts", {}).items():
+            lint_counts[sev] += n
     print(f"audited {len(report['records'])} (backend, algorithm, case) "
-          f"traces over backends={report['backends']}; "
+          f"traces over backends={report['backends']} "
+          f"analyses={report['analyses']}; "
           f"{dominated} byte-model domination checks passed; "
+          f"lint {lint_counts['error']}E/{lint_counts['warning']}W/"
+          f"{lint_counts['info']}I; "
           f"{len(report['skipped'])} backend(s) skipped "
           f"({', '.join(s['backend'] for s in report['skipped']) or 'none'})")
     for v in report["violations"]:
         print(f"VIOLATION [{v['analysis']}] {v['backend']}/{v['algorithm']}"
               f"/{v['case']}: {v['message']}")
 
+    def _write_json(path, payload, label):
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+        print(f"{label} written to {path}")
+
     if args.json:
-        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
-        with open(args.json, "w") as fh:
-            json.dump(report, fh, indent=2, sort_keys=True)
-        print(f"report written to {args.json}")
+        _write_json(args.json, report, "report")
+    if args.lint_json:
+        lint_report = {
+            "counts": lint_counts,
+            "diagnostics": [
+                dict(d, backend=r["backend"], algorithm=r["algorithm"],
+                     case=r["case"])
+                for r in report["records"]
+                for d in r.get("lint", {}).get("diagnostics", [])
+            ],
+        }
+        _write_json(args.lint_json, lint_report, "lint diagnostics")
 
     print("STATIC_AUDIT_OK" if ok else "STATIC_AUDIT_FAIL")
     return 0 if ok else 1

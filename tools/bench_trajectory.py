@@ -8,9 +8,13 @@ Artifacts hold the full per-row data for a few weeks; the trajectory file
 holds the durable curve.
 
 Stdlib-only and idempotent: an (sha, lane) pair already present is skipped,
-so re-runs (workflow retries, local invocations) never duplicate entries.
+so re-runs (workflow retries, local invocations) never duplicate entries,
+and any duplicates an older tool version managed to log are dropped
+(first occurrence wins) whenever the file is rewritten. ``--sha`` defaults
+to the repo's current HEAD (10-hex short form), so local runs stamp real
+commits instead of placeholders.
 
-    python tools/bench_trajectory.py --sha <sha> [--date ISO] \
+    python tools/bench_trajectory.py [--sha <sha>] [--date ISO] \
         [--out BENCH_trajectory.json] report.json [report2.json ...]
 """
 
@@ -19,9 +23,26 @@ from __future__ import annotations
 import argparse
 import json
 import statistics
+import subprocess
 import sys
 from datetime import datetime, timezone
 from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def current_sha() -> str:
+    """HEAD of the repo this tool lives in, 10-hex short form (matching the
+    CI invocation's ``${GITHUB_SHA::10}``)."""
+    try:
+        proc = subprocess.run(
+            ["git", "rev-parse", "--short=10", "HEAD"], cwd=REPO_ROOT,
+            capture_output=True, text=True, check=True)
+    except (OSError, subprocess.CalledProcessError) as exc:
+        raise SystemExit(
+            f"cannot derive --sha from git ({exc}); pass --sha explicitly"
+        ) from exc
+    return proc.stdout.strip()
 
 
 def summarize(report: dict) -> dict:
@@ -42,6 +63,19 @@ def summarize(report: dict) -> dict:
     return summary
 
 
+def normalize_entries(entries: list) -> list:
+    """Drop duplicate (sha, lane) pairs, first occurrence wins — the repair
+    pass for files an older (dedupe-free) tool version appended to."""
+    seen, out = set(), []
+    for entry in entries:
+        key = (entry.get("sha"), entry.get("lane"))
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(entry)
+    return out
+
+
 def append_entries(out_path: Path, sha: str, date: str,
                    reports: list) -> list:
     """Fold reports into the trajectory file; returns the appended entries."""
@@ -51,6 +85,9 @@ def append_entries(out_path: Path, sha: str, date: str,
         doc = {"entries": []}
     if "entries" not in doc or not isinstance(doc["entries"], list):
         raise SystemExit(f"{out_path}: not a trajectory file (no entries list)")
+    deduped = normalize_entries(doc["entries"])
+    repaired = len(deduped) != len(doc["entries"])
+    doc["entries"] = deduped
     seen = {(e.get("sha"), e.get("lane")) for e in doc["entries"]}
     added = []
     for report in reports:
@@ -64,7 +101,7 @@ def append_entries(out_path: Path, sha: str, date: str,
         doc["entries"].append(entry)
         seen.add((sha, lane))
         added.append(entry)
-    if added:
+    if added or repaired:
         out_path.write_text(json.dumps(doc, indent=2) + "\n")
     return added
 
@@ -73,14 +110,17 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("reports", nargs="+", type=Path,
                     help="bench-lane JSON report files")
-    ap.add_argument("--sha", required=True, help="commit the reports measure")
+    ap.add_argument("--sha", default=None,
+                    help="commit the reports measure (default: this repo's "
+                         "HEAD, 10-hex short form)")
     ap.add_argument("--date", default=None,
                     help="ISO date of the measurement (default: now, UTC)")
     ap.add_argument("--out", type=Path, default=Path("BENCH_trajectory.json"))
     args = ap.parse_args(argv)
     date = args.date or datetime.now(timezone.utc).strftime("%Y-%m-%d")
+    sha = args.sha or current_sha()
     reports = [json.loads(p.read_text()) for p in args.reports]
-    added = append_entries(args.out, args.sha, date, reports)
+    added = append_entries(args.out, sha, date, reports)
     for e in added:
         print(f"appended {e['lane']} @ {e['sha']}")
     if not added:
