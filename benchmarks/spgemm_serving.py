@@ -25,9 +25,18 @@ Every row is measured in two regimes, because they answer different questions:
     microbatch padding is wasted work); the regime keeps the fresh numbers
     honest.
 
+The service runs with its serving optimizations on: buffer donation into the
+bucket-owned jitted cores and tail-width learning (warmup waves repeat until
+a wave compiles nothing, so learned widths are warm before timing starts).
+``run`` asserts every warm row reports ``compiles == 0`` — a warm-regime
+compile means the executable cache leaked, and the regime's numbers would be
+lies.
+
 Output is a single JSON document on stdout (machine-checkable; CI smoke runs
 ``--smoke`` and asserts it parses), with per-row/per-regime service/naive
-microseconds, requests-per-second throughput, and speedup.
+microseconds, requests-per-second throughput, and speedup, plus top-level
+``fresh_speedup``/``warm_speedup`` medians that ``tools/bench_trajectory.py``
+tracks per commit.
 """
 
 from __future__ import annotations
@@ -77,7 +86,7 @@ def _serve_naive(reqs, plan):
 
 
 def run(dim: int, batch_sizes, densities_by_workload, max_batch: int,
-        quantum: int, seed: int = 0) -> dict:
+        quantum: int, seed: int = 0, retrace_budget: int = 16) -> dict:
     half = dim // 2
     plan = ChunkPlan("knl", (0, dim), (0, half, dim), 0.0, 0.0)
     rows = []
@@ -85,10 +94,18 @@ def run(dim: int, batch_sizes, densities_by_workload, max_batch: int,
         for n in batch_sizes:
             rng = np.random.default_rng(seed)
             service = SpGEMMService(plan, quantum=quantum, max_batch=max_batch,
-                                    retrace_budget=16)
-            # cold warmup wave (not reported): first compiles on both sides
+                                    retrace_budget=retrace_budget,
+                                    donate_buffers=True,
+                                    learn_tail_widths=True)
+            # warmup waves (not reported) until one compiles nothing: first
+            # compiles on both sides, plus any tail widths the service learns
+            # from this workload's flush pattern
             warmup = _requests(rng, n, dim, densities)
-            _serve_service(service, warmup)
+            for _ in range(6):
+                compiles0 = service.stats.compiles
+                _serve_service(service, warmup)
+                if service.stats.compiles == compiles0:
+                    break
             _serve_naive(warmup, plan)
             # fresh regime: never-seen structures -> new geometries; the
             # naive path retraces per geometry, the service's buckets don't
@@ -103,6 +120,11 @@ def run(dim: int, batch_sizes, densities_by_workload, max_batch: int,
             warm_service_us, warm_responses = _serve_service(service, timed)
             warm_naive_us, _ = _serve_naive(timed, plan)
             warm_compiles = service.stats.compiles - compiles1
+            # the warm regime's whole claim is "all executables cached": a
+            # compile here means the cache leaked and the timing is a lie
+            assert warm_compiles == 0, (
+                f"warm regime compiled {warm_compiles}x "
+                f"(workload={workload}, n={n})")
             for regime, service_us, naive_us, responses, compiles in (
                     ("fresh", fresh_service_us, fresh_naive_us,
                      fresh_responses, fresh_compiles),
@@ -122,11 +144,20 @@ def run(dim: int, batch_sizes, densities_by_workload, max_batch: int,
                     "mean_latency_us": round(
                         1e6 * sum(r.latency_s for r in responses) / n, 1),
                 })
+    def _median_speedup(regime):
+        v = sorted(r["speedup"] for r in rows if r["regime"] == regime)
+        return round(v[len(v) // 2], 3) if v else 0.0
+
+    # top-level scalars flow verbatim into BENCH_trajectory.json summaries,
+    # so the warm-regime gap is tracked per commit
     return {
         "bench": "spgemm_serving",
         "dim": dim,
         "max_batch": max_batch,
         "quantum": quantum,
+        "retrace_budget": retrace_budget,
+        "fresh_speedup": _median_speedup("fresh"),
+        "warm_speedup": _median_speedup("warm"),
         "rows": rows,
     }
 
@@ -159,6 +190,8 @@ def main():
     ap.add_argument("--batch-sizes", type=int, nargs="+", default=None)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--quantum", type=int, default=32)
+    ap.add_argument("--retrace-budget", type=int, default=16,
+                    help="bound on distinct compiled geometry buckets")
     args = ap.parse_args()
 
     if args.smoke:
@@ -170,7 +203,8 @@ def main():
         batch_sizes = args.batch_sizes or [4, 8, 16]
         workloads = {"uniform": [0.15],
                      "mixed": [0.05, 0.1, 0.2, 0.3]}
-    report = run(dim, batch_sizes, workloads, args.max_batch, args.quantum)
+    report = run(dim, batch_sizes, workloads, args.max_batch, args.quantum,
+                 retrace_budget=args.retrace_budget)
     print(json.dumps(report, indent=2))
 
 

@@ -125,6 +125,16 @@ class BackendSpec:
     # (the scan backend is device-resident: its stats are a replay oracle by
     # design, with no per-chunk pallas copies to reconcile).
     traffic_model: Callable | None = None
+    # executable-cache capability: ``(donate=False) -> dict`` building a
+    # FRESH set of jitted batched cores (same keying the module-level cores
+    # use), passed back into ``run_batched(..., cores=...)``. Module-level
+    # cores live in module-global jit caches — dropping a serving bucket
+    # would never free its executables. A per-bucket core set makes the
+    # bucket the sole owner of its compiled programs, so evicting the bucket
+    # really frees them (and a refault really recompiles). ``donate=True``
+    # additionally donates the staged batch buffers (the C accumulator
+    # stacks) into the cores. None = backend has no batched cores to scope.
+    make_batched_cores: Callable | None = None
 
     @property
     def supports_batched(self) -> bool:

@@ -232,6 +232,51 @@ def _chunk2_scan_batched(Ast: CSR, Bst: CSR, r0s, r1s, C0s: CSR, c_pad: int) -> 
     )(Ast, Bst)
 
 
+_SCAN_CORES_BATCHED = {"knl": _knl_scan_batched,
+                       "chunk1": _chunk1_scan_batched,
+                       "chunk2": _chunk2_scan_batched}
+
+
+def _make_scan_batched_cores(donate: bool = False) -> dict:
+    """A fresh jitted set of the three batched scan cores (same
+    ``TRACE_COUNTS`` keys as the module-level set, so compile accounting is
+    backend-uniform regardless of which set ran). Module-level cores cache
+    compilations in a module-global jit cache for the life of the process;
+    a caller that owns a set from this factory (a serving bucket) is the
+    sole owner of its executables, so dropping the set really frees them.
+
+    ``donate=True`` donates the knl C-accumulator stack — the one scan core
+    whose output aliases its ``C0s`` argument shape-for-shape, letting XLA
+    write results into the staged accumulator's buffer. The chunk1/chunk2
+    ``C0`` is a shared per-strip template the vmap broadcasts, so its shape
+    never matches the stacked output and donation would only warn."""
+    knl_jit = partial(jax.jit, static_argnames=("c_pad",),
+                      donate_argnums=(4,) if donate else ())
+
+    @knl_jit
+    def knl(Ast: CSR, Bst: CSR, r0s, r1s, C0s: CSR, c_pad: int) -> CSR:
+        TRACE_COUNTS["knl_batched"] += 1
+        return jax.vmap(
+            lambda A, Bc, C0: _knl_scan_impl(A, Bc, r0s, r1s, C0, c_pad)
+        )(Ast, Bst, C0s)
+
+    @partial(jax.jit, static_argnames=("c_pad",))
+    def chunk1(Ast: CSR, Bst: CSR, r0s, r1s, C0: CSR, c_pad: int) -> CSR:
+        TRACE_COUNTS["chunk1_batched"] += 1
+        return jax.vmap(
+            lambda As, Bs: _chunk1_scan_impl(As, Bs, r0s, r1s, C0, c_pad)
+        )(Ast, Bst)
+
+    @partial(jax.jit, static_argnames=("c_pad",))
+    def chunk2(Ast: CSR, Bst: CSR, r0s, r1s, C0s: CSR, c_pad: int) -> CSR:
+        TRACE_COUNTS["chunk2_batched"] += 1
+        return jax.vmap(
+            lambda As, Bs: _chunk2_scan_impl(As, Bs, r0s, r1s, C0s, c_pad)
+        )(Ast, Bst)
+
+    return {"knl": knl, "chunk1": chunk1, "chunk2": chunk2}
+
+
 # ---------------------------------------------------------------------------
 # plan-derived copy accounting (the scan cannot mutate Python stats)
 # ---------------------------------------------------------------------------
@@ -448,6 +493,26 @@ _chunk1_pallas_batched = _make_pallas_core("chunk1_pallas_batched", "chunk1",
 _chunk2_pallas_batched = _make_pallas_core("chunk2_pallas_batched", "chunk2",
                                            batched=True, strips=True)
 
+_PALLAS_CORES_BATCHED = {"knl": _knl_pallas_batched,
+                         "chunk1": _chunk1_pallas_batched,
+                         "chunk2": _chunk2_pallas_batched}
+
+
+def _make_pallas_batched_cores(donate: bool = False) -> dict:
+    """Fresh jitted batched Pallas cores (see ``_make_scan_batched_cores``
+    for why a caller-owned set exists). The dense accumulator is allocated
+    inside the jit and the staged CSR operands never alias the dense
+    outputs, so there is nothing donation could usefully alias here."""
+    del donate
+    return {
+        "knl": _make_pallas_core("knl_pallas_batched", "chunk1",
+                                 batched=True, strips=False),
+        "chunk1": _make_pallas_core("chunk1_pallas_batched", "chunk1",
+                                    batched=True, strips=True),
+        "chunk2": _make_pallas_core("chunk2_pallas_batched", "chunk2",
+                                    batched=True, strips=True),
+    }
+
 
 def _pallas_assemble(dense, p_ac: tuple, dtype) -> CSR:
     """Crop per-strip dense results to their true rows, concatenate, and
@@ -516,13 +581,16 @@ def _sparse_c0_stack(batch: int, n_ac: int, strip_rows: int, n_cols: int,
     )
 
 
-def _make_sparse_core(key: str, order: str):
+def _make_sparse_core(key: str, order: str, donate: bool = False):
     """One jitted launch core for the sparse-output kernel; the six variants
     differ only in the streaming order and the trace-counter key (all staging
     is host-side, so batched cores share the same body — the batch rides the
-    kernel's leading grid dimension)."""
+    kernel's leading grid dimension). ``donate=True`` donates the ``C0st``
+    scratch stack, whose (indptr, indices, data) leaves match the kernel
+    outputs shape-for-shape — the serving layer allocates it fresh per
+    flush, so XLA may write results straight into it."""
 
-    @jax.jit
+    @partial(jax.jit, donate_argnums=(2,) if donate else ())
     def core(Ast: CSR, Bst: CSR, C0st: CSR, r0s, r1s):
         TRACE_COUNTS[key] += 1
         return sparse_accum_spgemm_stream(Ast, Bst, C0st, r0s, r1s,
@@ -545,14 +613,16 @@ _SPARSE_CORES_BATCHED = {"knl": _knl_sparse_batched,
                          "chunk2": _chunk2_sparse_batched}
 
 
-def _make_hash_core(key: str, order: str):
+def _make_hash_core(key: str, order: str, donate: bool = False):
     """Launch core for the hash-probe kernel; ``table_size`` (the per-row
     hash-table slot count, from the envelope's ``c_max_row_nnz``) is a static
     jit argument, so two geometries differing only in the densest-output-row
     bound compile separate tables — exactly the retrace the envelope's
-    ``c_max_row_nnz`` field exists to key."""
+    ``c_max_row_nnz`` field exists to key. ``donate`` as in
+    :func:`_make_sparse_core` (the ``C0st`` scratch aliases the outputs)."""
 
-    @partial(jax.jit, static_argnames=("table_size",))
+    @partial(jax.jit, static_argnames=("table_size",),
+             donate_argnums=(2,) if donate else ())
     def core(Ast: CSR, Bst: CSR, C0st: CSR, r0s, r1s, table_size: int):
         TRACE_COUNTS[key] += 1
         return hash_accum_spgemm_stream(Ast, Bst, C0st, r0s, r1s,
@@ -573,6 +643,22 @@ _HASH_CORES = {"knl": _knl_hash, "chunk1": _chunk1_hash,
 _HASH_CORES_BATCHED = {"knl": _knl_hash_batched,
                        "chunk1": _chunk1_hash_batched,
                        "chunk2": _chunk2_hash_batched}
+
+_CSR_ACCUM_ORDERS = {"knl": "chunk1", "chunk1": "chunk1", "chunk2": "chunk2"}
+
+
+def _make_sparse_batched_cores(donate: bool = False) -> dict:
+    """Fresh jitted batched ESC cores (caller-owned executables; see
+    ``_make_scan_batched_cores``)."""
+    return {alg: _make_sparse_core(f"{alg}_sparse_batched", order,
+                                   donate=donate)
+            for alg, order in _CSR_ACCUM_ORDERS.items()}
+
+
+def _make_hash_batched_cores(donate: bool = False) -> dict:
+    """Fresh jitted batched hash-probe cores (caller-owned executables)."""
+    return {alg: _make_hash_core(f"{alg}_hash_batched", order, donate=donate)
+            for alg, order in _CSR_ACCUM_ORDERS.items()}
 
 
 def _sparse_strip_csrs(ip, ix, d, strip_rows: int, n_cols: int,
@@ -687,8 +773,17 @@ _BSR_CORES_BATCHED = {alg: _make_bsr_core(f"{alg}_bsr_batched", batched=True)
                       for alg in ("knl", "chunk1", "chunk2")}
 
 
+def _make_bsr_batched_cores(donate: bool = False) -> dict:
+    """Fresh jitted batched BSR cores (caller-owned executables). Staging is
+    a host loop over (strip, chunk) pairs, so there is no device scratch to
+    donate."""
+    del donate
+    return {alg: _make_bsr_core(f"{alg}_bsr_batched", batched=True)
+            for alg in ("knl", "chunk1", "chunk2")}
+
+
 def _bsr_execute(As, Bs, plan: ChunkPlan, envelope: GeometryEnvelope, *,
-                 batched: bool):
+                 batched: bool, cores: dict | None = None):
     """Shared body of the BSR executors: stage every (strip, chunk) pair as
     BSR at the envelope's block caps, launch the blocked kernel per pair
     (Chunk2 streams strips under a stationary chunk, the other orders stream
@@ -716,7 +811,9 @@ def _bsr_execute(As, Bs, plan: ChunkPlan, envelope: GeometryEnvelope, *,
     Bds = [np.asarray(csr_to_dense(B), np.float32) for B in Bs]
     strips = list(zip(plan.p_ac[:-1], plan.p_ac[1:]))
     chunks = list(zip(plan.p_b[:-1], plan.p_b[1:]))
-    core = (_BSR_CORES_BATCHED if batched else _BSR_CORES)[plan.algorithm]
+    if cores is None:
+        cores = _BSR_CORES_BATCHED if batched else _BSR_CORES
+    core = cores[plan.algorithm]
     accs = np.zeros((width, len(strips), mbs, nbp, bs, bs), np.float32)
     pairs = ([(ia, jb) for jb in range(len(chunks))
               for ia in range(len(strips))]
@@ -808,10 +905,15 @@ def _stage_strips_batched(As, plan: ChunkPlan, envelope: GeometryEnvelope):
 
 
 def _scan_run_batched(As, Bs, plan: ChunkPlan, envelope: GeometryEnvelope, *,
-                      caps_list=None, validate_caps: bool = True):
+                      caps_list=None, validate_caps: bool = True,
+                      cores: dict | None = None):
     """Batched entry of the scan backend: vmapped lax.scan cores, bitwise-
-    identical to the unbatched executors for same-structure batches."""
+    identical to the unbatched executors for same-structure batches.
+    ``cores`` substitutes a caller-owned core set from
+    :func:`_make_scan_batched_cores` for the module-level one."""
     del caps_list, validate_caps  # the ranged merge cannot overflow c_pad
+    if cores is None:
+        cores = _SCAN_CORES_BATCHED
     c_pad = envelope.c_pad
     r0s, r1s = plan.b_ranges()
     r0s, r1s = jnp.asarray(r0s), jnp.asarray(r1s)
@@ -826,7 +928,7 @@ def _scan_run_batched(As, Bs, plan: ChunkPlan, envelope: GeometryEnvelope, *,
         ])
         C0s = _empty_c_stack(len(As), envelope.a_shape[0], n_cols, c_pad,
                              dtype)
-        Cb = _knl_scan_batched(Ast, Bst, r0s, r1s, C0s, c_pad=c_pad)
+        Cb = cores["knl"](Ast, Bst, r0s, r1s, C0s, c_pad=c_pad)
         return csr_unstack(Cb), planned_stats(plan, chunk_nbytes, 0, 0)
     Ast, strip_nbytes = _stage_strips_batched(As, plan, envelope)
     strip_rows = envelope.strip_rows
@@ -834,10 +936,10 @@ def _scan_run_batched(As, Bs, plan: ChunkPlan, envelope: GeometryEnvelope, *,
                           _c_strip_nbytes(strip_rows, c_pad, dtype))
     if plan.algorithm == "chunk1":
         C0 = _empty_c(strip_rows, n_cols, c_pad, dtype)
-        Cb = _chunk1_scan_batched(Ast, Bst, r0s, r1s, C0, c_pad=c_pad)
+        Cb = cores["chunk1"](Ast, Bst, r0s, r1s, C0, c_pad=c_pad)
     else:
         C0s = _empty_c_stack(plan.n_ac, strip_rows, n_cols, c_pad, dtype)
-        Cb = _chunk2_scan_batched(Ast, Bst, r0s, r1s, C0s, c_pad=c_pad)
+        Cb = cores["chunk2"](Ast, Bst, r0s, r1s, C0s, c_pad=c_pad)
     return [
         _assemble(csr_unstack(Ci), plan.p_ac, n_cols)
         for Ci in csr_unstack(Cb)
@@ -845,12 +947,15 @@ def _scan_run_batched(As, Bs, plan: ChunkPlan, envelope: GeometryEnvelope, *,
 
 
 def _pallas_run_batched(As, Bs, plan: ChunkPlan, envelope: GeometryEnvelope, *,
-                        caps_list=None, validate_caps: bool = True):
+                        caps_list=None, validate_caps: bool = True,
+                        cores: dict | None = None):
     """Batched entry of the Pallas backend: the whole microbatch through one
     ``ranged_spgemm_stream`` launch whose leading grid dimension is the
     batch (staging and accumulation in f32 — allclose, not bitwise, against
     the loop oracle)."""
     del caps_list, validate_caps  # dense accumulators cannot overflow
+    if cores is None:
+        cores = _PALLAS_CORES_BATCHED
     r0s = jnp.asarray(plan.b_ranges()[0])
     n_cols = Bs[0].n_cols
     np_dtype = np.dtype(As[0].dtype)
@@ -861,7 +966,7 @@ def _pallas_run_batched(As, Bs, plan: ChunkPlan, envelope: GeometryEnvelope, *,
                        max_row_nnz=envelope.a_max_row_nnz)
             for A in As
         ])
-        dense = _knl_pallas_batched(Ast, Bst, r0s)
+        dense = cores["knl"](Ast, Bst, r0s)
         stats = planned_stats_pallas(plan, *_pallas_stage_nbytes(
             envelope.a_shape[0], envelope.a_shape[1], envelope.chunk_rows,
             n_cols))
@@ -869,9 +974,7 @@ def _pallas_run_batched(As, Bs, plan: ChunkPlan, envelope: GeometryEnvelope, *,
             csr_from_dense(np.asarray(d).astype(np_dtype)) for d in dense
         ], stats
     Ast, _ = _stage_strips_batched(As, plan, envelope)
-    core = (_chunk1_pallas_batched if plan.algorithm == "chunk1"
-            else _chunk2_pallas_batched)
-    dense = core(Ast, Bst, r0s)
+    dense = cores[plan.algorithm](Ast, Bst, r0s)
     stats = planned_stats_pallas(plan, *_pallas_stage_nbytes(
         envelope.strip_rows, envelope.a_shape[1], envelope.chunk_rows,
         n_cols))
@@ -880,7 +983,8 @@ def _pallas_run_batched(As, Bs, plan: ChunkPlan, envelope: GeometryEnvelope, *,
 
 def _csr_accum_run_batched(As, Bs, plan: ChunkPlan,
                            envelope: GeometryEnvelope, kind: str, *,
-                           caps_list=None, validate_caps: bool = True):
+                           caps_list=None, validate_caps: bool = True,
+                           cores: dict | None = None):
     """Shared batched entry of the CSR-scratch accumulators (ESC and hash):
     one batch-on-the-grid kernel launch into fixed-capacity CSR scratch
     sized by the envelope.
@@ -924,12 +1028,13 @@ def _csr_accum_run_batched(As, Bs, plan: ChunkPlan,
     strip_rows = envelope.strip_rows
     C0 = _sparse_c0_stack(len(As), plan.n_ac, strip_rows, n_cols, c_pad,
                           dtype)
+    if cores is None:
+        cores = _HASH_CORES_BATCHED if kind == "hash" else _SPARSE_CORES_BATCHED
     if kind == "hash":
-        ip, ix, d = _HASH_CORES_BATCHED[plan.algorithm](
-            Ast, Bst, C0, r0s, r1s, table_size=table)
+        ip, ix, d = cores[plan.algorithm](Ast, Bst, C0, r0s, r1s,
+                                          table_size=table)
     else:
-        ip, ix, d = _SPARSE_CORES_BATCHED[plan.algorithm](
-            Ast, Bst, C0, r0s, r1s)
+        ip, ix, d = cores[plan.algorithm](Ast, Bst, C0, r0s, r1s)
     stats = planned_stats_pallas(
         plan, chunk_nbytes, strip_nbytes,
         _c_strip_nbytes(strip_rows, c_pad, dtype))
@@ -943,21 +1048,21 @@ def _csr_accum_run_batched(As, Bs, plan: ChunkPlan,
 
 
 def _sparse_run_batched(As, Bs, plan, envelope, *, caps_list=None,
-                        validate_caps=True):
+                        validate_caps=True, cores=None):
     return _csr_accum_run_batched(As, Bs, plan, envelope, "sparse",
                                   caps_list=caps_list,
-                                  validate_caps=validate_caps)
+                                  validate_caps=validate_caps, cores=cores)
 
 
 def _hash_run_batched(As, Bs, plan, envelope, *, caps_list=None,
-                      validate_caps=True):
+                      validate_caps=True, cores=None):
     return _csr_accum_run_batched(As, Bs, plan, envelope, "hash",
                                   caps_list=caps_list,
-                                  validate_caps=validate_caps)
+                                  validate_caps=validate_caps, cores=cores)
 
 
 def _bsr_run_batched(As, Bs, plan, envelope, *, caps_list=None,
-                     validate_caps=True):
+                     validate_caps=True, cores=None):
     """Batched entry of the BSR backend. Cap overflow is caught by the
     per-pair block symbolic itself (``bsr_spgemm_symbolic`` raises when the
     envelope's floors do not dominate an instance), so there is no separate
@@ -968,12 +1073,13 @@ def _bsr_run_batched(As, Bs, plan, envelope, *, caps_list=None,
             "backend 'bsr' needs a block-capped envelope; rebuild it with "
             "batch_envelope(..., block_size=...)"
         )
-    return _bsr_execute(As, Bs, plan, envelope, batched=True)
+    return _bsr_execute(As, Bs, plan, envelope, batched=True, cores=cores)
 
 
 def chunked_spgemm_batched(As, Bs, plan: ChunkPlan, c_pad: int | None = None,
                            envelope: GeometryEnvelope | None = None,
-                           backend: str = "scan", validate_caps: bool = True):
+                           backend: str = "scan", validate_caps: bool = True,
+                           cores: dict | None = None):
     """Run a backend's batched entry over stacked problem instances sharing
     one plan.
 
@@ -995,6 +1101,10 @@ def chunked_spgemm_batched(As, Bs, plan: ChunkPlan, c_pad: int | None = None,
     block caps for them. ``validate_caps`` is forwarded to the spec (the
     CSR-scratch accumulators use it to check realized output structure
     against the envelope capacities; see ``_csr_accum_run_batched``).
+    ``cores`` substitutes a caller-owned jitted core set (from the spec's
+    ``make_batched_cores`` factory) for the module-level cores — the
+    serving layer's bounded executable cache passes per-bucket sets so that
+    evicting a bucket really frees its compiled programs.
 
     Returns ``(list_of_C, stats)`` where ``stats`` is the per-instance modeled
     copy accounting at the *envelope-padded* staged sizes (identical across the
@@ -1043,7 +1153,7 @@ def chunked_spgemm_batched(As, Bs, plan: ChunkPlan, c_pad: int | None = None,
             "it with batch_envelope(..., block_size=...)"
         )
     return spec.run_batched(As, Bs, plan, envelope, caps_list=caps_list,
-                            validate_caps=validate_caps)
+                            validate_caps=validate_caps, cores=cores)
 
 
 # ---------------------------------------------------------------------------
@@ -1301,6 +1411,7 @@ def _register_all() -> None:
         trace_key="{alg}",
         trace_key_batched="{alg}_batched",
         audit_trace=_audit_scan,
+        make_batched_cores=_make_scan_batched_cores,
     ))
     register(Spec(
         name="pallas",
@@ -1313,6 +1424,7 @@ def _register_all() -> None:
         is_accumulator=True,
         audit_trace=_audit_pallas,
         traffic_model=_traffic_pallas,
+        make_batched_cores=_make_pallas_batched_cores,
     ))
     register(Spec(
         name="sparse",
@@ -1325,6 +1437,7 @@ def _register_all() -> None:
         is_accumulator=True,
         audit_trace=_make_audit_csr_accum("sparse"),
         traffic_model=_traffic_csr_accum,
+        make_batched_cores=_make_sparse_batched_cores,
     ))
     register(Spec(
         name="hash",
@@ -1337,6 +1450,7 @@ def _register_all() -> None:
         is_accumulator=True,
         audit_trace=_make_audit_csr_accum("hash"),
         traffic_model=_traffic_csr_accum,
+        make_batched_cores=_make_hash_batched_cores,
     ))
     register(Spec(
         name="bsr",
@@ -1351,6 +1465,7 @@ def _register_all() -> None:
         block_size=_BSR_DEFAULT_BLOCK,
         audit_trace=_audit_bsr,
         traffic_model=_traffic_bsr,
+        make_batched_cores=_make_bsr_batched_cores,
     ))
 
 

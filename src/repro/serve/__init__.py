@@ -1,10 +1,11 @@
 from repro.serve.kv_planner import KVPlan, plan_kv_cache, kv_cache_bytes
 from repro.serve.spgemm_service import (
-    SpGEMMService, SpGEMMRequest, SpGEMMResponse, ServiceStats, plan_key,
+    AdmissionError, SpGEMMFuture, SpGEMMService, SpGEMMRequest,
+    SpGEMMResponse, ServiceStats, plan_key,
 )
 
 __all__ = [
     "KVPlan", "plan_kv_cache", "kv_cache_bytes",
-    "SpGEMMService", "SpGEMMRequest", "SpGEMMResponse", "ServiceStats",
-    "plan_key",
+    "AdmissionError", "SpGEMMFuture", "SpGEMMService", "SpGEMMRequest",
+    "SpGEMMResponse", "ServiceStats", "plan_key",
 ]

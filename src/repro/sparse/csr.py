@@ -316,6 +316,22 @@ class GeometryEnvelope:
             bsr_caps=self.bsr_caps,
         )
 
+    def staged_nbytes(self) -> int:
+        """Bytes one instance's staged buffers occupy when padded to this
+        envelope: the whole-A operand, one A strip, one B chunk, and the C
+        output capacity, each as (indices + data) entries plus an int32
+        indptr. A comparison measure for "how much padding does serving this
+        request out of that envelope cost" — larger envelopes always score
+        strictly higher, which is all the tightest-dominator argmin needs."""
+        itemsize = int(np.dtype(self.dtype).itemsize)
+        entry = 4 + itemsize          # int32 index + one value per nnz slot
+        return int(
+            self.a_nnz_cap * entry
+            + self.strip_nnz_cap * entry + (self.strip_rows + 1) * 4
+            + self.chunk_nnz_cap * entry + (self.chunk_rows + 1) * 4
+            + self.c_pad * entry
+        )
+
     @classmethod
     def batch(cls, envelopes) -> "GeometryEnvelope":
         """Union over per-instance envelopes (the batch's shared geometry)."""

@@ -311,3 +311,39 @@ def test_batched_pallas_heterogeneous_structures(algorithm):
     assert TRACE_COUNTS[key] == mid
     with pytest.raises(ValueError, match="backend"):
         chunked_spgemm_batched(As, Bs, plan, backend="vmapped")
+
+
+@pytest.mark.parametrize("backend", ["scan", "sparse", "hash"])
+def test_make_batched_cores_isolated_caches(backend):
+    """``BackendSpec.make_batched_cores`` builds a *fresh* jitted core set:
+    each set owns its compile cache (two sets retrace independently, repeat
+    calls within a set don't), results match the default-core path, and
+    ``donate=True`` cores stay oracle-correct (the staged accumulator stacks
+    they consume are freshly allocated per call)."""
+    from repro.core import backend_registry
+
+    spec = backend_registry.get(backend)
+    rng = np.random.default_rng(21)
+    As = [random_csr(rng, 16, 16, d) for d in (0.2, 0.3)]
+    Bs = [random_csr(rng, 16, 16, d) for d in (0.2, 0.3)]
+    plan = ChunkPlan("knl", (0, 16), (0, 8, 16), 0.0, 0.0)
+    counter = spec.trace_key_batched.format(alg="knl")
+
+    def run(cores):
+        Cs, _ = chunked_spgemm_batched(As, Bs, plan, backend=backend,
+                                       cores=cores)
+        for A, B, C in zip(As, Bs, Cs):
+            assert_close(csr_to_dense(C), spgemm_dense_oracle(A, B), atol=1e-3)
+
+    cores_a = spec.make_batched_cores()
+    cores_d = spec.make_batched_cores(donate=True)
+    assert set(cores_a) == {"knl", "chunk1", "chunk2"}
+    before = TRACE_COUNTS[counter]
+    run(cores_a)
+    assert TRACE_COUNTS[counter] - before == 1   # set A compiles once
+    run(cores_a)
+    assert TRACE_COUNTS[counter] - before == 1   # ... and stays warm
+    run(cores_d)
+    assert TRACE_COUNTS[counter] - before == 2   # fresh set: its own cache
+    run(cores_d)
+    assert TRACE_COUNTS[counter] - before == 2

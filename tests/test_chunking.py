@@ -6,7 +6,8 @@ from conftest import given, settings, st
 
 from repro.core.kkmem import spgemm_symbolic_host, spgemm_dense_oracle
 from repro.core.planner import (
-    plan_chunks, plan_knl, binary_search_partition, partition_cost, row_bytes_csr,
+    ChunkPlan, plan_chunks, plan_knl, binary_search_partition, partition_cost,
+    row_bytes_csr,
 )
 from repro.core.chunking import chunked_spgemm, chunk_knl, chunk_gpu1, chunk_gpu2
 from repro.core.memory_model import P100
@@ -268,3 +269,22 @@ def test_planned_stats_sparse_lifts_dense_slab_bound(rng):
             == sparse.fast_bytes_needed)
     assert (planned_stats_dense_slab(plan, wide).fast_bytes_needed
             > dense.fast_bytes_needed)
+
+
+def test_replan_for_latency_coarsens_streamed_partition():
+    """Latency feedback: drop every other interior boundary of p_b — chunk
+    count halves (rounding up), row coverage is preserved, and the modeled
+    fast-memory footprint grows accordingly."""
+    from repro.core.planner import replan_for_latency
+
+    plan = ChunkPlan("chunk1", (0, 8), (0, 2, 4, 6, 8), 10.0, 100.0)
+    p1 = replan_for_latency(plan)
+    assert p1.p_b == (0, 4, 8) and p1.n_b == 2
+    assert p1.algorithm == plan.algorithm and p1.p_ac == plan.p_ac
+    assert p1.fast_bytes_needed > plan.fast_bytes_needed
+    p2 = replan_for_latency(p1)
+    assert p2.p_b == (0, 8) and p2.n_b == 1
+    assert replan_for_latency(p2) is p2          # single chunk: fixed point
+    # odd chunk counts round up: 5 -> 3
+    odd = ChunkPlan("knl", (0, 4), (0, 1, 2, 3, 4, 5), 0.0, 1.0)
+    assert replan_for_latency(odd).p_b == (0, 2, 4, 5)

@@ -153,3 +153,18 @@ def test_csr_pad_to_grows_only(rng):
     with pytest.raises(ValueError):
         # lowering the row-nnz bound would truncate SpGEMM expansion buffers
         csr_pad_to(m, max_row_nnz=m.max_row_nnz - 1)
+
+
+def test_envelope_staged_nbytes_monotone():
+    """staged_nbytes orders envelopes by padding cost: strictly dominating
+    envelopes always score strictly higher (the tightest-dominator argmin in
+    the serving layer relies on it), and union never shrinks the score."""
+    e1 = _env()
+    e2 = _env(chunk_nnz_cap=9, c_pad=128, b_max_row_nnz=2)
+    u = e1.union(e2)
+    assert u.staged_nbytes() >= max(e1.staged_nbytes(), e2.staged_nbytes())
+    for grown in (_env(a_nnz_cap=20), _env(strip_nnz_cap=16),
+                  _env(chunk_nnz_cap=11), _env(c_pad=100)):
+        assert grown.staged_nbytes() > e1.staged_nbytes()
+    # wider dtypes pay for every value slot
+    assert _env(dtype="float64").staged_nbytes() > e1.staged_nbytes()

@@ -193,3 +193,288 @@ def test_service_large_mixed_sweep(algorithm):
     assert svc.stats.compiles <= n_widths * (svc.stats.buckets_created
                                              + svc.stats.budget_merges)
     assert svc.stats.served == 30
+
+
+# ---------------------------------------------------------------------------
+# continuous-batching serving: async API, SLO, admission, eviction
+# ---------------------------------------------------------------------------
+
+
+def _banded_csr(dim, k, val=1.0):
+    """Deterministic CSR with exactly ``k`` nonzeros (cols 0..k-1) per row.
+
+    Pairs built as ``(banded(ka), banded(kb))`` with ``ka`` increasing and
+    ``kb`` decreasing give pairwise *incomparable* instance envelopes (the A
+    caps grow while the B/strip/output caps shrink), so each pair lands in
+    its own bucket instead of a dominated hit — the deterministic scaffolding
+    the eviction/priority/dominator tests below stand on.
+    """
+    from repro.sparse.csr import csr_from_dense
+
+    d = np.zeros((dim, dim), np.float32)
+    d[:, :k] = val
+    return csr_from_dense(d)
+
+
+def test_service_compile_exec_split():
+    """compile_s carries the cold-trace cost; exec_s never does. The second
+    flush of the same (bucket, width) reports compile_s == 0.0 exactly."""
+    rng = np.random.default_rng(5)
+    dim = 16
+    plan = ChunkPlan("knl", (0, dim), (0, dim // 2, dim), 0.0, 0.0)
+    svc = SpGEMMService(plan, quantum=32, max_batch=2, retrace_budget=4)
+    A, B = random_csr(rng, dim, dim, 0.3), random_csr(rng, dim, dim, 0.3)
+    svc.submit(A, B)
+    svc.submit(A, B)
+    out = svc.flush()
+    assert all(r.compile_s > 0.0 for r in out)       # cold: warmup paid here
+    assert all(r.exec_s > 0.0 for r in out)
+    assert svc.stats.compile_s > 0.0
+    # warm wave: identical geometry and width — no trace, no compile time
+    before = TRACE_COUNTS["knl_batched"]
+    svc.submit(A, B)
+    svc.submit(A, B)
+    out2 = svc.flush()
+    assert TRACE_COUNTS["knl_batched"] == before
+    assert all(r.compile_s == 0.0 for r in out2)
+    assert all(r.exec_s > 0.0 for r in out2)
+
+
+def test_service_tightest_dominator_minimizes_padding():
+    """A request dominated by several buckets lands in the one with minimal
+    staged bytes (least padding waste), and the waste is accounted."""
+    dim = 12
+    plan = ChunkPlan("knl", (0, dim), (0, dim // 2, dim), 0.0, 0.0)
+    svc = SpGEMMService(plan, quantum=1, max_batch=1, retrace_budget=8)
+    # two incomparable buckets: A-heavy (ka=4, kb=1) and B-heavy (ka=1, kb=4)
+    svc.submit(_banded_csr(dim, 4, 2.0), _banded_csr(dim, 1, 3.0))
+    svc.submit(_banded_csr(dim, 1, 2.0), _banded_csr(dim, 4, 3.0))
+    assert svc.n_buckets == 2 and svc.stats.dominated_hits == 0
+    envs = [b[0] for b in svc.bucket_summaries()]
+    tight = min(envs, key=lambda e: e.staged_nbytes())
+    # (ka=1, kb=1) is dominated by both; must resolve into the tighter one
+    A_s, B_s = _banded_csr(dim, 1, 5.0), _banded_csr(dim, 1, 7.0)
+    svc.submit(A_s, B_s)
+    assert svc.n_buckets == 2 and svc.stats.dominated_hits == 1
+    assert svc.stats.dominated_padding_bytes > 0
+    out = svc.drain()
+    assert out[-1].bucket_key[0] == tight
+    for (A, B), resp in zip(
+            [(_banded_csr(dim, 4, 2.0), _banded_csr(dim, 1, 3.0)),
+             (_banded_csr(dim, 1, 2.0), _banded_csr(dim, 4, 3.0)),
+             (A_s, B_s)], out):
+        assert_close(csr_to_dense(resp.C), spgemm_dense_oracle(A, B), atol=1e-3)
+
+
+def test_service_sentinel_tail_padding():
+    """Flush tails pad with envelope-shaped *empty* sentinels, not a replay
+    of a live request; padded outputs never reach responses."""
+    rng = np.random.default_rng(11)
+    dim = 16
+    plan = ChunkPlan("knl", (0, dim), (0, dim // 2, dim), 0.0, 0.0)
+    svc = SpGEMMService(plan, quantum=32, max_batch=4, retrace_budget=4)
+    reqs = [(random_csr(rng, dim, dim, 0.3), random_csr(rng, dim, dim, 0.3))
+            for _ in range(3)]
+    ids = [svc.submit(A, B) for A, B in reqs]
+    out = svc.flush()
+    assert [r.req_id for r in out] == ids          # only real requests answered
+    assert all(r.batch_size == 3 and r.padded_batch == 4 for r in out)
+    assert svc.stats.padded_requests == 1
+    for (A, B), resp in zip(reqs, out):
+        assert_close(csr_to_dense(resp.C), spgemm_dense_oracle(A, B), atol=1e-3)
+    (bucket,) = svc._buckets.values()
+    A0, B0 = bucket.sentinel                       # cached by the padded flush
+    assert int(A0.indptr[-1]) == 0 and int(B0.indptr[-1]) == 0
+    assert A0.shape == bucket.envelope.a_shape
+    assert B0.shape == bucket.envelope.b_shape
+
+
+def test_service_bounded_eviction_and_refault():
+    """With eviction enabled, the retrace budget is a hard working-set bound:
+    more distinct geometries than budget end with n_buckets <= budget, idle
+    buckets evicted LRU-first, and an evicted geometry that returns refaults
+    (recompiles exactly once)."""
+    dim = 12
+    plan = ChunkPlan("knl", (0, dim), (0, dim // 2, dim), 0.0, 0.0)
+    svc = SpGEMMService(plan, quantum=1, max_batch=1, retrace_budget=3,
+                        eviction_hysteresis=0)
+    pairs = [(_banded_csr(dim, i + 1, float(i + 1)),
+              _banded_csr(dim, 6 - i, 1.0)) for i in range(6)]
+    before = TRACE_COUNTS["knl_batched"]
+    for A, B in pairs:
+        svc.submit(A, B)
+        (resp,) = svc.drain()
+        assert_close(csr_to_dense(resp.C), spgemm_dense_oracle(A, B), atol=1e-3)
+        assert svc.n_buckets <= 3
+    assert svc.n_buckets == 3
+    assert svc.stats.buckets_created == 6
+    assert svc.stats.evictions == 3 and svc.stats.refaults == 0
+    assert svc.stats.budget_merges == 0 and svc.stats.budget_overflows == 0
+    # one compile per bucket created (single ladder width), and the eviction
+    # bound holds with equality: compiles == budget + evictions
+    new = TRACE_COUNTS["knl_batched"] - before
+    assert new == svc.stats.compiles == svc.stats.buckets_created
+    assert svc.stats.compiles <= svc.retrace_budget + svc.stats.evictions
+    # geometry 0 was evicted: its return is a refault (recompiles once) ...
+    A, B = pairs[0]
+    svc.submit(A, B)
+    (resp,) = svc.drain()
+    assert_close(csr_to_dense(resp.C), spgemm_dense_oracle(A, B), atol=1e-3)
+    assert svc.stats.refaults == 1 and svc.stats.evictions == 4
+    assert TRACE_COUNTS["knl_batched"] - before == 7
+    # ... and is then resident: an immediate repeat is a free exact hit
+    svc.submit(A, B)
+    svc.drain()
+    assert TRACE_COUNTS["knl_batched"] - before == 7
+    assert svc.stats.buckets_created == 7 and svc.n_buckets == 3
+
+
+def test_service_poll_slo_and_priority():
+    """poll() only flushes due buckets (full microbatch or SLO breach) and
+    walks them oldest-deadline-first, not dict insertion order."""
+    import time as _time
+
+    dim = 12
+    plan = ChunkPlan("knl", (0, dim), (0, dim // 2, dim), 0.0, 0.0)
+    # no SLO: a partial queue is not due
+    svc = SpGEMMService(plan, quantum=1, max_batch=2, retrace_budget=8)
+    a_pair = (_banded_csr(dim, 4, 2.0), _banded_csr(dim, 1, 3.0))
+    b_pair = (_banded_csr(dim, 1, 2.0), _banded_csr(dim, 4, 3.0))
+    svc.submit(*a_pair)
+    assert svc.poll() == [] and svc.pending == 1
+    svc.submit(*a_pair)                         # queue reaches max_batch
+    out = svc.poll()
+    assert [r.req_id for r in out] == [0, 1] and svc.pending == 0
+    assert svc.stats.slo_flushes == 0
+    # SLO service: bucket A is *older in the dict*, bucket B has the *older
+    # queued request* — poll must execute B first
+    svc2 = SpGEMMService(plan, quantum=1, max_batch=4, retrace_budget=8,
+                         slo_s=0.0)
+    svc2.submit(*a_pair)
+    svc2.submit(*b_pair)
+    svc2.drain()                                # both buckets exist, idle
+    svc2.submit(*b_pair)                        # req 2: oldest deadline
+    svc2.submit(*a_pair)                        # req 3: newer, earlier bucket
+    _time.sleep(0.01)
+    out = svc2.poll()
+    assert [r.req_id for r in out] == [2, 3]    # execution order, B first
+    assert svc2.stats.slo_flushes == 2
+
+
+def test_service_admission_shed_and_flush():
+    from repro.serve.spgemm_service import AdmissionError
+
+    rng = np.random.default_rng(13)
+    dim = 16
+    plan = ChunkPlan("knl", (0, dim), (0, dim // 2, dim), 0.0, 0.0)
+    A, B = random_csr(rng, dim, dim, 0.3), random_csr(rng, dim, dim, 0.3)
+    svc = SpGEMMService(plan, max_batch=4, max_pending=2, admission="shed")
+    svc.submit(A, B)
+    svc.submit(A, B)
+    with pytest.raises(AdmissionError):
+        svc.submit(A, B)
+    assert svc.stats.shed == 1 and svc.pending == 2
+    assert len(svc.drain()) == 2
+    # admission="flush" makes room by draining the oldest-deadline bucket;
+    # its responses surface through the futures and the next poll/drain
+    svc2 = SpGEMMService(plan, max_batch=4, max_pending=2, admission="flush")
+    f0 = svc2.submit(A, B)
+    f1 = svc2.submit(A, B)
+    f2 = svc2.submit(A, B)
+    assert svc2.stats.admission_flushes == 1 and svc2.stats.shed == 0
+    assert f0.done() and f1.done() and not f2.done()
+    assert svc2.pending == 1
+    out = svc2.poll()                          # carries the forced responses
+    assert [r.req_id for r in out] == [0, 1]
+    resp2 = f2.result()                        # drains the remaining request
+    assert resp2.req_id == 2 and f2.done()
+    assert_close(csr_to_dense(resp2.C), spgemm_dense_oracle(A, B), atol=1e-3)
+
+
+def test_service_future_api():
+    """submit() returns a future that *is* the request id (int subclass)."""
+    rng = np.random.default_rng(17)
+    dim = 16
+    plan = ChunkPlan("knl", (0, dim), (0, dim // 2, dim), 0.0, 0.0)
+    svc = SpGEMMService(plan, max_batch=2)
+    A, B = random_csr(rng, dim, dim, 0.3), random_csr(rng, dim, dim, 0.3)
+    fut = svc.submit(A, B)
+    assert fut == 0 and isinstance(fut, int) and not fut.done()
+    resp = fut.result()                        # forces the drain
+    assert fut.done() and resp.req_id == fut
+    assert fut.result() is resp                # idempotent once resolved
+    assert_close(csr_to_dense(resp.C), spgemm_dense_oracle(A, B), atol=1e-3)
+
+
+def test_service_learned_tail_width():
+    """A recurring flush-tail size earns an exact ladder width: one compile,
+    zero padding for that tail thereafter."""
+    rng = np.random.default_rng(19)
+    dim = 16
+    plan = ChunkPlan("knl", (0, dim), (0, dim // 2, dim), 0.0, 0.0)
+    svc = SpGEMMService(plan, quantum=32, max_batch=4, retrace_budget=4,
+                        learn_tail_widths=True, tail_learn_threshold=2)
+    assert svc.widths == [1, 2, 4]
+    A, B = random_csr(rng, dim, dim, 0.3), random_csr(rng, dim, dim, 0.3)
+    for _ in range(3):
+        svc.submit(A, B)
+    out = svc.flush()
+    assert all(r.padded_batch == 4 for r in out)   # first time: pad to 4
+    assert svc.stats.padded_requests == 1
+    for _ in range(3):
+        svc.submit(A, B)
+    out = svc.flush()                              # threshold hit: exact width
+    assert svc.widths == [1, 2, 3, 4] and svc.stats.learned_widths == 1
+    assert all(r.padded_batch == 3 for r in out)
+    assert svc.stats.padded_requests == 1          # no new padding
+    before = TRACE_COUNTS["knl_batched"]
+    for _ in range(3):
+        svc.submit(A, B)
+    svc.flush()                                    # learned width is warm now
+    assert TRACE_COUNTS["knl_batched"] == before
+
+
+def test_service_adaptive_quantum():
+    """Churny families coarsen their envelope quantum; stable families
+    tighten it back."""
+    dim = 16
+    plan = ChunkPlan("knl", (0, dim), (0, dim // 2, dim), 0.0, 0.0)
+    svc = SpGEMMService(plan, quantum=8, max_batch=1, retrace_budget=32,
+                        adapt_quantum=True)
+    # 16 pairwise-incomparable geometries: every submit is a bucket miss
+    for i in range(16):
+        svc.submit(_banded_csr(dim, i + 1, 1.0), _banded_csr(dim, 16 - i, 1.0))
+    (q,) = svc._family_quanta.values()
+    assert q == 16                                 # churny: coarsened 8 -> 16
+    # 16 repeats of one geometry: at most the first is a miss, the rest hit
+    A, B = _banded_csr(dim, 1, 1.0), _banded_csr(dim, 16, 1.0)
+    for _ in range(16):
+        svc.submit(A, B)
+    (q,) = svc._family_quanta.values()
+    assert q == 8                                  # stable: tightened back
+
+
+def test_service_replan_lagging_buckets():
+    """Observed latency feeds back into planning: a bucket over the SLO gets
+    a coarser streamed-B partition, queued work is re-routed, and future
+    submits pick up the override."""
+    rng = np.random.default_rng(23)
+    dim = 18
+    plan = ChunkPlan("knl", (0, dim), (0, 6, 12, dim), 0.0, 0.0)
+    svc = SpGEMMService(plan, quantum=32, max_batch=2, retrace_budget=8)
+    A, B = random_csr(rng, dim, dim, 0.3), random_csr(rng, dim, dim, 0.3)
+    with pytest.raises(ValueError):
+        svc.replan_lagging_buckets()               # no SLO anywhere
+    svc.submit(A, B)
+    svc.drain()                                    # sets the bucket's ewma
+    svc.submit(A, B)                               # queued under the old plan
+    assert svc.replan_lagging_buckets(slo_s=0.0) == 1
+    assert svc.stats.replans == 1 and svc.pending == 1
+    out = svc.drain()                              # re-routed request runs
+    assert out[0].bucket_key[1] == ("knl", (0, dim), (0, 12, dim))
+    assert_close(csr_to_dense(out[0].C), spgemm_dense_oracle(A, B), atol=1e-3)
+    # the override sticks for future planning of the same plan key
+    A2, B2 = random_csr(rng, dim, dim, 0.3), random_csr(rng, dim, dim, 0.3)
+    svc.submit(A2, B2)
+    out = svc.drain()
+    assert out[0].bucket_key[1] == ("knl", (0, dim), (0, 12, dim))
