@@ -18,7 +18,7 @@ SUITES = {
     "table2": "benchmarks.delta_sweep",           # delta sweep
     "table3": "benchmarks.data_placement",        # selective placement (+Figs 9/10)
     "fig12_13": "benchmarks.chunking_bench",      # chunked algorithms (+Alg 1)
-    "fig11": "benchmarks.triangle_counting",      # triangle counting (+Table 4)
+    "triangle_counting": "benchmarks.triangle_counting",  # Fig 11 + Table 4
     "chunkability": "benchmarks.chunkability",    # Bender properties
     "kernels": "benchmarks.kernels_bench",        # Pallas kernel microbenches
     "roofline": "benchmarks.roofline_table",      # §Roofline aggregation

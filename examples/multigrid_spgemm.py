@@ -27,6 +27,7 @@ import numpy as np
 from repro.core import backend_registry
 from repro.core.chunking import chunked_spgemm
 from repro.core.kkmem import spgemm, spgemm_symbolic_host, spgemm_dense_oracle
+from repro.core.pipeline_spgemm import pipeline_spgemm
 from repro.core.locality import analyze, miss_table
 from repro.core.memory_model import KNL, P100
 from repro.core.placement import (
@@ -73,6 +74,24 @@ def study(problem: str, n: int, backends=("scan",)):
                 print(f"   chunked@{frac:.2f}/{backend:6s}: {plan.algorithm} "
                       f"[{plan.n_ac}x{plan.n_b}] correct={ok2} "
                       f"staged={stats.copy_bytes/1e3:.0f}KB")
+    # the fused two-hop Galerkin product C = R x (A x P) through the pipeline
+    # executor: the intermediate T = A x P stays resident in fast memory when
+    # the planner's budget allows, spills to slow otherwise
+    rap = np.asarray(csr_to_dense(R)) @ np.asarray(spgemm_dense_oracle(A, P))
+    total = float(row_bytes_csr(A).sum() + row_bytes_csr(P).sum()
+                  + row_bytes_csr(R).sum())
+    print("\n-- RAP: fused two-hop pipeline (T = AxP resident when it fits)")
+    for frac in (1.0, 0.25):
+        for backend in ("sparse", "hash"):
+            C3, pstats = pipeline_spgemm(A, P, R, system=P100,
+                                         fast_limit_bytes=total * frac,
+                                         backend=backend)
+            ok3 = np.allclose(np.asarray(csr_to_dense(C3)), rap, atol=1e-4)
+            pp = pstats.plan
+            print(f"   pipeline@{frac:.2f}/{backend:6s}: "
+                  f"{pp.plan1.algorithm}+{pp.plan2.algorithm} "
+                  f"resident={pp.t_resident} correct={ok3} "
+                  f"copied={pstats.copy_bytes/1e3:.0f}KB")
 
 
 def main(argv=None):

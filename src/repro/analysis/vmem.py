@@ -18,11 +18,12 @@ For one backend core traced at one (plan, envelope) the auditor sums, per
   whose byte model carries a nonzero ``workspace`` term (the ESC expand
   buffer, the hash tables) — for dense-slab kernels the MXU feeds from the
   staged blocks and the model deliberately prices no workspace. Functional
-  *ref-update images* are excluded: a scatter into the CSR accumulator
-  traces as a fresh ``(c_pad + 1,)`` array (the column plus the overflow
-  sentinel slot) that the compiler in-places into the already-priced ref,
-  so intermediates no larger than one output/scratch column of their dtype
-  (plus one element) are not workspace.
+  *ref-update and ref-read images* are excluded: a scatter into the CSR
+  accumulator traces as a fresh ``(c_pad + 1,)`` array (the column plus the
+  overflow sentinel slot) that the compiler in-places into the
+  already-priced ref, and loading a blocked input's field traces as a fresh
+  array the size of that ref — so intermediates no larger than one
+  already-priced ref of their dtype (plus one element) are not workspace.
 
 The audit asserts the spec's registered ``byte_model`` **dominates** the
 traced footprint: ``model.fast_bytes_needed >= traced_total``. An
@@ -86,10 +87,13 @@ def _alias_credit(in_avals, out_avals) -> float:
 
 
 def _update_image_floors(ref_avals) -> dict:
-    """Per dtype: bytes of the largest output/scratch ref plus one element —
+    """Per dtype: bytes of the largest already-priced ref plus one element —
     the size of a functional update image of that ref (the accumulator
-    scatter's ``(c_pad + 1,)`` buffer). Intermediates at or below the floor
-    are in-placed ref updates, not workspace."""
+    scatter's ``(c_pad + 1,)`` buffer) or of a whole-ref *read* image (a
+    blocked input's field materialized as an array value, e.g. the
+    stationary CSR data the merge body loads). Intermediates at or below
+    the floor are in-placed updates or reads of refs the audit already
+    counts, not workspace."""
     floors = {}
     for aval in ref_avals:
         dtype = getattr(aval, "dtype", None)
@@ -150,7 +154,8 @@ def audit_vmem(traced, model=None, *,
         c_scratch = float(sum(aval_bytes(a) for a in scratch_avals))
         c_credit = _alias_credit(in_avals, out_avals)
         c_work = (_workspace_intermediate_bytes(
-                      kernel_jaxpr(eqn), out_avals + scratch_avals)
+                      kernel_jaxpr(eqn),
+                      in_avals + out_avals + scratch_avals)
                   if count_workspace else 0.0)
         total = c_in + c_out + c_scratch - c_credit + c_work
         if total > peak:

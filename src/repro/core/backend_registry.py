@@ -112,6 +112,12 @@ class BackendSpec:
     needs_block_caps: bool = False              # envelope must carry bsr_caps
     is_accumulator: bool = False                # participates in backend="auto"
     block_size: int | None = None               # default block edge (block backends)
+    # mask capability: the backend can fuse an output mask into its merge —
+    # ``run_masked(A, B, mask, plan, c_pad, caps=...) -> (C, ChunkStats)``
+    # computes ``(A x B) ∘ mask`` with the mask applied *inside* the kernel
+    # (no unmasked C ever materialized). None = unmasked-only; the fused
+    # triangle-counting path (repro.core.triangle) resolves through this.
+    run_masked: Callable | None = None
     # audit capability: (A, B, plan, c_pad, envelope) -> TraceTarget staging
     # the backend's jitted core exactly as the executors would, so the static
     # verifier (repro.analysis) can abstract-trace it. None = not auditable
@@ -147,6 +153,10 @@ class BackendSpec:
     @property
     def supports_traffic(self) -> bool:
         return self.traffic_model is not None
+
+    @property
+    def supports_mask(self) -> bool:
+        return self.run_masked is not None
 
 
 _REGISTRY: dict[str, BackendSpec] = {}
@@ -225,3 +235,8 @@ def batched_backends() -> tuple:
 def accumulator_specs() -> tuple:
     """Specs participating in the planner's ``auto`` resolve, priority order."""
     return tuple(s for s in specs() if s.is_accumulator)
+
+
+def masked_backends() -> tuple:
+    """Names of backends that can fuse an output mask into their kernel."""
+    return tuple(s.name for s in specs() if s.supports_mask)

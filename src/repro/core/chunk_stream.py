@@ -95,9 +95,11 @@ from repro.core.planner import (
     planned_stats_bsr, planned_stats_dense_slab, planned_stats_hash,
     planned_stats_sparse, select_accumulator_backend,
 )
-from repro.core.symbolic import strip_output_caps
+from repro.core.symbolic import masked_output_caps, strip_output_caps
 from repro.kernels.bsr_spgemm import bsr_spgemm_blocks, bsr_spgemm_symbolic
-from repro.kernels.hash_accum_spgemm import hash_accum_spgemm_stream
+from repro.kernels.hash_accum_spgemm import (
+    hash_accum_spgemm_stream, hash_masked_accum_spgemm_stream,
+)
 from repro.kernels.ranged_spgemm import default_interpret, ranged_spgemm_stream
 from repro.kernels.sparse_accum_spgemm import sparse_accum_spgemm_stream
 from repro.sparse.bsr import bsr_blocks_with_sentinel, bsr_from_dense
@@ -725,6 +727,87 @@ def chunk_sparse(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int, caps=None):
 def chunk_hash(A: CSR, B: CSR, plan: ChunkPlan, c_pad: int, caps=None):
     """Hash-probe executor for any plan algorithm (see :func:`chunk_sparse`)."""
     return _sparse_run(A, B, plan, c_pad, "hash", caps=caps)
+
+
+# ---------------------------------------------------------------------------
+# masked hash executor: fused output mask (triangle counting's fast path)
+# ---------------------------------------------------------------------------
+
+
+def _make_masked_hash_core(key: str, order: str):
+    """Launch core for the mask-fused hash kernel (``_make_hash_core`` with
+    the mask's stacked structure as a fourth staged operand and the
+    probe-only masked merge plugged in). Own ``TRACE_COUNTS`` keys: a masked
+    product is a different program than the unmasked hash product, so its
+    compile accounting must not alias the unmasked cores'."""
+
+    @partial(jax.jit, static_argnames=("table_size",))
+    def core(Ast: CSR, Bst: CSR, C0st: CSR, Mst: CSR, r0s, r1s,
+             table_size: int):
+        TRACE_COUNTS[key] += 1
+        return hash_masked_accum_spgemm_stream(
+            Ast, Bst, C0st, Mst, r0s, r1s, order=order,
+            table_size=table_size)
+
+    return core
+
+
+_HASH_MASKED_CORES = {
+    alg: _make_masked_hash_core(f"{alg}_hash_masked", order)
+    for alg, order in {"knl": "chunk1", "chunk1": "chunk1",
+                       "chunk2": "chunk2"}.items()
+}
+
+
+def chunk_hash_masked(A: CSR, B: CSR, mask: CSR, plan: ChunkPlan,
+                      c_pad: int, caps=None):
+    """Mask-fused hash executor: ``C = (A x B) ∘ mask``, mask inside the
+    kernel.
+
+    The registry's ``run_masked`` capability for the hash backend. C's
+    structure is pinned to the mask's (explicit zeros where no product
+    lands), so *every* capacity derives from the mask alone
+    (``symbolic.masked_output_caps``): the probe tables are sized from the
+    densest mask row and the CSR scratch from the largest strip's mask nnz
+    — the unmasked product's structure is never expanded, let alone
+    materialized. ``caps`` amortizes the (cheap, mask-only) host pass like
+    the unmasked executors' ``StripOutputCaps``.
+    """
+    if mask.shape != (A.n_rows, B.n_cols):
+        raise ValueError(
+            f"mask shape {mask.shape} != output shape "
+            f"{(A.n_rows, B.n_cols)}")
+    if caps is None:
+        caps = masked_output_caps(mask, plan.p_ac)
+    table = hash_table_slots(caps.c_max_row_nnz)
+    check_output_caps(caps.strip_nnz, caps.c_max_row_nnz, c_pad, table,
+                      backend="hash", a_shape=A.shape, b_shape=B.shape)
+    strips = a_strips(A, plan.p_ac)
+    chunks = b_chunks(B, plan.p_b)
+    mstrips = a_strips(mask, plan.p_ac)
+    Ast = csr_stack([csr_stack(strips)])
+    Bst = csr_stack([csr_stack(chunks)])
+    Mst = csr_stack([csr_stack(mstrips)])
+    r0s, r1s = plan.b_ranges()
+    strip_rows = strips[0].n_rows
+    C0 = _sparse_c0_stack(1, plan.n_ac, strip_rows, B.n_cols, c_pad, A.dtype)
+    ip, ix, d = _HASH_MASKED_CORES[plan.algorithm](
+        Ast, Bst, C0, Mst, jnp.asarray(r0s), jnp.asarray(r1s),
+        table_size=table)
+    stats = planned_stats_pallas(
+        plan, chunks[0].nbytes(), strips[0].nbytes(),
+        _c_strip_nbytes(strip_rows, c_pad, A.dtype))
+    # the mask's structure operands (indptr + indices, no data) stage with
+    # the fused C_prev block's index maps: once per strip in the chunk1
+    # orders, one whole block in chunk2
+    m_struct = (strip_rows + 1) * 4 + mstrips[0].indices.shape[-1] * 4
+    if plan.algorithm == "chunk2":
+        stats.add_in(plan.n_ac * m_struct)
+    else:
+        for _ in range(plan.n_ac):
+            stats.add_in(m_struct)
+    out = _sparse_strip_csrs(ip[0], ix[0], d[0], strip_rows, B.n_cols, c_pad)
+    return _assemble(out, plan.p_ac, B.n_cols), stats
 
 
 # ---------------------------------------------------------------------------
@@ -1448,6 +1531,7 @@ def _register_all() -> None:
         trace_key_batched="{alg}_hash_batched",
         needs_output_caps=True,
         is_accumulator=True,
+        run_masked=chunk_hash_masked,
         audit_trace=_make_audit_csr_accum("hash"),
         traffic_model=_traffic_csr_accum,
         make_batched_cores=_make_hash_batched_cores,

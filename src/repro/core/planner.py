@@ -479,3 +479,114 @@ def plan_knl(A: CSR, B: CSR, fast_limit_bytes: float,
     p_b = binary_search_partition(b_rows, p_size)
     return ChunkPlan("knl", (0, A.n_rows), p_b, copy_bytes=size_b,
                      fast_bytes_needed=staged_chunk_bytes(B, p_b))
+
+
+# ---------------------------------------------------------------------------
+# two-hop pipeline planning: resident intermediate vs spill-to-slow
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelinePlan:
+    """Plan for the fused triple product ``C = R x (A x P)``: one
+    :class:`ChunkPlan` per hop plus the resident-intermediate decision.
+
+    ``t_resident=True`` means the intermediate ``T = A x P`` stays staged in
+    fast memory between the hops — its CSR triple (``t_bytes``) is budgeted
+    *on top of* each hop's own staged peak, and the modeled copy cost drops
+    the slow-memory round trip (hop 1's C write-out plus hop 2's streamed-B
+    reads). When the combined footprint exceeds the fast limit the planner
+    falls back to spilling: T round-trips through slow memory exactly as two
+    independent products would, and ``copy_bytes`` keeps those events."""
+
+    plan1: ChunkPlan          # hop 1: T = A x P
+    plan2: ChunkPlan          # hop 2: C = R x T
+    t_resident: bool          # T's CSR triple stays in fast between hops
+    t_bytes: float            # staged footprint of the full intermediate
+    copy_bytes: float         # modeled fast<->slow traffic for both hops
+    fast_bytes_needed: float  # peak staged footprint across both hops
+
+
+def plan_pipeline(A: CSR, P: CSR, R: CSR, system: MemorySystem,
+                  fast_limit_bytes: float | None = None,
+                  big_portion: float = 0.75,
+                  t_pattern: CSR | None = None) -> PipelinePlan:
+    """Plan both hops of ``C = R x (A x P)`` and budget fast memory for the
+    resident intermediate.
+
+    Hop 1 is planned with T's *exact* per-row bytes as the C estimate (the
+    composed symbolic expansion is structure-exact, so no heuristic row
+    estimate is needed); hop 2 streams T as its B operand and is planned
+    against C's exact structure the same way. T stays resident iff both
+    hops' staged peaks still fit the fast limit with the whole intermediate
+    held alongside them; otherwise the plan records the spill and the copy
+    model keeps T's round trip (one write-out after hop 1 plus one read per
+    hop-2 strip pass — the exact bytes the resident path saves)."""
+    from repro.core.symbolic import spgemm_pattern_host
+
+    if t_pattern is None:
+        t_pattern = spgemm_pattern_host(A, P)
+    fast = float(fast_limit_bytes or system.fast.capacity_bytes)
+    crb1 = row_bytes_csr(t_pattern)
+    c_pattern = spgemm_pattern_host(R, t_pattern)
+    crb2 = row_bytes_csr(c_pattern)
+    t_ptr = np.asarray(t_pattern.indptr)
+    t_nnz = int(t_ptr[-1])
+    t_bytes = _csr_staged_bytes(t_pattern.n_rows, t_nnz, 8)
+
+    def plan_hops(limit: float) -> tuple:
+        p1 = plan_chunks(A, P, crb1, system, fast_limit_bytes=limit,
+                         big_portion=big_portion)
+        p2 = plan_chunks(R, t_pattern, crb2, system, fast_limit_bytes=limit,
+                         big_portion=big_portion)
+        return p1, p2
+
+    # T's slow-memory round trip: hop 1 writes it once; hop 2's streamed-B
+    # reads repeat per A/C strip pass in the chunk1 order (cost1's |B|*n_ac
+    # term), once otherwise. These bytes are inside the per-hop copy models,
+    # so residency *subtracts* them.
+    size_t = float(crb1.sum())
+
+    def pipeline_copy(p1: ChunkPlan, p2: ChunkPlan, resident: bool) -> float:
+        copy = p1.copy_bytes + p2.copy_bytes
+        if resident:
+            t_reads = p2.n_ac if p2.algorithm == "chunk1" else 1
+            copy -= size_t * (1 + t_reads)
+        return max(copy, 0.0)
+
+    # Budget for residency: reserve T's staged triple off the top and search
+    # both hops' partitions against the remainder. Staged padding can push a
+    # plan's realized peak past the limit it was searched against, so the
+    # reservation is re-checked against the realized peaks — backing the
+    # search limit off geometrically when the overshoot breaks it. Residency
+    # only wins if the saved round trip beats what the tighter partitions
+    # cost in extra streaming passes; otherwise plan at the full limit and
+    # spill.
+    resident_plans = None
+    reserve = fast - t_bytes
+    if reserve > 0:
+        limit = reserve
+        for _ in range(6):
+            p1, p2 = plan_hops(limit)
+            if (p1.fast_bytes_needed + t_bytes <= fast
+                    and p2.fast_bytes_needed + t_bytes <= fast):
+                resident_plans = (p1, p2)
+                break
+            limit *= 0.85
+    spill_plans = plan_hops(fast)
+    spill_copy = pipeline_copy(*spill_plans, resident=False)
+    if resident_plans is not None:
+        resident_copy = pipeline_copy(*resident_plans, resident=True)
+        if resident_copy <= spill_copy:
+            plan1, plan2 = resident_plans
+            return PipelinePlan(
+                plan1=plan1, plan2=plan2, t_resident=True, t_bytes=t_bytes,
+                copy_bytes=resident_copy,
+                fast_bytes_needed=max(plan1.fast_bytes_needed,
+                                      plan2.fast_bytes_needed) + t_bytes)
+    plan1, plan2 = spill_plans
+    return PipelinePlan(
+        plan1=plan1, plan2=plan2, t_resident=False, t_bytes=t_bytes,
+        copy_bytes=spill_copy,
+        fast_bytes_needed=max(plan1.fast_bytes_needed,
+                              plan2.fast_bytes_needed))

@@ -130,6 +130,103 @@ def strip_output_caps(A: CSR, B: CSR, p_ac: tuple,
 
 
 # ---------------------------------------------------------------------------
+# composed symbolic phase: two-hop pipelines (Galerkin R x A x P)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineCaps:
+    """Output capacities of a two-hop pipeline ``C = R x (A x P)``.
+
+    One host expansion per hop, composed: hop 1's exact structure (the
+    intermediate ``T = A x P``) is materialized as a *pattern* CSR and fed
+    to hop 2's symbolic phase, so hop 1's **output** caps become hop 2's
+    **input** caps — ``t_max_row_nnz`` is hop 2's streamed-operand
+    ``b_max_row_nnz`` and ``t_nnz`` sizes the resident intermediate the
+    planner budgets fast memory for. Both hops' :class:`StripOutputCaps`
+    fold into one :class:`repro.sparse.csr.GeometryEnvelope` per hop, so
+    the whole triple product is pre-sized before any tracing.
+    """
+
+    hop1: StripOutputCaps   # caps of T = A x P under p_ac1
+    hop2: StripOutputCaps   # caps of C = R x T under p_ac2
+    t_pattern: CSR          # exact structure of T (data = 1.0), host-built
+    t_nnz: int              # exact nnz of the resident intermediate
+    t_max_row_nnz: int      # densest T row = hop 2's streamed b_max_row_nnz
+
+
+def spgemm_pattern_host(A: CSR, B: CSR) -> CSR:
+    """Exact structure of ``A x B`` as a host pattern CSR (data = 1.0).
+
+    The composed symbolic phase and the pipeline planner both consume the
+    intermediate's structure — as hop 2's symbolic input and as the per-row
+    byte vector the resident-intermediate budget is computed from — so the
+    expansion is shared here and run once per pipeline."""
+    from repro.sparse.csr import csr_from_coo
+
+    keys, _ = _structure_expand(A, B)
+    rows = keys // np.int64(B.n_cols)
+    cols = keys % np.int64(B.n_cols)
+    return csr_from_coo(rows, cols, np.ones(keys.size),
+                        (A.n_rows, B.n_cols))
+
+
+def pipeline_output_caps(A: CSR, P: CSR, R: CSR, p_ac1: tuple, p_ac2: tuple,
+                         pad_multiple: int = 64,
+                         t_pattern: CSR | None = None) -> PipelineCaps:
+    """Composed symbolic phase for ``C = R x (A x P)``.
+
+    Expands hop 1 exactly, builds T's pattern CSR from the unique coordinate
+    keys, then expands hop 2 against that pattern — structure only, so the
+    ones-valued pattern gives bitwise-identical caps to running the symbolic
+    phase on the numeric T. Callers that already expanded T (the pipeline
+    planner) pass it as ``t_pattern`` to skip the repeat expansion.
+    """
+    if t_pattern is None:
+        t_pattern = spgemm_pattern_host(A, P)
+    t_ptr = np.asarray(t_pattern.indptr).astype(np.int64)
+    per_row = t_ptr[1 : A.n_rows + 1] - t_ptr[: A.n_rows]
+    hop1 = strip_output_caps(A, P, p_ac1, pad_multiple=pad_multiple)
+    hop2 = strip_output_caps(R, t_pattern, p_ac2, pad_multiple=pad_multiple)
+    return PipelineCaps(
+        hop1=hop1,
+        hop2=hop2,
+        t_pattern=t_pattern,
+        t_nnz=int(per_row.sum()),
+        t_max_row_nnz=int(per_row.max()) if per_row.size else 0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# masked symbolic phase (fused-mask products: triangle counting)
+# ---------------------------------------------------------------------------
+
+
+def masked_output_caps(mask: CSR, p_ac: tuple,
+                       pad_multiple: int = 64) -> StripOutputCaps:
+    """Output capacities of a mask-fused product ``C = (A x B) ∘ M``.
+
+    A fused in-kernel mask pins C's structure to ``M``'s: every output
+    position is a mask position (explicit zeros where the product has no
+    contribution), so the caps come from the mask alone — no product
+    expansion. ``c_max_row_nnz`` is the densest mask row (it sizes the hash
+    backend's probe tables), ``strip_nnz`` the exact mask nnz per strip.
+    """
+    m_ptr = np.asarray(mask.indptr).astype(np.int64)
+    per_row = m_ptr[1:] - m_ptr[:-1]
+    cum = np.concatenate([[0], np.cumsum(per_row)])
+    strip_nnz = tuple(
+        int(cum[e] - cum[s]) for s, e in zip(p_ac[:-1], p_ac[1:])
+    )
+    return StripOutputCaps(
+        c_pad=_round_up(max(strip_nnz) if strip_nnz else 0, pad_multiple),
+        c_nnz_cap=_round_up(int(per_row.sum()), pad_multiple),
+        c_max_row_nnz=int(per_row.max()) if per_row.size else 0,
+        strip_nnz=strip_nnz,
+    )
+
+
+# ---------------------------------------------------------------------------
 # block-level symbolic phase (the BSR backend's output-cap analogue)
 # ---------------------------------------------------------------------------
 

@@ -1,10 +1,21 @@
 """Linear-algebra triangle counting (paper §4.1.2, after Wolf et al. HPEC'17).
 
-Vertices are sorted by degree, L = strictly-lower-triangular part of the permuted
-adjacency; triangles = sum over nonzeros (i,j) of L of (L x L)[i, j] — i.e. the
-SpGEMM result *masked* by L. The mask is fused into the accumulation read-out via a
-sort-merge of C's and L's (row, col) keys — the JAX analogue of KKMEM's fused
-masking. No flat 64-bit keys are formed, so there is no overflow limit on n.
+Vertices are sorted by degree, L = strictly-lower-triangular part of the
+permuted adjacency; triangles = sum over nonzeros (i,j) of L of (L x L)[i, j]
+— i.e. the SpGEMM result *masked* by L.
+
+Two paths:
+
+* :func:`count_triangles` — the fused path: the product routes through a
+  mask-capable registered chunked backend (``BackendSpec.run_masked``, the
+  hash accumulator by default), with the L-mask applied **inside** the
+  kernel's merge. The accumulator only ever holds mask positions, so no
+  unmasked C is materialized at any point — KKMEM's fused masking, for real.
+* :func:`count_triangles_kkmem` — the unfused baseline: the full C = L x L
+  materialized at its symbolic capacity, then masked by a sort-merge of C's
+  and L's (row, col) keys. No flat 64-bit keys are formed, so there is no
+  overflow limit on n. Kept as the comparison target the triangle bench
+  lane times the fused path against.
 """
 
 from __future__ import annotations
@@ -12,13 +23,50 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.kkmem import spgemm, spgemm_symbolic_host
+from repro.core.planner import ChunkPlan, plan_knl
 from repro.sparse.csr import CSR, csr_row_of_entry, csr_to_dense
 
 
-def count_triangles(L: CSR) -> jnp.ndarray:
-    """Triangles = sum((L @ L) o L) with L strictly lower triangular, 0/1 values."""
-    ws = spgemm_symbolic_host(L, L)
-    C = spgemm(L, L, ws.c_pad)
+def count_triangles(L: CSR, plan: ChunkPlan | None = None,
+                    backend: str | None = None, caps=None) -> jnp.ndarray:
+    """Triangles = sum((L @ L) o L) with L strictly lower triangular, 0/1
+    values, the mask fused into the chunked kernel.
+
+    ``backend`` must be mask-capable (``supports_mask``); ``None`` resolves
+    to the first registered one (``backend_registry.masked_backends()``).
+    ``plan`` defaults to a single-chunk KNL plan (one kernel launch);
+    ``caps`` to the masked symbolic phase at the plan's partitions — both
+    are host-only precomputations callers on a timing path hoist out."""
+    from repro.core import backend_registry
+    from repro.core.symbolic import masked_output_caps
+
+    if backend is None:
+        names = backend_registry.masked_backends()
+        if not names:
+            raise ValueError("no registered backend supports a fused mask")
+        backend = names[0]
+    spec = backend_registry.get(backend)
+    if not spec.supports_mask:
+        raise ValueError(
+            f"backend {backend!r} does not support a fused output mask; "
+            f"mask-capable: {list(backend_registry.masked_backends())}")
+    if plan is None:
+        plan = plan_knl(L, L, float("inf"))
+    if caps is None:
+        caps = masked_output_caps(L, plan.p_ac)
+    C, _ = spec.run_masked(L, L, L, plan, caps.c_pad, caps=caps)
+    # C's structure is exactly L's (explicit zeros where the product has no
+    # contribution), so the masked sum is the sum of the stored values
+    return jnp.sum(C.data)
+
+
+def count_triangles_kkmem(L: CSR, c_pad: int | None = None) -> jnp.ndarray:
+    """The unfused baseline: materialize C = L x L at ``c_pad`` (defaulting
+    to the host symbolic phase's capacity — precompute it to keep the host
+    pass out of timed regions), then mask by sort-merge against L."""
+    if c_pad is None:
+        c_pad = spgemm_symbolic_host(L, L).c_pad
+    C = spgemm(L, L, c_pad)
     n = L.n_rows
 
     c_entry = jnp.arange(C.nnz_pad, dtype=jnp.int32)

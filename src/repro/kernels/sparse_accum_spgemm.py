@@ -56,25 +56,38 @@ from repro.kernels.ranged_spgemm import _decompose, default_interpret
 from repro.sparse.csr import CSR
 
 
-def _kernel(r0s_ref, r1s_ref, stat_ip, stat_ix, stat_d,
-            stream_ip_hbm, stream_ix_hbm, stream_d_hbm,
-            c0_ip, c0_ix, c0_d, out_ip, out_ix, out_d,
-            buf_ip, buf_ix, buf_d, sems, *, order: str, batch: int,
+def _kernel(r0s_ref, r1s_ref, *refs, order: str, batch: int,
             n_ac: int, n_b: int, strip_rows: int, chunk_rows: int,
             k_cols: int, n_cols: int, a_mrn: int, b_mrn: int, c_cap: int,
-            merge_fn):
+            masked: bool, merge_fn):
     """One grid step: DMA-stream a CSR triple, merge into the CSR scratch.
 
     ``merge_fn(A, B_chunk, r0, r1, C_prev, c_cap) -> CSR`` is the pluggable
     accumulator body: the ESC sorted merge (``spgemm_ranged_impl``, the
     default) or the linear-probing hash merge
     (``repro.kernels.hash_accum_spgemm.hash_merge_impl``). The streaming
-    schedule around it is identical.
+    schedule around it is identical. With ``masked`` the positional refs
+    carry two extra stationary operands — the fused output mask's strip
+    structure (indptr + indices, no data) — and the merge is called with
+    them appended: ``merge_fn(A, B_chunk, r0, r1, C_prev, c_cap,
+    mask_indptr, mask_indices)``. The unmasked operand list (and therefore
+    the traced jaxpr the static auditor pins) is unchanged.
 
     Grid is (batch, outer, inner); ``order`` fixes which operand streams:
       chunk1: outer = strips, inner = chunks  -> B triples stream through VMEM
       chunk2: outer = chunks, inner = strips  -> A triples stream through VMEM
     """
+    if masked:
+        (stat_ip, stat_ix, stat_d,
+         stream_ip_hbm, stream_ix_hbm, stream_d_hbm,
+         c0_ip, c0_ix, c0_d, m_ip, m_ix,
+         out_ip, out_ix, out_d, buf_ip, buf_ix, buf_d, sems) = refs
+    else:
+        (stat_ip, stat_ix, stat_d,
+         stream_ip_hbm, stream_ix_hbm, stream_d_hbm,
+         c0_ip, c0_ix, c0_d,
+         out_ip, out_ix, out_d, buf_ip, buf_ix, buf_d, sems) = refs
+        m_ip = m_ix = None
     b = pl.program_id(0)
     outer_ix = pl.program_id(1)
     inner_ix = pl.program_id(2)
@@ -121,6 +134,7 @@ def _kernel(r0s_ref, r1s_ref, stat_ip, stat_ix, stat_d,
         Bc = CSR(s_ip, s_ix, s_d, (chunk_rows, n_cols), b_mrn)
         prev = (c0_ip[0, 0], c0_ix[0, 0], c0_d[0, 0],
                 out_ip[0, 0], out_ix[0, 0], out_d[0, 0])
+        mask = (m_ip[0, 0], m_ix[0, 0]) if masked else None
     else:
         j, i = outer_ix, inner_ix
         A = CSR(s_ip, s_ix, s_d, (strip_rows, k_cols), a_mrn)
@@ -128,6 +142,7 @@ def _kernel(r0s_ref, r1s_ref, stat_ip, stat_ix, stat_d,
                  (chunk_rows, n_cols), b_mrn)
         prev = (c0_ip[0, i], c0_ix[0, i], c0_d[0, i],
                 out_ip[0, i], out_ix[0, i], out_d[0, i])
+        mask = (m_ip[0, i], m_ix[0, i]) if masked else None
 
     # the fused C_prev: the caller's c0 on the first chunk step, the
     # persistent VMEM accumulator afterwards (out_ref is only ever read
@@ -140,7 +155,11 @@ def _kernel(r0s_ref, r1s_ref, stat_ip, stat_ix, stat_d,
         jnp.where(first, prev[2], prev[5]),
         (strip_rows, n_cols), c_cap,
     )
-    merged = merge_fn(A, Bc, r0s_ref[j], r1s_ref[j], c_prev, c_cap)
+    if masked:
+        merged = merge_fn(A, Bc, r0s_ref[j], r1s_ref[j], c_prev, c_cap,
+                          mask[0], mask[1])
+    else:
+        merged = merge_fn(A, Bc, r0s_ref[j], r1s_ref[j], c_prev, c_cap)
     if order == "chunk1":
         out_ip[0, 0] = merged.indptr
         out_ix[0, 0] = merged.indices
@@ -154,7 +173,7 @@ def _kernel(r0s_ref, r1s_ref, stat_ip, stat_ix, stat_d,
 def sparse_accum_spgemm_stream(Ast: CSR, Bst: CSR, C0st: CSR,
                                r0s: jax.Array, r1s: jax.Array, *, order: str,
                                interpret: bool | None = None,
-                               merge_fn=None):
+                               merge_fn=None, mask_st: CSR | None = None):
     """Streamed sparse-output multiply over stacked CSR strips and chunks.
 
     Args:
@@ -175,6 +194,13 @@ def sparse_accum_spgemm_stream(Ast: CSR, Bst: CSR, C0st: CSR,
         (``spgemm_ranged_impl``). ``repro.kernels.hash_accum_spgemm`` passes
         its linear-probing hash merge through here, reusing this exact
         streaming schedule.
+      mask_st: optional fused output mask, stacked like ``C0st`` (leading
+        ``[batch, n_ac]`` axes, per-element shape ``(strip_rows, n_cols)``).
+        Only its structure (indptr + indices) enters the kernel — as two
+        extra stationary operands with the accumulator blocks' index maps —
+        and ``merge_fn`` must then accept them appended: ``(A, B_chunk, r0,
+        r1, C_prev, c_cap, mask_indptr, mask_indices) -> CSR`` (the masked
+        hash merge). ``C0st``'s capacity must bound every strip's mask nnz.
 
     Returns ``(indptr, indices, data)`` with leading ``[batch, n_ac]`` axes —
     the accumulated C strip CSRs at capacity ``c_cap``.
@@ -198,6 +224,18 @@ def sparse_accum_spgemm_stream(Ast: CSR, Bst: CSR, C0st: CSR,
         )
     if C0st.shape != (strip_rows, n_cols):
         raise ValueError(f"C0 shape {C0st.shape} != {(strip_rows, n_cols)}")
+    masked = mask_st is not None
+    if masked:
+        if merge_fn is None:
+            raise ValueError("mask_st requires an explicit masked merge_fn")
+        if mask_st.indptr.shape[:2] != (batch, n_ac):
+            raise ValueError(
+                f"mask stack axes {mask_st.indptr.shape[:2]} != "
+                f"{(batch, n_ac)}")
+        if mask_st.shape != (strip_rows, n_cols):
+            raise ValueError(
+                f"mask shape {mask_st.shape} != {(strip_rows, n_cols)}")
+        m_cap = mask_st.indices.shape[-1]
     interpret = default_interpret() if interpret is None else interpret
 
     def blocked(trail, index_map):
@@ -217,6 +255,8 @@ def sparse_accum_spgemm_stream(Ast: CSR, Bst: CSR, C0st: CSR,
                     blocked((c_cap,), c_map), blocked((c_cap,), c_map)]
         out_specs = (blocked((strip_rows + 1,), c_map),
                      blocked((c_cap,), c_map), blocked((c_cap,), c_map))
+        mask_specs = ([blocked((strip_rows + 1,), c_map),
+                       blocked((m_cap,), c_map)] if masked else [])
         ns = dma_schedule.N_SLOTS
         bufs = [pltpu.VMEM((ns, chunk_rows + 1), jnp.int32),
                 pltpu.VMEM((ns, chunk_cap), jnp.int32),
@@ -238,6 +278,9 @@ def sparse_accum_spgemm_stream(Ast: CSR, Bst: CSR, C0st: CSR,
         out_specs = (pl.BlockSpec((1, n_ac, strip_rows + 1), c_map),
                      pl.BlockSpec((1, n_ac, c_cap), c_map),
                      pl.BlockSpec((1, n_ac, c_cap), c_map))
+        mask_specs = ([pl.BlockSpec((1, n_ac, strip_rows + 1), c_map),
+                       pl.BlockSpec((1, n_ac, m_cap), c_map)]
+                      if masked else [])
         ns = dma_schedule.N_SLOTS
         bufs = [pltpu.VMEM((ns, strip_rows + 1), jnp.int32),
                 pltpu.VMEM((ns, a_cap), jnp.int32),
@@ -247,25 +290,29 @@ def sparse_accum_spgemm_stream(Ast: CSR, Bst: CSR, C0st: CSR,
         _kernel, order=order, batch=batch, n_ac=n_ac, n_b=n_b,
         strip_rows=strip_rows, chunk_rows=chunk_rows, k_cols=k_cols,
         n_cols=n_cols, a_mrn=Ast.max_row_nnz, b_mrn=Bst.max_row_nnz,
-        c_cap=c_cap, merge_fn=merge_fn,
+        c_cap=c_cap, masked=masked, merge_fn=merge_fn,
     )
     out_shape = (
         jax.ShapeDtypeStruct((batch, n_ac, strip_rows + 1), jnp.int32),
         jax.ShapeDtypeStruct((batch, n_ac, c_cap), jnp.int32),
         jax.ShapeDtypeStruct((batch, n_ac, c_cap), dtype),
     )
+    operands = [r0s, r1s, stat.indptr, stat.indices, stat.data,
+                streamed.indptr, streamed.indices, streamed.data,
+                C0st.indptr, C0st.indices, C0st.data]
+    if masked:
+        operands += [mask_st.indptr, mask_st.indices]
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=grid,
-            in_specs=[*stat_specs, any_spec, any_spec, any_spec, *c0_specs],
+            in_specs=[*stat_specs, any_spec, any_spec, any_spec,
+                      *c0_specs, *mask_specs],
             out_specs=out_specs,
             scratch_shapes=[*bufs,
                             pltpu.SemaphoreType.DMA((dma_schedule.N_SLOTS, 3))],
         ),
         out_shape=out_shape,
         interpret=interpret,
-    )(r0s, r1s, stat.indptr, stat.indices, stat.data,
-      streamed.indptr, streamed.indices, streamed.data,
-      C0st.indptr, C0st.indices, C0st.data)
+    )(*operands)

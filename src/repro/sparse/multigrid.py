@@ -184,25 +184,37 @@ def restriction(grid: tuple, dof: int = 1, pad_to: int | None = None) -> CSR:
 PROBLEMS = ("laplace3d", "bigstar2d", "brick3d", "elasticity")
 
 
-def problem(name: str, n: int):
+def problem(name: str, n: int, pad_to: int | None = None):
     """Return (A, R, P) for one of the paper's four problems at grid size n.
 
     P = R^T (the paper: "P is transpose of R in our examples").
+    ``pad_to`` is forwarded to every generator so callers building
+    envelope-aligned triple products (``R x A x P`` through one
+    :class:`~repro.sparse.csr.GeometryEnvelope`) get nnz storage padded to
+    a shared multiple.
     """
     name = name.lower()
     if name == "laplace3d":
-        A = laplace3d(n)
-        R = restriction((n, n, n))
+        A = laplace3d(n, pad_to=pad_to)
+        R = restriction((n, n, n), pad_to=pad_to)
     elif name == "bigstar2d":
-        A = bigstar2d(n)
-        R = restriction((n, n))
+        A = bigstar2d(n, pad_to=pad_to)
+        R = restriction((n, n), pad_to=pad_to)
     elif name == "brick3d":
-        A = brick3d(n)
-        R = restriction((n, n, n))
+        A = brick3d(n, pad_to=pad_to)
+        R = restriction((n, n, n), pad_to=pad_to)
     elif name == "elasticity":
-        A = elasticity3d(n)
-        R = restriction((n, n, n), dof=3)
+        A = elasticity3d(n, pad_to=pad_to)
+        R = restriction((n, n, n), dof=3, pad_to=pad_to)
     else:
         raise ValueError(f"unknown problem {name!r}; choose from {PROBLEMS}")
     P = csr_transpose_host(R)
+    # the P = R^T contract is load-bearing for the fused pipeline's composed
+    # symbolic phase (hop-1 caps are computed on (A, P)); pin it bitwise so a
+    # future generator change can't silently break it
+    check = csr_transpose_host(R)
+    assert (np.array_equal(np.asarray(P.indptr), np.asarray(check.indptr))
+            and np.array_equal(np.asarray(P.indices), np.asarray(check.indices))
+            and np.array_equal(np.asarray(P.data), np.asarray(check.data))), \
+        "P must be bitwise csr_transpose_host(R)"
     return A, R, P

@@ -7,8 +7,18 @@ stale SUITES entry (double-run) or none (silently dropped from full runs).
 import collections
 import pathlib
 
-from benchmarks.chunking_bench import JSON_LANES
+from benchmarks.chunking_bench import JSON_LANES as CHUNKING_LANES
 from benchmarks.run import SUITES, _resolve
+from benchmarks.triangle_counting import JSON_LANES as TRIANGLE_LANES
+
+JSON_LANES = {**CHUNKING_LANES, **TRIANGLE_LANES}
+
+
+def test_json_lane_names_globally_unique():
+    """`--lane` names double as bench-artifact filenames and trajectory keys,
+    so two modules must never register the same lane name."""
+    overlap = set(CHUNKING_LANES) & set(TRIANGLE_LANES)
+    assert not overlap, f"lane names registered by two modules: {overlap}"
 
 
 def test_suites_list_every_lane_exactly_once():
@@ -27,14 +37,17 @@ def test_every_suite_spec_resolves():
 
 
 def test_json_lanes_have_driver_entries():
-    """Each chunking JSON lane (what `--lane` and the CI smoke parse run)
-    also runs under a full `python -m benchmarks.run` via a CSV wrapper."""
+    """Each JSON lane (what `--lane` and the CI smoke parse run) also runs
+    under a full `python -m benchmarks.run` via a CSV wrapper."""
     for lane in JSON_LANES:
         assert lane in SUITES, f"JSON lane {lane!r} missing from run.SUITES"
     assert "accumulator_shootout" in JSON_LANES
     assert "bsr_blocking" in JSON_LANES
+    assert "triangle_counting" in JSON_LANES
     assert "dense_vs_sparse_accum" not in SUITES, \
         "stale pre-shootout lane name still registered"
+    assert "fig11" not in SUITES, \
+        "stale pre-JSON-lane triangle suite name still registered"
 
 
 def test_ci_smokes_every_json_lane():
@@ -52,3 +65,24 @@ def test_ci_smokes_every_json_lane():
     assert "upload-artifact" in ci, "bench artifacts are not uploaded by CI"
     assert "bench_trajectory" in ci, \
         "bench trajectory persistence step missing from CI"
+
+
+def test_triangle_speedup_is_lane_level_scalar():
+    """The chunked-vs-kkmem speedup must survive trajectory summarization
+    verbatim, which `tools/bench_trajectory.py` only guarantees for
+    lane-level non-list scalars — run the smoke lane and summarize it."""
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]
+                           / "tools"))
+    from bench_trajectory import summarize
+
+    from benchmarks.triangle_counting import run_triangle_counting
+
+    report = run_triangle_counting(smoke=True)
+    assert report["bench"] == "triangle_counting"
+    assert isinstance(report["chunked_vs_kkmem_speedup"], float)
+    assert report["chunked_vs_kkmem_speedup"] > 0
+    assert report["rows"], "smoke lane emitted no rows"
+    summary = summarize(report)
+    assert summary["chunked_vs_kkmem_speedup"] == \
+        report["chunked_vs_kkmem_speedup"]

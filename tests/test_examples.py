@@ -30,6 +30,10 @@ def test_multigrid_spgemm_main_all_backends(capsys):
     out = capsys.readouterr().out
     for backend in multigrid_spgemm.ALL_BACKENDS:
         assert f"/{backend:6s}:" in out, f"backend {backend} did not run"
+    for backend in ("sparse", "hash"):
+        assert f"pipeline@1.00/{backend:6s}:" in out, \
+            f"fused R(AP) pipeline did not run through {backend}"
+        assert f"pipeline@0.25/{backend:6s}:" in out
     assert "correct=False" not in out
 
 
@@ -49,6 +53,8 @@ def test_triangle_count_main(monkeypatch, capsys):
     triangle_count.main()
     out = capsys.readouterr().out
     assert "triangles =" in out
+    assert "fused/hash" in out, "masked hash backend did not run"
+    assert "agrees: True" in out
     assert "dense oracle agrees: True" in out
 
 

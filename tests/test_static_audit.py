@@ -122,6 +122,55 @@ def test_undercounting_byte_model_is_flagged():
     assert audit_vmem(traced, lying).dominated is False
 
 
+def _pipeline_fixture(frac=0.25):
+    from repro.core.memory_model import P100
+    from repro.core.planner import plan_pipeline
+    from repro.core.symbolic import pipeline_output_caps
+    from repro.sparse import multigrid
+
+    A, R, P = multigrid.problem("laplace3d", 4)
+    limit = float(A.nbytes() + P.nbytes() + R.nbytes()) * frac
+    plan = plan_pipeline(A, P, R, P100, fast_limit_bytes=limit)
+    caps = pipeline_output_caps(A, P, R, plan.plan1.p_ac, plan.plan2.p_ac)
+    return A, P, R, plan, caps
+
+
+def test_pipeline_audit_clean_on_chunked_hops():
+    """Both hops of the two-hop pipeline trace and pass the vmem domination
+    check plus the composed-model checks, for the sparse and hash backends."""
+    from repro.core.pipeline_spgemm import audit_pipeline
+
+    A, P, R, plan, caps = _pipeline_fixture()
+    assert "whole_fast" not in (plan.plan1.algorithm, plan.plan2.algorithm)
+    for backend in ("sparse", "hash"):
+        record, violations = audit_pipeline(A, P, R, plan, backend=backend,
+                                            caps=caps)
+        assert violations == [], (backend, violations)
+        assert set(record["hops"]) == {"hop1", "hop2"}
+        for hop in record["hops"].values():
+            assert hop["model_bytes"] >= hop["traced_bytes"]
+
+
+def test_pipeline_double_counted_intermediate_is_flagged():
+    """The negative fixture for the composed byte model: a model that adds
+    the resident intermediate's bytes *twice* (once per hop) still dominates
+    every trace — domination alone cannot catch it — but must fail the
+    once-counted consistency invariant."""
+    from repro.core.pipeline_spgemm import (
+        check_pipeline_model, pipeline_envelope, pipeline_fast_model,
+    )
+
+    A, P, R, plan, caps = _pipeline_fixture()
+    penv = pipeline_envelope(A, P, R, plan, caps)
+    honest = pipeline_fast_model(plan, penv, "sparse")
+    assert honest.t_bytes > 0
+    assert check_pipeline_model(honest) == []
+    double_counted = dataclasses.replace(
+        honest, fast_bytes_needed=honest.fast_bytes_needed + honest.t_bytes)
+    violations = check_pipeline_model(double_counted)
+    assert violations and "counted exactly once" in violations[0]
+
+
 class _SlotAliasingSchedule(SlotSchedule):
     """Broken schedule: the prefetch targets the slot being read."""
 
